@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: result records, markdown tables, output dirs."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+
+
+def save_result(name: str, payload: Any) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return os.path.abspath(path)
+
+
+def markdown_table(headers: list[str], rows: list[list]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def efficiency(b: int, overhead: float = 0.4) -> float:
+    """Relative compute efficiency of micro-batch size ``b``: smaller
+    micro-batches under-utilize the device (paper §4.1/§6.2.1).  Modeled as
+    amortizing a fixed per-launch overhead: eff = b / (b + overhead).
+    ``overhead=0.4`` calibrates to the paper's Fig-6 behaviour, where
+    mbs=1 plans still sit above 1F1B but stop improving past k≈3."""
+    return b / (b + overhead)

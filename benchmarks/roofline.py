@@ -1,0 +1,90 @@
+"""Roofline report — reads the dry-run artifacts (launch/dryrun.py) and
+renders the per-(arch × shape × mesh) table of the three roofline terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio and per-device memory.
+
+This is deliverable (g): no pass/fail gate; the table + §Perf iteration
+log in EXPERIMENTS.md are the artifact.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import markdown_table, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        out.append(r)
+    return out
+
+
+def _fmt_ms(x):
+    return f"{x * 1e3:,.1f}"
+
+
+def run(mesh: str = "single") -> dict:
+    records = load_records(mesh)
+    if not records:
+        print(f"no dry-run artifacts for mesh={mesh}; run launch/dryrun.py first")
+        return {}
+    rows = []
+    ok = skip = fail = 0
+    for r in records:
+        tag = r.get("tag", "?").replace(f"__{mesh}", "")
+        if r.get("skipped"):
+            rows.append([tag, "—", "documented skip", "", "", "", "", ""])
+            skip += 1
+            continue
+        if "error" in r:
+            rows.append([tag, "—", "ERROR", r["error"][:40], "", "", "", ""])
+            fail += 1
+            continue
+        ok += 1
+        # recompute the useful-flops ratio with the step-kind-correct
+        # MODEL_FLOPS (fwd-only prefill is 2ND, not 6ND)
+        tokens = r["seq_len"] * r["global_batch"]
+        if r["step_kind"] == "train_step":
+            mf = 6.0 * r["params_active"] * tokens
+        elif r["step_kind"] == "prefill":
+            mf = 2.0 * r["params_active"] * tokens
+        else:
+            mf = 2.0 * r["params_active"] * r["global_batch"]
+        if r.get("flops_per_device"):
+            r["useful_flops_fraction"] = (mf / r["chips"]) / r["flops_per_device"]
+        t = r["roofline"]
+        mem_gb = (r["memory"]["argument_bytes"] or 0) / 1e9
+        rows.append([
+            tag,
+            r["step_kind"],
+            _fmt_ms(t["compute_s"]),
+            _fmt_ms(t["memory_s"]),
+            _fmt_ms(t["collective_s"]),
+            t["bottleneck"],
+            f"{(r.get('useful_flops_fraction') or 0):.2f}",
+            f"{mem_gb:.1f}",
+        ])
+    table = markdown_table(
+        ["arch × shape", "step", "compute ms", "memory ms", "collective ms",
+         "bound", "6ND/HLO", "args GB/dev"],
+        rows,
+    )
+    print(f"\n== Roofline terms per (arch × shape), mesh={mesh} "
+          f"({ok} ok / {skip} skips / {fail} fail) ==")
+    print(table)
+    save_result(f"roofline_{mesh}", {"rows": rows, "table": table,
+                                     "ok": ok, "skip": skip, "fail": fail})
+    assert fail == 0, f"{fail} dry-run pairs failed"
+    return {"ok": ok, "skip": skip, "fail": fail, "table": table}
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,62 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one benchmark per paper table/figure plus the roofline report:
+
+  Fig 2  pipeline_length   — 1F1B vs kFkB length under preemption
+  Fig 6  granularity       — k sweep at fixed global batch, busy rounds
+  Fig 7  weak_scaling (UNet)
+  Fig 8  weak_scaling (GPT params ladder)
+  Fig 9  strong_scaling    — + SPMD-only comparison
+  Fig 10 adaptive_tuning   — hourly online tuning across regimes
+  (g)    roofline          — per-(arch × shape × mesh) terms from dry-run
+
+Results land in experiments/results/*.json; each module also asserts the
+paper's qualitative claims so this doubles as an integration gate.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (
+        adaptive_tuning,
+        granularity,
+        pipeline_length,
+        roofline,
+        strong_scaling,
+        weak_scaling,
+    )
+
+    suites = [
+        ("pipeline_length (Fig 2)", pipeline_length.run),
+        ("granularity (Fig 6)", granularity.run),
+        ("weak_scaling (Figs 7+8)", weak_scaling.run),
+        ("strong_scaling (Fig 9)", strong_scaling.run),
+        ("adaptive_tuning (Fig 10)", adaptive_tuning.run),
+        ("roofline single-pod (g)", lambda: roofline.run("single")),
+        ("roofline multi-pod (g)", lambda: roofline.run("multi")),
+    ]
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
+        try:
+            fn()
+            print(f"[PASS] {name} ({time.time() - t0:.1f}s)")
+        except Exception as e:
+            failures.append(name)
+            print(f"[FAIL] {name}: {e}")
+            traceback.print_exc()
+    print(f"\n{'=' * 72}")
+    print(f"benchmarks: {len(suites) - len(failures)}/{len(suites)} passed")
+    if failures:
+        print("failed:", ", ".join(failures))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""Paper Fig. 9 — GPT-Medium strong scaling + SPMD-only comparison.
+
+Fixed model (GPT-Medium) and global batch (64), workers 2/4/8; micro-batch
+size 1 for pipeline (as in the paper), 8 for SPMD.  The SPMD-only baseline
+is modeled the way the paper describes its measured deployments: a
+data-parallel-like plan whose per-step communication is the gradient
+all-reduce — 0.7–1.4 GB per micro-batch step of transfer vs 2–5x more for
+pipeline's repeated activations... inverted: the paper found PIPELINE moves
+2-5x LESS data and wins on these platforms; we reproduce that ordering.
+
+Claims: kFkB >= 1F1B (up to ~20%); pipeline (either schedule) beats the
+SPMD-only plan on the preempted-network platforms.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import efficiency, markdown_table, save_result
+from repro.configs.gpt import GPT_CONFIGS, gpt_stage_costs
+from repro.core import BurstyTrace, make_plan, simulate_plan, uniform_network
+from repro.models.common import param_count
+
+GLOBAL_BATCH = 64
+SEQ = 1024
+CFG = GPT_CONFIGS["GPT-Medium"]
+
+PLATFORMS = {
+    # (contended_frac, mean_free, mean_contended) — C1x is narrow 25Gb vEth,
+    # S1/M8s are 100Gb RoCE shared with production traffic
+    "C1x (25Gb vEth)": (3.125e9, 0.25, 0.5, 0.5),
+    "S1 (100Gb RoCE)": (12.5e9, 0.20, 0.8, 0.3),
+    "M8s (100Gb RoCE, shared hosts)": (12.5e9, 0.25, 0.5, 0.5),
+}
+
+
+def _net(S, bw, frac, free, cont, seed):
+    return uniform_network(
+        S, lambda: BurstyTrace(bw, contended_frac=frac, mean_free=free,
+                               mean_contended=cont, seed=seed)
+    )
+
+
+def _spmd_step_time(S, bw_trace_net):
+    """SPMD-only (data-parallel-like) plan, modeled as the paper measured
+    it: gradients reduce per MICRO-BATCH (mbs=8), each all-reduce moving
+    ~2·P·2(S-1)/S bytes == the paper's observed 0.7-1.4 GB per micro-batch;
+    reduction of micro-batch i overlaps the compute of i+1."""
+    mbs = 8
+    n_mb = GLOBAL_BATCH // mbs
+    costs = gpt_stage_costs(CFG, 1, mbs, SEQ)
+    t_mb = costs.fwd_time[0] + costs.bwd_time[0]
+    grad_bytes = 2.0 * param_count(CFG) * 2.0 * (S - 1) / S
+    trace = bw_trace_net.trace(0, 1)
+    t_comm = trace.finish_time(0.0, grad_bytes)
+    exposed = max(0.0, t_comm - t_mb)
+    return n_mb * t_mb + (n_mb - 1) * exposed + t_comm
+
+
+def run() -> dict:
+    rows, records = [], {}
+    for plat, (bw, frac, free, cont) in PLATFORMS.items():
+        for S in (2, 4, 8):
+            net = _net(S, bw, frac, free, cont, seed=hash(plat) % 1000 + S)
+            lengths = {}
+            for k in (1, 2, 3, 4):
+                b = 1  # paper: micro-batch size 1 for pipeline
+                M = GLOBAL_BATCH
+                costs = gpt_stage_costs(CFG, S, b, SEQ)
+                eff = efficiency(b) / efficiency(8)
+                costs.fwd_time = [t / eff for t in costs.fwd_time]
+                costs.bwd_time = [t / eff for t in costs.bwd_time]
+                plan = make_plan(S, M, k, micro_batch_size=b)
+                lengths[k] = simulate_plan(plan, costs, net).pipeline_length
+            spmd = _spmd_step_time(S, net)
+            best_k = min(lengths, key=lengths.get)
+            rec = {
+                "1F1B": GLOBAL_BATCH / lengths[1],
+                "kFkB": GLOBAL_BATCH / lengths[best_k],
+                "best_k": best_k,
+                "SPMD": GLOBAL_BATCH / spmd,
+            }
+            records[f"{plat}@{S}"] = rec
+            rows.append([
+                plat, S,
+                f"{rec['1F1B']:.1f}", f"{rec['kFkB']:.1f} (k={best_k})",
+                f"{rec['SPMD']:.1f}",
+                f"{rec['kFkB'] / rec['1F1B'] - 1:+.1%}",
+            ])
+    table = markdown_table(
+        ["platform", "workers", "1F1B sps", "Ada-Grouper sps", "SPMD sps", "kFkB gain"],
+        rows,
+    )
+    print(f"\n== Fig 9: GPT-Medium strong scaling, GB={GLOBAL_BATCH}, mbs=1 ==")
+    print(table)
+    for key, r in records.items():
+        assert r["kFkB"] >= r["1F1B"] - 1e-9, key
+        assert r["kFkB"] >= r["SPMD"], f"pipeline should beat SPMD-only: {key}"
+    save_result("strong_scaling", {"records": records, "table": table})
+    return records
+
+
+if __name__ == "__main__":
+    run()

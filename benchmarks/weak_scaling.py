@@ -1,0 +1,136 @@
+"""Paper Figs. 7 & 8 — weak scaling.
+
+* GPT (Fig 8): parameter-count scaling — workers 1/2/4/8 run GPT-Medium/
+  Large/XL/2.7B respectively at global batch 64, per the paper's Table 1.
+  We report achieved model FLOP/s (the paper's Megatron-style metric) for
+  1F1B vs the best kFkB, on a "cloud" bursty network.
+* U-Net (Fig 7): batch-size weak scaling on the UNet-Base / UNet-Medium
+  cost proxies, whose cross-stage tensors are 3-5x larger relative to
+  compute (paper §6.2.2/§6.2.3) — the regime where kFkB matters most.
+
+Claims reproduced: kFkB >= 1F1B everywhere; largest relative gains on the
+communication-heavy U-Net; GPT gains grow with worker count (more stages =
+more exposed transfers).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import efficiency, markdown_table, save_result
+from repro.configs.gpt import GPT_CONFIGS, UNET_COSTS, gpt_stage_costs
+from repro.core import BurstyTrace, make_plan, simulate_plan, uniform_network
+from repro.models.common import param_count
+
+GLOBAL_BATCH = 64
+SEQ = 1024
+
+
+def _cloud_net(S, seed=0):
+    return uniform_network(
+        S, lambda: BurstyTrace(25e9, contended_frac=0.15, mean_free=0.6,
+                               mean_contended=0.4, seed=seed)
+    )
+
+
+def _best_k(plan_maker, costs_for, net, ks=(1, 2, 3, 4, 6)):
+    out = {}
+    for k in ks:
+        plan, costs = plan_maker(k)
+        if plan is None:
+            continue
+        out[k] = simulate_plan(plan, costs, net).pipeline_length
+    return out
+
+
+def run_gpt() -> dict:
+    ladder = [(1, "GPT-Medium"), (2, "GPT-Large"), (4, "GPT-XL"), (8, "GPT-2.7B")]
+    rows, records = [], {}
+    for S, name in ladder:
+        cfg = GPT_CONFIGS[name]
+        if S == 1:  # no pipeline: single stage, no transfers
+            b = 4
+            costs = gpt_stage_costs(cfg, 1, b, SEQ)
+            length = (GLOBAL_BATCH // b) * (costs.fwd_time[0] + costs.bwd_time[0])
+            records[name] = {"1F1B": length, "best_k": 1, "kFkB": length}
+            rows.append([name, 1, "-", "-", "1.000"])
+            continue
+        net = _cloud_net(S, seed=S)
+
+        def plan_maker(k, S=S, cfg=cfg):
+            b = max(4 // k, 1)
+            M = GLOBAL_BATCH // b
+            costs = gpt_stage_costs(cfg, S, b, SEQ)
+            eff = efficiency(b) / efficiency(4)
+            costs.fwd_time = [t / eff for t in costs.fwd_time]
+            costs.bwd_time = [t / eff for t in costs.bwd_time]
+            return make_plan(S, M, k, micro_batch_size=b), costs
+
+        lengths = _best_k(plan_maker, None, net)
+        best_k = min(lengths, key=lengths.get)
+        flops = 6 * param_count(cfg) * GLOBAL_BATCH * SEQ
+        records[name] = {
+            "1F1B": lengths[1],
+            "kFkB": lengths[best_k],
+            "best_k": best_k,
+            "mflops_1f1b": flops / lengths[1] / 1e12,
+            "mflops_kfkb": flops / lengths[best_k] / 1e12,
+        }
+        rows.append([
+            name, S, f"{flops / lengths[1] / 1e12:.1f}",
+            f"{flops / lengths[best_k] / 1e12:.1f} (k={best_k})",
+            f"{lengths[1] / lengths[best_k]:.3f}",
+        ])
+    table = markdown_table(
+        ["config", "workers", "TFLOP/s 1F1B", "TFLOP/s Ada-Grouper", "speedup"], rows
+    )
+    print(f"\n== Fig 8: GPT weak scaling (params), GB={GLOBAL_BATCH} ==")
+    print(table)
+    for name, r in records.items():
+        assert r["kFkB"] <= r["1F1B"] + 1e-9, name
+    save_result("weak_scaling_gpt", {"records": records, "table": table})
+    return records
+
+
+def run_unet() -> dict:
+    rows, records = [], {}
+    for name, costs_fn in UNET_COSTS.items():
+        for S in (2, 4, 8):
+            # M8s shares hosts with other jobs (paper §6.1)
+            net = uniform_network(
+                S, lambda: BurstyTrace(12.5e9, contended_frac=0.3,
+                                       mean_free=1.0, mean_contended=0.3,
+                                       seed=100 + S),
+            )
+            B = 128 * S  # paper: global batch = N_workers * 128
+
+            def plan_maker(k, S=S):
+                b = max(8 // k, 2)  # UNet-Medium OOMs below b=2 (paper: k=4 OOM)
+                M = B // b
+                # costs_fn is calibrated at b=8: rescale compute AND bytes to b
+                costs = costs_fn(S).scaled_to_microbatch(8, b, efficiency=efficiency)
+                return make_plan(S, M, k, micro_batch_size=b), costs
+
+            # UNet-Medium OOMs at k=4 in the paper -> its candidate set stops at 3
+            ks = (1, 2, 3) if name == "UNet-Medium" else (1, 2, 3, 4)
+            lengths = _best_k(plan_maker, None, net, ks=ks)
+            best_k = min(lengths, key=lengths.get)
+            gain = lengths[1] / lengths[best_k] - 1
+            records[f"{name}@{S}"] = {
+                "1F1B": lengths[1], "kFkB": lengths[best_k],
+                "best_k": best_k, "gain": gain,
+            }
+            rows.append([name, S, f"k={best_k}", f"{gain * 100:+.1f}%"])
+    table = markdown_table(["config", "workers", "best plan", "gain vs 1F1B"], rows)
+    print(f"\n== Fig 7: U-Net weak scaling (batch), comm-heavy stages ==")
+    print(table)
+    assert all(r["gain"] >= -1e-9 for r in records.values())
+    assert max(r["gain"] for r in records.values()) > 0.02, "U-Net should gain 2-14%"
+    save_result("weak_scaling_unet", {"records": records, "table": table})
+    return records
+
+
+def run() -> dict:
+    return {"gpt": run_gpt(), "unet": run_unet()}
+
+
+if __name__ == "__main__":
+    run()

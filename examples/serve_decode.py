@@ -1,0 +1,84 @@
+"""Batched serving demo: prefill + KV-cache decode with greedy sampling.
+
+Loads a reduced architecture from the assigned pool (default qwen2.5's
+smoke variant; any --arch works), "prefills" a batch of prompts, then
+decodes N tokens per request through ``serve_step`` — the same code path
+the decode_32k / long_500k dry-run shapes lower at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import api
+from repro.training import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke
+    if cfg.family in ("encdec", "vlm"):
+        raise SystemExit("this demo drives text decode; pick a text arch")
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+    # prefill: feed prompt tokens through decode steps to fill the cache
+    # (production prefill uses the fused full-sequence path; token-stepping
+    # keeps this demo dependency-free and exercises the cache exactly)
+    cache = api.init_cache(cfg, B, max_len=P + N)
+    serve = make_serve_step(
+        lambda p, c, i, tokens: api.decode_fn(p, cfg, c, i, {"tokens": tokens}),
+        temperature=args.temperature,
+    )
+    jit_serve = jax.jit(serve)
+
+    t0 = time.time()
+    tok = None
+    for i in range(P):
+        tok, cache = jit_serve(params, cache, i, {"tokens": prompts[:, i : i + 1]})
+    t_prefill = time.time() - t0
+
+    generated = [tok]
+    t0 = time.time()
+    for i in range(P, P + N - 1):
+        tok, cache = jit_serve(params, cache, i, {"tokens": generated[-1][:, None]})
+        generated.append(tok)
+    t_decode = time.time() - t0
+    out = jnp.stack(generated, axis=1)
+
+    print(f"arch {args.arch} (smoke variant, family={cfg.family})")
+    print(f"prefill {P} tokens x {B} reqs: {t_prefill:.2f}s")
+    print(f"decode  {N} tokens x {B} reqs: {t_decode:.2f}s "
+          f"({B * N / max(t_decode, 1e-9):.1f} tok/s)")
+    print("sample continuations (token ids):")
+    for b in range(B):
+        print(f"  req{b}: {np.asarray(out[b])[:12]} ...")
+    assert out.shape == (B, N)
+    assert not bool(jnp.isnan(out).any())
+    # greedy decode is deterministic: same prompt -> same continuation
+    if args.temperature == 0.0 and B >= 2:
+        cache2 = api.init_cache(cfg, B, max_len=P + N)
+        for i in range(P):
+            tok2, cache2 = jit_serve(params, cache2, i, {"tokens": prompts[:, i : i + 1]})
+        np.testing.assert_array_equal(np.asarray(tok2), np.asarray(generated[0]))
+    print("serve demo OK")
+
+
+if __name__ == "__main__":
+    main()

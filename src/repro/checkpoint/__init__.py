@@ -1,0 +1,7 @@
+from repro.checkpoint.io import (
+    load_checkpoint,
+    latest_step,
+    save_checkpoint,
+)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

@@ -1,0 +1,88 @@
+"""Minimal dependency-free pytree checkpointing.
+
+Format: one directory per step, containing
+
+* ``tree.json``   — the pytree structure with leaf placeholders
+  (shape/dtype), produced via ``jax.tree_util`` path flattening;
+* ``arrays.npz``  — the leaves, keyed by their flattened path string.
+
+No msgpack/orbax dependency (container is offline); np.savez is atomic via
+write-to-temp + rename.  Works for params, optimizer states (registered
+dataclasses flatten transparently) and plain metric dicts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Write ``tree`` under ``directory/step_{step}``; returns the path."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    ckpt_dir = os.path.join(directory, f"step_{step}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = {}
+    keys = []
+    for path, leaf in leaves:
+        key = _path_str(path)
+        keys.append(key)
+        arrays[key] = np.asarray(leaf)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, os.path.join(ckpt_dir, "arrays.npz"))
+    meta = {"step": step, "keys": keys, "treedef": str(treedef)}
+    with open(os.path.join(ckpt_dir, "tree.json"), "w") as f:
+        json.dump(meta, f)
+    return ckpt_dir
+
+
+def load_checkpoint(directory: str, step: int, like: Any) -> Any:
+    """Load the checkpoint at ``step`` into the structure of ``like``."""
+    ckpt_dir = os.path.join(directory, f"step_{step}")
+    data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves:
+        key = _path_str(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for name in os.listdir(directory)
+        if (m := _STEP_RE.match(name))
+    ]
+    return max(steps) if steps else None

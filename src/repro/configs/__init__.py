@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ALL_ARCH_IDS,
+    INPUT_SHAPES,
+    ArchSpec,
+    InputShape,
+    get_arch,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "ALL_ARCH_IDS",
+    "INPUT_SHAPES",
+    "ArchSpec",
+    "InputShape",
+    "get_arch",
+    "list_archs",
+    "register",
+]

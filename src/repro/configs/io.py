@@ -1,0 +1,117 @@
+"""Input stand-ins for every (architecture × input shape) pair.
+
+``input_specs()`` returns ShapeDtypeStruct pytrees — weak-type-correct,
+shardable, zero allocation — for the dry-run; ``make_batch()`` materializes
+small real arrays of the same structure for smoke tests and examples.
+
+Modality frontends are the sanctioned stubs: audio frame embeddings arrive
+pre-computed at an 8× conv-subsampled rate; vision patch embeddings arrive
+interleaved with text at full sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, ArchSpec, InputShape
+from repro.models.common import ModelConfig
+
+__all__ = ["serving_config", "input_specs", "make_batch", "AUDIO_SUBSAMPLE"]
+
+AUDIO_SUBSAMPLE = 8  # conv frontend frame rate vs target tokens
+
+
+def serving_config(spec: ArchSpec, shape: InputShape) -> ModelConfig:
+    """The ModelConfig actually lowered for this shape.
+
+    For ``long_500k`` with the "windowed" policy, dense full-attention archs
+    get an explicit sliding-window serving variant (beyond-paper config,
+    DESIGN.md §6) — otherwise a 524k KV cache per layer is both quadratic in
+    attention cost and unshardable at kv_heads=8.
+    """
+    cfg = spec.model
+    if shape.name == "long_500k" and spec.long_context == "windowed":
+        cfg = cfg.replace(attn_window=spec.long_window)
+    if shape.kind != "train":
+        cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, shape.seq_len))
+    return cfg
+
+
+def _train_specs(cfg: ModelConfig, B: int, T: int):
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cfg.family == "encdec":
+        S = max(T // AUDIO_SUBSAMPLE, 1)
+        return {
+            "src_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+            "tgt_tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.ShapeDtypeStruct((B, T, cfg.d_model), f32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+            "mrope_positions": jax.ShapeDtypeStruct((3, B, T), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, T), i32),
+        "labels": jax.ShapeDtypeStruct((B, T), i32),
+    }
+
+
+def _decode_specs(cfg: ModelConfig, B: int, T: int):
+    i32 = jnp.int32
+    out = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "encdec":
+        S = max(T // AUDIO_SUBSAMPLE, 1)
+        out["memory"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(spec: ArchSpec, shape: InputShape | str, reduced: bool = False):
+    """Batch ShapeDtypeStructs for one (arch, shape) pair.
+
+    ``reduced=True`` shrinks to smoke-test scale (the smoke ModelConfig with
+    seq/batch cut down) while keeping the same structure.
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    cfg = spec.smoke if reduced else serving_config(spec, shape)
+    B = 2 if reduced else shape.global_batch
+    T = 32 if reduced else shape.seq_len
+    if shape.kind == "decode":
+        return _decode_specs(cfg, B, T)
+    return _train_specs(cfg, B, T)
+
+
+def make_batch(cfg: ModelConfig, B: int, T: int, kind: str = "train", seed: int = 0):
+    """Small real arrays matching ``input_specs`` structure (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    if kind == "decode":
+        out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)}
+        if cfg.family == "encdec":
+            S = max(T // AUDIO_SUBSAMPLE, 1)
+            out["memory"] = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+        return out
+    toks = rng.integers(0, cfg.vocab_size, (B, T + 1))
+    if cfg.family == "encdec":
+        S = max(T // AUDIO_SUBSAMPLE, 1)
+        return {
+            "src_embeds": jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.02, jnp.float32),
+            "tgt_tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "embeds": jnp.asarray(rng.standard_normal((B, T, cfg.d_model)) * 0.02, jnp.float32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            "mrope_positions": jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[None, None], (3, B, T)
+            ),
+        }
+    return {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+    }

@@ -1,0 +1,55 @@
+"""Mamba2-780M — attention-free SSD (state-space duality) [arXiv:2405.21060].
+
+48L d_model=1536, ssm_state=128, head_dim 64, expand 2, vocab=50280.
+No attention, no FFN (the Mamba2 block is the whole layer).
+
+long_500k: NATIVE — decode state is O(1) per layer ([B, H, P, N]); this is
+the canonical sub-quadratic long-context architecture of the pool.
+"""
+
+from repro.configs.base import ArchSpec, register
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=64,
+    ssm_expand=2,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    family="ssm",
+    num_layers=2,
+    d_model=256,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=1024,
+    ssm_state=32,
+    ssm_head_dim=32,
+    ssm_chunk=8,
+    tie_embeddings=True,
+)
+
+SPEC = register(
+    ArchSpec(
+        arch_id="mamba2-780m",
+        citation="arXiv:2405.21060",
+        model=FULL,
+        smoke=SMOKE,
+        long_context="native",
+        notes="attention-free; kFkB still applies (layer-partitionable, "
+        "cross-stage tensor is the hidden stream) — DESIGN.md §5",
+    )
+)

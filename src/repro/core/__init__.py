@@ -1,0 +1,75 @@
+"""Ada-Grouper core: kFkB scheduling, candidate search, cost model, tuner.
+
+Public API re-exports the pieces a user composes:
+
+    plan      = make_plan(S, M, k, b)
+    cands     = enumerate_candidates(S, B, memory_model, limit)
+    tuner     = AutoTuner(cands, stage_costs_for, NetworkProfiler(net))
+    summary   = Coordinator(tuner, net, B, interval).run(iters)
+"""
+
+from repro.core.candidates import Candidate, enumerate_candidates
+from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
+from repro.core.costmodel import CostModel, closed_form_1f1b_length
+from repro.core.memory_model import MemoryModel, StageMemorySpec
+from repro.core.network import (
+    BandwidthTrace,
+    BurstyTrace,
+    Network,
+    PeriodicPreemptionTrace,
+    RegimeTrace,
+    StableTrace,
+    uniform_network,
+)
+from repro.core.profiler import ComputeProfiler, MovingAverage, NetworkProfiler
+from repro.core.schedule import (
+    Op,
+    SchedulePlan,
+    Task,
+    make_plan,
+    peak_live_activations,
+    tick_table,
+    tick_table_stats,
+)
+from repro.core.simulator import PipelineSimulator, SimResult, simulate, simulate_plan
+from repro.core.taskgraph import StageCosts, TaskGraph, TransferSpec, build_task_graph
+from repro.core.tuner import AutoTuner, TuningRecord
+
+__all__ = [
+    "Candidate",
+    "enumerate_candidates",
+    "Coordinator",
+    "IterationRecord",
+    "RunSummary",
+    "CostModel",
+    "closed_form_1f1b_length",
+    "MemoryModel",
+    "StageMemorySpec",
+    "BandwidthTrace",
+    "BurstyTrace",
+    "Network",
+    "PeriodicPreemptionTrace",
+    "RegimeTrace",
+    "StableTrace",
+    "uniform_network",
+    "ComputeProfiler",
+    "MovingAverage",
+    "NetworkProfiler",
+    "Op",
+    "SchedulePlan",
+    "Task",
+    "make_plan",
+    "peak_live_activations",
+    "tick_table",
+    "tick_table_stats",
+    "PipelineSimulator",
+    "SimResult",
+    "simulate",
+    "simulate_plan",
+    "StageCosts",
+    "TaskGraph",
+    "TransferSpec",
+    "build_task_graph",
+    "AutoTuner",
+    "TuningRecord",
+]

@@ -1,0 +1,78 @@
+"""§4.2 candidate enumeration: the memory-limit (Pareto) curve over (k, b).
+
+With a fixed global batch ``B``, a plan is identified by the group count
+``k`` and micro-batch size ``b`` (``M = B / b`` micro-batches, ``k | M``).
+Feasible combinations lie under the memory-limit curve; interior points
+under-utilize device memory (point *A* of Fig 3) and points above it OOM
+(point *B*).  Only curve points (like *C*) are kept: for each ``k`` from 1
+upwards, greedily take the **largest** feasible ``b``.
+
+Duplicated (k, b) never arise (b is a function of k on the curve), but two
+k values can map to the same b when memory is activation-light; both are
+kept — they are genuinely different schedules with different overlap
+behaviour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.memory_model import MemoryModel
+from repro.core.schedule import SchedulePlan, make_plan
+
+__all__ = ["Candidate", "enumerate_candidates", "divisors"]
+
+
+@dataclasses.dataclass
+class Candidate:
+    k: int
+    micro_batch_size: int
+    num_microbatches: int
+    plan: SchedulePlan
+    est_peak_bytes: float
+
+    @property
+    def name(self) -> str:
+        return self.plan.name
+
+
+def divisors(n: int) -> list[int]:
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return out
+
+
+def enumerate_candidates(
+    num_stages: int,
+    global_batch: int,
+    memory_model: MemoryModel,
+    memory_limit_bytes: float,
+    max_k: int | None = None,
+    min_microbatches: int | None = None,
+    plan_factory: Callable[..., SchedulePlan] = make_plan,
+) -> list[Candidate]:
+    """Enumerate the memory-limit-curve candidates.
+
+    ``min_microbatches`` (default: ``num_stages``) rejects plans that cannot
+    even fill the pipeline once — the paper always injects at least one
+    micro-batch per stage.
+    """
+    if min_microbatches is None:
+        min_microbatches = num_stages
+    out: list[Candidate] = []
+    ks = range(1, (max_k or global_batch) + 1)
+    for k in ks:
+        best: Candidate | None = None
+        # largest feasible b for this k (greedy, walking b downwards)
+        for b in sorted(divisors(global_batch), reverse=True):
+            M = global_batch // b
+            if M % k != 0 or M < min_microbatches:
+                continue
+            plan = plan_factory(num_stages, M, k, micro_batch_size=b)
+            peak = memory_model.peak_bytes(plan)
+            if peak <= memory_limit_bytes:
+                best = Candidate(k, b, M, plan, peak)
+                break  # first (largest) feasible b — the curve point
+        if best is not None:
+            out.append(best)
+    return out

@@ -1,0 +1,121 @@
+"""Coordinator: drives training iterations under the currently-chosen plan.
+
+The paper's coordinator dispatches the decided plan to all workers and swaps
+plans with minimal overhead.  Here the coordinator advances a *simulated
+cluster* iteration by iteration: every iteration executes the current plan's
+task graph against the ground-truth network traces (whose state depends on
+wall-clock simulated time — phase matters under periodic preemption), and at
+the configured interval it invokes the auto-tuner, applying plan switches
+immediately.  A pluggable ``on_iteration`` hook lets the real JAX engine run
+the equivalent compiled step alongside (used by examples/).
+
+This is also the harness the Fig-10 experiment uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.candidates import Candidate
+from repro.core.network import Network, ScaledTrace
+from repro.core.simulator import simulate_plan
+from repro.core.tuner import AutoTuner, TuningRecord
+
+__all__ = ["IterationRecord", "RunSummary", "Coordinator"]
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    index: int
+    start: float
+    length: float
+    plan_name: str
+    k: int
+    samples_per_s: float
+
+
+@dataclasses.dataclass
+class RunSummary:
+    iterations: list[IterationRecord]
+    tuning: list[TuningRecord]
+    total_time: float
+    total_samples: int
+
+    @property
+    def throughput(self) -> float:
+        return self.total_samples / self.total_time if self.total_time else 0.0
+
+
+class _ShiftedTrace:
+    """View of a trace starting at absolute time ``t0`` (simulator runs at 0)."""
+
+    def __init__(self, base, t0: float) -> None:
+        self.base = base
+        self.t0 = t0
+
+    def bw_at(self, t: float):
+        bw, until = self.base.bw_at(self.t0 + t)
+        return bw, until - self.t0
+
+    def finish_time(self, start: float, nbytes: float) -> float:
+        return self.base.finish_time(self.t0 + start, nbytes) - self.t0
+
+    def mean_bw(self, a: float, b: float) -> float:
+        return self.base.mean_bw(self.t0 + a, self.t0 + b)
+
+
+def _shifted_network(net: Network, t0: float) -> Network:
+    return Network(
+        default=_ShiftedTrace(net.default, t0),
+        links={k: _ShiftedTrace(v, t0) for k, v in net.links.items()},
+    )
+
+
+class Coordinator:
+    def __init__(
+        self,
+        tuner: AutoTuner,
+        network: Network,
+        global_batch: int,
+        tuning_interval: float,
+        tuning_overhead: float = 0.0,
+        on_iteration: Callable[[IterationRecord], None] | None = None,
+    ) -> None:
+        self.tuner = tuner
+        self.network = network
+        self.global_batch = global_batch
+        self.tuning_interval = tuning_interval
+        self.tuning_overhead = tuning_overhead
+        self.on_iteration = on_iteration
+
+    def run(self, num_iterations: int, tune_first: bool = True) -> RunSummary:
+        now = 0.0
+        iters: list[IterationRecord] = []
+        next_tune = 0.0 if tune_first else self.tuning_interval
+        for i in range(num_iterations):
+            if now >= next_tune:
+                self.tuner.tune(now)
+                now += self.tuning_overhead
+                next_tune = now + self.tuning_interval
+            cand: Candidate = self.tuner.current
+            costs = self.tuner.stage_costs_for(cand)
+            result = simulate_plan(cand.plan, costs, _shifted_network(self.network, now))
+            rec = IterationRecord(
+                index=i,
+                start=now,
+                length=result.pipeline_length,
+                plan_name=cand.name,
+                k=cand.k,
+                samples_per_s=self.global_batch / result.pipeline_length,
+            )
+            iters.append(rec)
+            if self.on_iteration:
+                self.on_iteration(rec)
+            now += result.pipeline_length
+        return RunSummary(
+            iterations=iters,
+            tuning=list(self.tuner.history),
+            total_time=now,
+            total_samples=self.global_batch * num_iterations,
+        )

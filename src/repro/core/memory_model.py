@@ -1,0 +1,110 @@
+"""Liveness-based peak-memory estimation for a (k, b) schedule plan.
+
+The paper (§5.1) estimates memory with XLA's BufferAssignment on the slimmed
+HLO; we model the same quantities explicitly, per stage:
+
+    peak[s] = params[s] + optimizer_state[s] + grad_accum[s]
+            + stage_input_bytes(b) * peak_live_activations(plan)[s]
+            + transient_working_set(b)
+
+``peak_live_activations`` comes from exact liveness over the plan order (see
+:mod:`repro.core.schedule`), which is where kFkB's k-fold activation cost
+shows up.  The model supports two checkpointing policies matching the real
+engine: ``"stage_input"`` (store only the stage input per live micro-batch,
+recompute inside the stage during backward — the engine's default) and
+``"full"`` (store all per-layer activations; no recompute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.schedule import SchedulePlan, peak_live_activations
+
+__all__ = ["StageMemorySpec", "MemoryModel"]
+
+
+@dataclasses.dataclass
+class StageMemorySpec:
+    """Static memory description of one pipeline stage (bytes)."""
+
+    param_bytes: float
+    optimizer_bytes: float  # m/v (AdamW) or factored (Adafactor) state
+    grad_bytes: float  # accumulated gradient buffer
+    # per-token activation footprints; multiply by (b * seq)
+    stage_input_bytes_per_token: float  # hidden stream entering the stage
+    layer_act_bytes_per_token: float  # per-layer saved activations ("full" policy)
+    num_layers: int
+    workspace_bytes_per_token: float = 0.0  # attention scores etc. during compute
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    stages: list[StageMemorySpec]
+    seq_len: int
+    checkpoint_policy: str = "stage_input"  # or "full"
+
+    def activation_bytes_per_mb(self, stage: int, micro_batch_size: int) -> float:
+        """Resident activation bytes held for ONE live micro-batch at a stage."""
+        spec = self.stages[stage]
+        tokens = micro_batch_size * self.seq_len
+        if self.checkpoint_policy == "stage_input":
+            return spec.stage_input_bytes_per_token * tokens
+        if self.checkpoint_policy == "full":
+            return (
+                spec.stage_input_bytes_per_token
+                + spec.layer_act_bytes_per_token * spec.num_layers
+            ) * tokens
+        raise ValueError(f"unknown checkpoint policy {self.checkpoint_policy!r}")
+
+    def transient_bytes(self, stage: int, micro_batch_size: int) -> float:
+        """Working set while one micro-batch is being (re)computed."""
+        spec = self.stages[stage]
+        tokens = micro_batch_size * self.seq_len
+        per_layer = spec.layer_act_bytes_per_token * tokens
+        ws = spec.workspace_bytes_per_token * tokens
+        if self.checkpoint_policy == "stage_input":
+            # backward recompute materializes the stage's layer activations once
+            return per_layer * spec.num_layers + ws
+        return ws
+
+    def peak_bytes_per_stage(self, plan: SchedulePlan) -> list[float]:
+        b = plan.micro_batch_size
+        peaks_live = peak_live_activations(plan)
+        out = []
+        for s, spec in enumerate(self.stages):
+            static = spec.param_bytes + spec.optimizer_bytes + spec.grad_bytes
+            act = self.activation_bytes_per_mb(s, b) * peaks_live[s]
+            out.append(static + act + self.transient_bytes(s, b))
+        return out
+
+    def peak_bytes(self, plan: SchedulePlan) -> float:
+        return max(self.peak_bytes_per_stage(plan))
+
+    def fits(self, plan: SchedulePlan, limit_bytes: float) -> bool:
+        return self.peak_bytes(plan) <= limit_bytes
+
+    @classmethod
+    def uniform(
+        cls,
+        num_stages: int,
+        seq_len: int,
+        param_bytes: float,
+        optimizer_bytes: float,
+        grad_bytes: float,
+        stage_input_bytes_per_token: float,
+        layer_act_bytes_per_token: float,
+        num_layers_per_stage: int,
+        checkpoint_policy: str = "stage_input",
+        workspace_bytes_per_token: float = 0.0,
+    ) -> "MemoryModel":
+        spec = StageMemorySpec(
+            param_bytes=param_bytes,
+            optimizer_bytes=optimizer_bytes,
+            grad_bytes=grad_bytes,
+            stage_input_bytes_per_token=stage_input_bytes_per_token,
+            layer_act_bytes_per_token=layer_act_bytes_per_token,
+            num_layers=num_layers_per_stage,
+            workspace_bytes_per_token=workspace_bytes_per_token,
+        )
+        return cls([dataclasses.replace(spec) for _ in range(num_stages)], seq_len, checkpoint_policy)

@@ -1,0 +1,126 @@
+"""Profiling (§4.3, §5.2): stable compute profiles + windowed network probes.
+
+Two profilers, with very different lifetimes, exactly as in the paper:
+
+* :class:`ComputeProfiler` — stage forward/backward times.  Devices are
+  exclusively assigned, so these are profiled once per (plan, stage) and
+  **reused** for the whole run.  Sources: real wall-clock timing of jitted
+  stage functions (CPU runs), or an analytic FLOPs/peak model (TPU target).
+
+* :class:`NetworkProfiler` — cross-stage transfer times are *measured
+  end-to-end* ("instead of estimating ... by measuring the bandwidth ...,
+  we measure the cross-stage communication time directly"), because neither
+  contention nor shape-dependent utilization make bytes/bandwidth reliable.
+  Measurements go into a per-(link, nbytes-class) moving-average window and
+  must be refreshed periodically.  In this repo the "wire" is a ground-truth
+  :class:`~repro.core.network.Network` trace the profiler probes at the
+  current simulated time — the same way the paper suspends the schedule and
+  probes the real wire.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+from repro.core.network import Network
+
+__all__ = ["MovingAverage", "ComputeProfiler", "NetworkProfiler", "time_callable"]
+
+
+class MovingAverage:
+    def __init__(self, window: int = 8) -> None:
+        self.window = window
+        self.samples: collections.deque[float] = collections.deque(maxlen=window)
+
+    def add(self, x: float) -> None:
+        self.samples.append(float(x))
+
+    @property
+    def value(self) -> float:
+        if not self.samples:
+            raise ValueError("no samples")
+        return statistics.fmean(self.samples)
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+
+def time_callable(fn: Callable[[], object], repeats: int = 3, warmup: int = 1) -> float:
+    """Wall-clock a callable (seconds, mean over repeats after warmup)."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+@dataclasses.dataclass
+class ComputeProfiler:
+    """Caches per-(key) stage compute times; profile once, reuse forever."""
+
+    repeats: int = 3
+    _cache: dict[object, float] = dataclasses.field(default_factory=dict)
+
+    def profile(self, key: object, fn: Callable[[], object] | None = None,
+                analytic_seconds: float | None = None) -> float:
+        if key in self._cache:
+            return self._cache[key]
+        if analytic_seconds is not None:
+            value = float(analytic_seconds)
+        elif fn is not None:
+            value = time_callable(fn, self.repeats)
+        else:
+            raise ValueError("need fn or analytic_seconds")
+        self._cache[key] = value
+        return value
+
+    def get(self, key: object) -> float:
+        return self._cache[key]
+
+
+class NetworkProfiler:
+    """Windowed end-to-end transfer-time measurement against a trace world.
+
+    ``measure(src, dst, nbytes, now)`` probes the ground-truth trace at the
+    given simulated time (one probe == one timed transfer of ``nbytes``).
+    ``effective_time`` returns the moving-average measured duration for that
+    link/byte-class, which is what the cost model consumes.
+    """
+
+    def __init__(self, network: Network, window: int = 8) -> None:
+        self.network = network
+        self.window = window
+        self._avg: dict[tuple[int, int, float], MovingAverage] = {}
+
+    def _slot(self, src: int, dst: int, nbytes: float) -> MovingAverage:
+        key = (src, dst, float(nbytes))
+        if key not in self._avg:
+            self._avg[key] = MovingAverage(self.window)
+        return self._avg[key]
+
+    def measure(self, src: int, dst: int, nbytes: float, now: float,
+                probes: int = 3, spacing: float = 0.05) -> float:
+        """Run ``probes`` timed transfers starting at ``now``; record & return mean."""
+        slot = self._slot(src, dst, nbytes)
+        t = now
+        durations = []
+        trace = self.network.trace(src, dst)
+        for _ in range(probes):
+            fin = trace.finish_time(t, nbytes)
+            durations.append(fin - t)
+            t = fin + spacing
+        mean = statistics.fmean(durations)
+        slot.add(mean)
+        return mean
+
+    def effective_time(self, src: int, dst: int, nbytes: float) -> float:
+        return self._slot(src, dst, nbytes).value
+
+    def effective_bandwidth(self, src: int, dst: int, nbytes: float) -> float:
+        t = self.effective_time(src, dst, nbytes)
+        return nbytes / t if t > 0 else float("inf")

@@ -1,0 +1,318 @@
+"""Pipeline schedule plans: 1F1B, kFkB, GPipe.
+
+This module is the heart of the Ada-Grouper reproduction.  A *schedule plan*
+is, per pipeline stage, an ordered list of :class:`Task` records (forward /
+backward of a given micro-batch).  Ordering is the whole contribution of the
+paper: kFkB groups ``k`` micro-batches into one indivisible schedule unit so
+that while the cross-stage transfer of member *i* is in flight, the stage can
+compute member *i+1* (overlap), at the price of keeping up to ``k`` times more
+forward activations live.
+
+Construction follows the paper's §5.4: "generate k copies of the 1F1B plan
+[and] cross-merge [them]".  Concretely we build the classic synchronous 1F1B
+(DAPPLE / Megatron) order over ``G = M/k`` *virtual* micro-batches (groups),
+then expand every virtual forward/backward into its ``k`` members in FIFO
+order.  ``k == 1`` is exactly 1F1B and ``k == M`` is exactly GPipe, matching
+the paper's §4.1.
+
+Two derived artifacts are produced from a plan:
+
+* *slot assignment* — per-stage activation buffer slots from exact liveness
+  (a stage executes its own tasks sequentially, so walking the order gives
+  liveness directly).  The peak slot count is the memory model's input.
+* *tick table* — a lock-step global alignment (greedy list schedule under
+  "data sent at tick t is usable at tick t+1") used by the real ``shard_map``
+  engine, which executes one task per device per tick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Op",
+    "Task",
+    "SchedulePlan",
+    "one_f_one_b_order",
+    "gpipe_order",
+    "kfkb_order",
+    "make_plan",
+    "assign_slots",
+    "peak_live_activations",
+    "tick_table",
+    "tick_table_stats",
+    "TICK_IDLE",
+]
+
+
+class Op(enum.IntEnum):
+    IDLE = 0
+    FWD = 1
+    BWD = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One unit of work on one pipeline stage."""
+
+    op: Op
+    stage: int
+    mb: int  # micro-batch index in [0, M)
+    slot: int = -1  # activation buffer slot (filled by assign_slots)
+
+    def key(self) -> tuple[int, int, int]:
+        return (int(self.op), self.stage, self.mb)
+
+
+@dataclasses.dataclass
+class SchedulePlan:
+    """A complete plan: per-stage ordered task lists plus its (k, b) identity."""
+
+    num_stages: int
+    num_microbatches: int
+    k: int
+    micro_batch_size: int
+    orders: list[list[Task]]  # orders[s] = ordered tasks of stage s
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            self.name = f"{self.k}F{self.k}B(b={self.micro_batch_size})"
+
+    @property
+    def num_groups(self) -> int:
+        return (self.num_microbatches + self.k - 1) // self.k
+
+    def tasks(self) -> Iterator[Task]:
+        for order in self.orders:
+            yield from order
+
+    def validate(self) -> None:
+        """Structural invariants every legal synchronous plan must satisfy."""
+        S, M = self.num_stages, self.num_microbatches
+        for s, order in enumerate(self.orders):
+            fwd_seen: set[int] = set()
+            bwd_seen: set[int] = set()
+            for t in order:
+                assert t.stage == s, f"task {t} listed under stage {s}"
+                if t.op == Op.FWD:
+                    assert t.mb not in fwd_seen, f"dup FWD {t}"
+                    fwd_seen.add(t.mb)
+                elif t.op == Op.BWD:
+                    assert t.mb in fwd_seen, f"BWD before FWD: {t}"
+                    assert t.mb not in bwd_seen, f"dup BWD {t}"
+                    bwd_seen.add(t.mb)
+            assert fwd_seen == set(range(M)), f"stage {s}: missing FWDs"
+            assert bwd_seen == set(range(M)), f"stage {s}: missing BWDs"
+
+
+# ---------------------------------------------------------------------------
+# Order construction
+# ---------------------------------------------------------------------------
+
+
+def _virtual_1f1b(num_stages: int, num_groups: int, stage: int) -> list[tuple[Op, int]]:
+    """Classic synchronous 1F1B order for one stage over *virtual* micro-batches.
+
+    warmup: ``min(S - s, G)`` forwards, then steady 1F1B, then the cooldown
+    backwards.  (DAPPLE-style early backward: the last stage runs strictly
+    F0 B0 F1 B1 ...)
+    """
+    S, G, s = num_stages, num_groups, stage
+    warmup = min(S - s, G)
+    order: list[tuple[Op, int]] = [(Op.FWD, g) for g in range(warmup)]
+    next_fwd = warmup
+    next_bwd = 0
+    # steady state: alternate B, F while forwards remain
+    while next_fwd < G:
+        order.append((Op.BWD, next_bwd))
+        next_bwd += 1
+        order.append((Op.FWD, next_fwd))
+        next_fwd += 1
+    # cooldown: remaining backwards
+    while next_bwd < G:
+        order.append((Op.BWD, next_bwd))
+        next_bwd += 1
+    return order
+
+
+def one_f_one_b_order(num_stages: int, num_microbatches: int, stage: int) -> list[tuple[Op, int]]:
+    """1F1B order (k = 1) for one stage."""
+    return _virtual_1f1b(num_stages, num_microbatches, stage)
+
+
+def gpipe_order(num_stages: int, num_microbatches: int, stage: int) -> list[tuple[Op, int]]:
+    """GPipe order: all forwards then all backwards."""
+    M = num_microbatches
+    return [(Op.FWD, m) for m in range(M)] + [(Op.BWD, m) for m in range(M)]
+
+
+def kfkb_order(
+    num_stages: int, num_microbatches: int, k: int, stage: int
+) -> list[tuple[Op, int]]:
+    """kFkB order for one stage: expand the virtual-1F1B over ceil(M/k) groups.
+
+    Every virtual FWD of group ``g`` becomes the forwards of micro-batches
+    ``g*k .. g*k + k - 1`` in FIFO order (and likewise for backwards), i.e.
+    the "cross-merge of k copies of 1F1B" of the paper's §5.4.  When k does
+    not divide M the final group is smaller (the paper's Fig-6 sweep uses
+    k=5 with M=192).
+    """
+    M = num_microbatches
+    G = (M + k - 1) // k
+    virt = _virtual_1f1b(num_stages, G, stage)
+    order: list[tuple[Op, int]] = []
+    for op, g in virt:
+        order.extend((op, g * k + i) for i in range(min(k, M - g * k)))
+    return order
+
+
+def make_plan(
+    num_stages: int,
+    num_microbatches: int,
+    k: int,
+    micro_batch_size: int = 1,
+    name: str = "",
+) -> SchedulePlan:
+    """Build a validated kFkB :class:`SchedulePlan` (k=1 → 1F1B, k=M → GPipe)."""
+    orders = []
+    for s in range(num_stages):
+        raw = kfkb_order(num_stages, num_microbatches, k, s)
+        orders.append([Task(op, s, mb) for op, mb in raw])
+    plan = SchedulePlan(num_stages, num_microbatches, k, micro_batch_size, orders, name)
+    plan.validate()
+    assign_slots(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Slot assignment (exact per-stage liveness)
+# ---------------------------------------------------------------------------
+
+
+def assign_slots(plan: SchedulePlan) -> int:
+    """Assign activation buffer slots per stage; return the global peak count.
+
+    A forward allocates a slot (it must keep its stage input alive until its
+    backward); the matching backward frees it.  Because each stage executes
+    its own order sequentially, walking the order gives exact liveness.
+    """
+    peak_global = 0
+    for s, order in enumerate(plan.orders):
+        free: list[int] = []
+        next_slot = 0
+        live: dict[int, int] = {}  # mb -> slot
+        peak = 0
+        for i, t in enumerate(order):
+            if t.op == Op.FWD:
+                slot = free.pop() if free else next_slot
+                if slot == next_slot:
+                    next_slot += 1
+                live[t.mb] = slot
+                peak = max(peak, len(live))
+            elif t.op == Op.BWD:
+                slot = live.pop(t.mb)
+                free.append(slot)
+            else:
+                slot = -1
+            order[i] = dataclasses.replace(t, slot=slot)
+        assert not live, f"stage {s}: activations leaked: {live}"
+        peak_global = max(peak_global, next_slot)
+    return peak_global
+
+
+def peak_live_activations(plan: SchedulePlan) -> list[int]:
+    """Per-stage peak number of simultaneously-live forward activations."""
+    peaks = []
+    for order in plan.orders:
+        live = 0
+        peak = 0
+        for t in order:
+            if t.op == Op.FWD:
+                live += 1
+                peak = max(peak, live)
+            elif t.op == Op.BWD:
+                live -= 1
+        peaks.append(peak)
+    return peaks
+
+
+# ---------------------------------------------------------------------------
+# Lock-step tick table for the real SPMD engine
+# ---------------------------------------------------------------------------
+
+TICK_IDLE = np.array([int(Op.IDLE), -1, -1], dtype=np.int32)
+
+
+def tick_table(plan: SchedulePlan) -> np.ndarray:
+    """Greedy lock-step alignment of a plan: ``[S, T, 3]`` of (op, mb, slot).
+
+    Semantics of the real engine: each tick every device executes at most one
+    task; data produced at tick ``t`` (activation moving down, gradient moving
+    up, both via one ppermute pair) is consumable at tick ``t+1`` or later.
+    A task is eligible at tick ``t`` iff
+
+    * it is the device's next unexecuted task in plan order (in-order, as the
+      paper's runtime), and
+    * its cross-stage input was produced at some tick ``< t``
+      (FWD_s(mb) needs FWD_{s-1}(mb); BWD_s(mb) needs BWD_{s+1}(mb)), and
+    * its intra-stage input exists (BWD_s(mb) needs FWD_s(mb), any tick < t;
+      same-tick is impossible anyway since one task per tick).
+
+    This is exactly executable by ``repro.pipeline.engine`` and is also the
+    zero-communication-cost reference point of the cost model.
+    """
+    S = plan.num_stages
+    ptr = [0] * S
+    done_tick: dict[tuple[int, int, int], int] = {}  # (op, stage, mb) -> tick
+    rows: list[list[np.ndarray]] = [[] for _ in range(S)]
+    t = 0
+    total = sum(len(o) for o in plan.orders)
+    executed = 0
+    max_ticks = 4 * total + 8 * S + 16  # generous upper bound; loop must end sooner
+    while executed < total:
+        if t > max_ticks:
+            raise RuntimeError("tick_table failed to converge — malformed plan")
+        fired_this_tick: list[tuple[int, Task]] = []
+        for s in range(S):
+            if ptr[s] >= len(plan.orders[s]):
+                rows[s].append(TICK_IDLE)
+                continue
+            task = plan.orders[s][ptr[s]]
+            ready = True
+            if task.op == Op.FWD and s > 0:
+                dep = done_tick.get((int(Op.FWD), s - 1, task.mb))
+                ready = dep is not None and dep < t
+            elif task.op == Op.BWD:
+                dep_f = done_tick.get((int(Op.FWD), s, task.mb))
+                ready = dep_f is not None and dep_f < t
+                if ready and s < S - 1:
+                    dep = done_tick.get((int(Op.BWD), s + 1, task.mb))
+                    ready = dep is not None and dep < t
+            if ready:
+                rows[s].append(np.array([int(task.op), task.mb, task.slot], np.int32))
+                fired_this_tick.append((s, task))
+                ptr[s] += 1
+                executed += 1
+            else:
+                rows[s].append(TICK_IDLE)
+        # completion times are committed only after the whole tick resolves
+        for s, task in fired_this_tick:
+            done_tick[(int(task.op), s, task.mb)] = t
+        t += 1
+    return np.stack([np.stack(r) for r in rows])  # [S, T, 3]
+
+
+def tick_table_stats(table: np.ndarray) -> dict[str, float]:
+    """Bubble fraction & length of a tick table (unit-cost reference)."""
+    S, T, _ = table.shape
+    busy = int((table[:, :, 0] != int(Op.IDLE)).sum())
+    return {
+        "ticks": float(T),
+        "busy": float(busy),
+        "bubble_fraction": 1.0 - busy / float(S * T),
+    }

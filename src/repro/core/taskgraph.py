@@ -1,0 +1,153 @@
+"""Task graph: stage-computation instances + Send/Recv transfers + grad-accum.
+
+Mirrors the paper's §2.4: every stage computation fed by a micro-batch is a
+*task node*; Send/Recv pairs are explicit nodes inserted on cross-stage
+edges; gradient-accumulation nodes stitch the micro-batches of one stage.
+The graph is built from a :class:`~repro.core.schedule.SchedulePlan` plus a
+:class:`StageCosts` profile, and is what the discrete-event simulator and the
+cost model consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from repro.core.schedule import Op, SchedulePlan, Task
+
+__all__ = ["StageCosts", "TransferSpec", "TaskGraph", "build_task_graph"]
+
+
+@dataclasses.dataclass
+class StageCosts:
+    """Profiled (or modelled) costs of one pipeline configuration.
+
+    * ``fwd_time[s]`` / ``bwd_time[s]`` — seconds per micro-batch at stage s.
+    * ``fwd_bytes[s]`` — activation bytes sent ``s -> s+1`` after a forward
+      (index ``s`` in ``[0, S-2]``).
+    * ``bwd_bytes[s]`` — gradient bytes sent ``s -> s-1`` after a backward
+      (index ``s`` in ``[1, S-1]``).
+    * ``optimizer_time[s]`` — per-stage epilogue (grad-accum finalize + apply).
+    """
+
+    fwd_time: list[float]
+    bwd_time: list[float]
+    fwd_bytes: list[float]
+    bwd_bytes: list[float]
+    optimizer_time: list[float] | None = None
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.fwd_time)
+
+    def __post_init__(self) -> None:
+        S = len(self.fwd_time)
+        assert len(self.bwd_time) == S
+        assert len(self.fwd_bytes) >= S - 1
+        assert len(self.bwd_bytes) >= S
+        if self.optimizer_time is None:
+            self.optimizer_time = [0.0] * S
+
+    @classmethod
+    def uniform(
+        cls,
+        num_stages: int,
+        fwd_time: float,
+        bwd_time: float | None = None,
+        act_bytes: float = 0.0,
+        optimizer_time: float = 0.0,
+    ) -> "StageCosts":
+        """Paper §4.1 assumptions by default: ``bwd = 2 * fwd``; grad bytes =
+        activation bytes (same tensor shape travelling back)."""
+        if bwd_time is None:
+            bwd_time = 2.0 * fwd_time
+        return cls(
+            fwd_time=[fwd_time] * num_stages,
+            bwd_time=[bwd_time] * num_stages,
+            fwd_bytes=[act_bytes] * num_stages,
+            bwd_bytes=[act_bytes] * num_stages,
+            optimizer_time=[optimizer_time] * num_stages,
+        )
+
+    def scaled_to_microbatch(self, b_ref: int, b_new: int, efficiency=None) -> "StageCosts":
+        """Rescale costs profiled at micro-batch size ``b_ref`` to ``b_new``.
+
+        Compute scales by ``b_new/b_ref`` divided by a relative *efficiency*
+        factor (smaller micro-batches under-utilize the device — the paper's
+        computation-efficiency term); bytes scale linearly.
+        """
+        ratio = b_new / float(b_ref)
+        eff = efficiency(b_new) / efficiency(b_ref) if efficiency else 1.0
+        scale_t = ratio / max(eff, 1e-9)
+        return StageCosts(
+            fwd_time=[t * scale_t for t in self.fwd_time],
+            bwd_time=[t * scale_t for t in self.bwd_time],
+            fwd_bytes=[x * ratio for x in self.fwd_bytes],
+            bwd_bytes=[x * ratio for x in self.bwd_bytes],
+            optimizer_time=list(self.optimizer_time),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferSpec:
+    """A Send/Recv pair: produced by ``src_task``, consumed by stage ``dst``."""
+
+    src: int
+    dst: int
+    op: Op  # the op of the *producing* task (FWD moves down, BWD moves up)
+    mb: int
+    nbytes: float
+
+    @property
+    def key(self) -> tuple[int, int, int]:
+        """The (op, stage, mb) the *consumer* waits for — producer's identity."""
+        return (int(self.op), self.src, self.mb)
+
+
+@dataclasses.dataclass
+class TaskGraph:
+    plan: SchedulePlan
+    costs: StageCosts
+    # transfers emitted by each completed task, keyed by (op, stage, mb)
+    outgoing: dict[tuple[int, int, int], list[TransferSpec]]
+    # the cross-stage input each task waits for (None for boundary stages)
+    incoming: dict[tuple[int, int, int], TransferSpec | None]
+
+    @property
+    def num_stages(self) -> int:
+        return self.plan.num_stages
+
+    def task_time(self, task: Task) -> float:
+        if task.op == Op.FWD:
+            return self.costs.fwd_time[task.stage]
+        if task.op == Op.BWD:
+            return self.costs.bwd_time[task.stage]
+        return 0.0
+
+    def iter_tasks(self) -> Iterator[Task]:
+        yield from self.plan.tasks()
+
+
+def build_task_graph(plan: SchedulePlan, costs: StageCosts) -> TaskGraph:
+    """Insert Send/Recv transfer specs for every cross-stage dependency."""
+    S, M = plan.num_stages, plan.num_microbatches
+    assert costs.num_stages == S
+    outgoing: dict[tuple[int, int, int], list[TransferSpec]] = {}
+    incoming: dict[tuple[int, int, int], TransferSpec | None] = {}
+    for mb in range(M):
+        for s in range(S):
+            fkey = (int(Op.FWD), s, mb)
+            bkey = (int(Op.BWD), s, mb)
+            outgoing.setdefault(fkey, [])
+            outgoing.setdefault(bkey, [])
+            if s < S - 1:  # forward activation moves down
+                xf = TransferSpec(s, s + 1, Op.FWD, mb, costs.fwd_bytes[s])
+                outgoing[fkey].append(xf)
+                incoming[(int(Op.FWD), s + 1, mb)] = xf
+            if s > 0:  # backward gradient moves up
+                xb = TransferSpec(s, s - 1, Op.BWD, mb, costs.bwd_bytes[s])
+                outgoing[bkey].append(xb)
+                incoming[(int(Op.BWD), s - 1, mb)] = xb
+            incoming.setdefault(fkey, None)
+            incoming.setdefault(bkey, None)
+    return TaskGraph(plan=plan, costs=costs, outgoing=outgoing, incoming=incoming)

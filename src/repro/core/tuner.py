@@ -1,0 +1,92 @@
+"""§3.2/§5.4 online auto-tuner: re-profile, re-evaluate, switch plans.
+
+At every tuning interval the tuner (a) suspends the pipeline and probes each
+cross-stage link with each candidate's actual transfer sizes (§5.2: "we
+suspend the current schedule task and collect all the performance data in
+each schedule plan"), (b) estimates every candidate's pipeline length with
+the cost model, and (c) picks the argmin.  Compute profiles are *not*
+re-measured (devices are exclusive).  All candidates stay alive — the next
+interval may pick a different k, and switching carries no parameter-state
+cost because (k, b) do not affect the model parameters (§5.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.candidates import Candidate
+from repro.core.costmodel import CostModel
+from repro.core.profiler import NetworkProfiler
+from repro.core.taskgraph import StageCosts
+
+__all__ = ["TuningRecord", "AutoTuner"]
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    time: float
+    estimates: dict[str, float]  # candidate name -> estimated pipeline length
+    chosen: str
+    chosen_k: int
+    switched: bool
+
+
+class AutoTuner:
+    def __init__(
+        self,
+        candidates: list[Candidate],
+        stage_costs_for: Callable[[Candidate], StageCosts],
+        network_profiler: NetworkProfiler,
+        cost_model: CostModel | None = None,
+        probes: int = 3,
+    ) -> None:
+        if not candidates:
+            raise ValueError("no candidates to tune over")
+        self.candidates = candidates
+        self.stage_costs_for = stage_costs_for
+        self.net_profiler = network_profiler
+        self.cost_model = cost_model or CostModel()
+        self.probes = probes
+        self.current: Candidate = candidates[0]
+        self.history: list[TuningRecord] = []
+
+    # -- one tuning round -----------------------------------------------------
+
+    def _profile_links(self, cand: Candidate, now: float) -> dict[tuple[int, int], float]:
+        costs = self.stage_costs_for(cand)
+        S = cand.plan.num_stages
+        bw: dict[tuple[int, int], float] = {}
+        for s in range(S - 1):
+            fb = costs.fwd_bytes[s]
+            self.net_profiler.measure(s, s + 1, fb, now, probes=self.probes)
+            bw[(s, s + 1)] = self.net_profiler.effective_bandwidth(s, s + 1, fb)
+            bb = costs.bwd_bytes[s + 1]
+            self.net_profiler.measure(s + 1, s, bb, now, probes=self.probes)
+            bw[(s + 1, s)] = self.net_profiler.effective_bandwidth(s + 1, s, bb)
+        return bw
+
+    def evaluate(self, now: float) -> dict[str, float]:
+        """Estimated pipeline length per candidate at simulated time ``now``."""
+        out: dict[str, float] = {}
+        for cand in self.candidates:
+            costs = self.stage_costs_for(cand)
+            bw = self._profile_links(cand, now)
+            out[cand.name] = self.cost_model.estimate(cand.plan, costs, bw)
+        return out
+
+    def tune(self, now: float) -> TuningRecord:
+        estimates = self.evaluate(now)
+        best_name = min(estimates, key=estimates.get)
+        best = next(c for c in self.candidates if c.name == best_name)
+        switched = best is not self.current
+        self.current = best
+        rec = TuningRecord(
+            time=now,
+            estimates=estimates,
+            chosen=best.name,
+            chosen_k=best.k,
+            switched=switched,
+        )
+        self.history.append(rec)
+        return rec

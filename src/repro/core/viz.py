@@ -1,0 +1,67 @@
+"""ASCII rendering of schedule plans and simulator timelines.
+
+Two views, both matching the paper's figures:
+
+* :func:`render_tick_table` — the zero-comm lock-step layout (Fig 2's
+  idealized grids): one row per stage, one column per tick, ``F``/``B``
+  cells tagged with the micro-batch index (mod 10), ``.`` for bubbles.
+* :func:`render_sim_timeline` — the discrete-event simulator's actual task
+  intervals under a network trace, quantized to a character raster; shows
+  where preemption stretches the pipeline (Fig 2's preempted rows).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedule import Op, SchedulePlan, tick_table
+from repro.core.simulator import SimResult
+from repro.core.taskgraph import TaskGraph
+
+__all__ = ["render_tick_table", "render_sim_timeline"]
+
+
+def render_tick_table(plan: SchedulePlan) -> str:
+    """E.g. 1F1B, S=2, M=4::
+
+        stage 0 |F0 F1 B0 F2 B1 F3 B2 .. B3|
+        stage 1 |.. F0 B0 F1 B1 F2 B2 F3 B3|
+    """
+    table = tick_table(plan)
+    S, T, _ = table.shape
+    rows = []
+    for s in range(S):
+        cells = []
+        for t in range(T):
+            op, mb, _ = (int(v) for v in table[s, t])
+            if op == int(Op.IDLE):
+                cells.append("..")
+            else:
+                cells.append(f"{'F' if op == int(Op.FWD) else 'B'}{mb % 10}")
+        rows.append(f"stage {s} |" + " ".join(cells) + "|")
+    header = f"{plan.name}: S={S} M={plan.num_microbatches} ({T} ticks)"
+    return "\n".join([header] + rows)
+
+
+def render_sim_timeline(
+    graph: TaskGraph, result: SimResult, width: int = 100
+) -> str:
+    """Character raster of the simulated execution (one row per stage)."""
+    S = graph.num_stages
+    end = result.pipeline_length
+    scale = width / max(end, 1e-12)
+    rows = []
+    for s in range(S):
+        row = ["."] * width
+        for task in graph.plan.orders[s]:
+            fin = result.task_finish[task.key()]
+            dur = graph.task_time(task)
+            a = int((fin - dur) * scale)
+            b = max(int(fin * scale), a + 1)
+            ch = "F" if task.op == Op.FWD else "B"
+            for i in range(a, min(b, width)):
+                row[i] = ch
+        busy = result.busy_time[s] / end
+        rows.append(f"stage {s} |{''.join(row)}| busy {busy:5.1%}")
+    rows.append(f"{'':8s} 0{'.' * (width - 10)}{end:8.2f}s")
+    return "\n".join(rows)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    Batch,
+    SyntheticTextDataset,
+    make_batch_iterator,
+    microbatch_split,
+)
+
+__all__ = ["Batch", "SyntheticTextDataset", "make_batch_iterator", "microbatch_split"]

@@ -1,0 +1,23 @@
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_pspecs,
+    param_shardings,
+    replicated,
+)
+from repro.distributed.spmd import (
+    make_spmd_prefill,
+    make_spmd_serve_step,
+    make_spmd_train_step,
+)
+
+__all__ = [
+    "batch_shardings",
+    "cache_shardings",
+    "param_pspecs",
+    "param_shardings",
+    "replicated",
+    "make_spmd_train_step",
+    "make_spmd_prefill",
+    "make_spmd_serve_step",
+]

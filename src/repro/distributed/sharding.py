@@ -1,0 +1,257 @@
+"""Logical sharding rules → NamedSharding, by pytree path + shape.
+
+The production mesh is ``("data", "model")`` (16 × 16) or
+``("pod", "data", "model")`` (2 × 16 × 16).  Axis roles:
+
+* ``("pod", "data")`` — pure data parallelism over the batch, *plus*
+  FSDP-style parameter sharding (a second param dim is sharded over "data";
+  GSPMD inserts the all-gathers at use — that IS FSDP in pjit form).
+* ``"model"`` — tensor parallelism (Megatron-style column/row splits),
+  expert parallelism (MoE expert dim), and long-context KV/sequence
+  sharding for decode.
+
+Rules are *name-keyed* with shape-divisibility guards: a dim is sharded
+only when divisible by the axis size, otherwise that dim falls back to
+replication — so reduced smoke configs and full production configs flow
+through the same code.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "replicated",
+    "zero3_param_pspecs",
+    "param_pspecs",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "DATA_AXES",
+]
+
+DATA_AXES = ("pod", "data")  # whichever of these exist in the mesh
+
+
+def _mesh_axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def _data_size(mesh: Mesh) -> int:
+    return int(np.prod([_mesh_axis(mesh, a) for a in _data_axes(mesh)] or [1]))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _fits(dim: int, n: int) -> bool:
+    return n > 1 and dim % n == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# weight-name classes (matched as substrings of the flattened path)
+_COL_SPLIT = ("wq/", "wk/", "wv/", "gate/", "up/", "in_proj", "xattn/wq", "xattn/wk", "xattn/wv")
+_ROW_SPLIT = ("wo/", "down/", "out_proj", "xattn/wo")
+_EMBED = ("table", "head")
+_EXPERT = ("experts/",)
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh: Mesh, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    2-D weights: TP dim over "model"; with ``fsdp`` the other dim is also
+    sharded over "data" (ZeRO-3 style — GSPMD all-gathers at use).  Serving
+    paths pass ``fsdp=False``: weights stay stationary (TP-only), because a
+    per-token all-gather of the full layer weights would make decode
+    collective-bound (observed: 10 GB wire per decoded token on jamba).
+    MoE experts keep their second shard dim over "data" even when
+    ``fsdp=False`` — that 2-D expert sharding is weight-stationary (the
+    contraction follows the shard; only small activations cross the wire)
+    and is what fits 1T-parameter expert banks in HBM.
+    Stacked-block weights (scan over layers) carry a leading n_blocks dim
+    (and experts an [E, ...] dim) — those leading dims shift the rules right.
+    """
+    tp = _mesh_axis(mesh, "model")
+    data_axes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    nd = len(shape)
+    spec: list[Any] = [None] * nd
+
+    def put(i, axis, force=False):
+        if 0 <= i < nd and spec[i] is None:
+            if axis == "model" and _fits(shape[i], tp):
+                spec[i] = "model"
+            elif axis == "data" and (fsdp or force) and _fits(shape[i], dsz) and data_axes:
+                spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    is_expert = any(k in path for k in _EXPERT)
+    # leading stacked-scan dim(s): [n_blocks, ...] never sharded
+    lead = 1 if "blocks/" in path else 0
+
+    if is_expert:
+        # [.., E, d, ff] (gate/up) or [.., E, ff, d] (down): EP over model,
+        # second shard over data on the first non-expert dim (2-D expert
+        # sharding; weight-stationary, kept even for serving)
+        put(lead, "model")  # expert dim
+        put(lead + 1, "data", force=True)
+        return P(*spec)
+    if any(k in path for k in _EMBED):
+        # [V, d] or [d, V]: vocab over model, d over data
+        v_dim = lead if shape[lead] >= shape[-1] else nd - 1
+        d_dim = nd - 1 if v_dim == lead else lead
+        put(v_dim, "model")
+        put(d_dim, "data")
+        return P(*spec)
+    if any(k in path for k in _COL_SPLIT):
+        put(nd - 1, "model")  # output features
+        put(nd - 2, "data")
+        return P(*spec)
+    if any(k in path for k in _ROW_SPLIT):
+        put(nd - 2, "model")  # input features
+        put(nd - 1, "data")
+        return P(*spec)
+    if nd >= 2:
+        # other matrices (router, conv): largest dim over model if divisible
+        big = int(np.argmax(shape))
+        put(big, "model")
+        return P(*spec)
+    return P()  # 1-D (norms, biases): replicate
+
+
+def zero3_param_pspecs(params, mesh: Mesh):
+    """Pure ZeRO-3 layout: every ≥2-D leaf flat-sharded on its largest
+    divisible dim over ALL mesh axes combined (no tensor parallelism).
+
+    The right layout when the model fits per-device HBM after gathering one
+    layer at a time: compute is pure data parallel (no activation
+    all-reduces at all), and the only collectives are one bf16 weight
+    all-gather per layer + one gradient reduce-scatter — O(params) per
+    step instead of O(activations × layers).
+    """
+    axes_all = tuple(mesh.axis_names)
+    sizes = [int(np.prod([mesh.shape[a] for a in axes]))
+             for axes in (axes_all, axes_all[-2:], axes_all[-1:])]
+    candidates = [axes_all, axes_all[-2:], axes_all[-1:]]
+
+    def spec_for(shape):
+        nd = len(shape)
+        if nd < 2:
+            return P()
+        order = sorted(range(nd), key=lambda i: -shape[i])
+        for axes, n in zip(candidates, sizes):
+            if n <= 1:
+                continue
+            for i in order:
+                if shape[i] % n == 0:
+                    spec = [None] * nd
+                    spec[i] = axes if len(axes) > 1 else axes[0]
+                    return P(*spec)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(np.shape(x)) for x in flat]
+    )
+
+
+def param_pspecs(params, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpec pytree for a parameter pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        _spec_for(_path_str(path), np.shape(leaf), mesh, fsdp=fsdp)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = True):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params, mesh, fsdp=fsdp)
+    )
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    """Shard the batch dim over (pod, data); mrope keeps its leading 3."""
+    data_axes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    axes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def one(name, x):
+        shape = x.shape
+        if name == "mrope_positions":  # [3, B, T]
+            if _fits(shape[1], dsz):
+                return NamedSharding(mesh, P(None, axes))
+            return NamedSharding(mesh, P())
+        if shape and _fits(shape[0], dsz):
+            return NamedSharding(mesh, P(axes))
+        # batch too small to split (long_500k B=1): shard sequence over model
+        if len(shape) >= 2 and _fits(shape[1], _mesh_axis(mesh, "model")):
+            return NamedSharding(mesh, P(None, "model"))
+        return NamedSharding(mesh, P())
+
+    return {k: one(k, v) for k, v in batch_specs.items()}
+
+
+def cache_shardings(cache_specs, mesh: Mesh):
+    """Decode-state sharding.
+
+    KV caches [B, L, kv_heads, hd]: batch over (pod, data) when divisible;
+    otherwise (long_500k, B=1) the *sequence* dim shards over "model" —
+    a 524k KV cannot live on one chip.  SSM states [B, H, P, N]: batch over
+    data, heads over model.  Conv windows [B, K, C]: batch over data, C over
+    model.
+    """
+    data_axes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    tp = _mesh_axis(mesh, "model")
+    axes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def one(path, x):
+        if x is None:
+            return None
+        shape = np.shape(x)
+        nd = len(shape)
+        # possible leading stacked-scan dim
+        lead = 1 if "blocks/" in path else 0
+        spec: list[Any] = [None] * nd
+        b_dim = lead
+        if nd > b_dim and _fits(shape[b_dim], dsz):
+            spec[b_dim] = axes
+        if "state" in path and nd >= lead + 4:  # [.., B, H, P, N]
+            if _fits(shape[lead + 1], tp):
+                spec[lead + 1] = "model"
+        elif ("k" in path.split("/")[-1] or "v" in path.split("/")[-1]) and nd >= lead + 4:
+            # KV cache [.., B, L, kv, hd]: flash-decode style — the sequence
+            # dim shards over "model" (softmax over a sharded key range only
+            # all-reduces tiny [B,H,1] stats + [B,1,H,hd] outputs; whereas a
+            # head/hd shard forces full-score reshards and an unsharded cache
+            # round-trips GBs through entry-level all-gathers per token)
+            if _fits(shape[lead + 1], tp):
+                spec[lead + 1] = "model"
+            elif _fits(shape[lead + 2], tp):
+                spec[lead + 2] = "model"  # shard kv heads
+        elif nd >= lead + 3 and _fits(shape[-1], tp):
+            spec[nd - 1] = "model"  # conv channels etc.
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    out = [one(_path_str(path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

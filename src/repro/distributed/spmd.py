@@ -1,0 +1,318 @@
+"""SPMD (pjit) step factories bound to a mesh.
+
+Each factory returns ``(jitted_fn, arg_specs)`` where ``arg_specs`` is the
+ShapeDtypeStruct pytree to ``.lower()`` with — the dry-run path — and the
+jitted function itself is directly runnable with real arrays of the same
+structure (the smoke/e2e path).  Nothing here allocates device memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    replicated,
+    zero3_param_pspecs,
+)
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.optim import Optimizer, make_optimizer
+from repro.training import TrainState, create_train_state, make_train_step
+
+__all__ = [
+    "state_specs_for",
+    "act_anchor_for",
+    "make_spmd_train_step",
+    "make_spmd_prefill",
+    "make_spmd_serve_step",
+]
+
+
+def act_anchor_for(cfg: ModelConfig, mesh: Mesh, batch: int, microbatches: int = 1):
+    """The hidden-stream anchor [B, T, d] for this (cfg, mesh, batch).
+
+    Batch over (pod, data) when the per-microbatch batch divides the data
+    size; otherwise (long_500k, B=1) leave batch unsharded and put the model
+    axis on d when divisible.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsz = 1
+    for a in data_axes:
+        dsz *= mesh.shape[a]
+    per_mb = batch // microbatches
+    dp = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    if dp is not None and dsz > 1 and per_mb % dsz == 0:
+        return cfg.replace(act_sharding=(dp, None, None))
+    tp = mesh.shape.get("model", 1)
+    if tp > 1 and cfg.d_model % tp == 0:
+        return cfg.replace(act_sharding=(None, None, "model"))
+    return cfg
+
+
+def state_specs_for(cfg: ModelConfig, optimizer: Optimizer):
+    """ShapeDtypeStruct pytree of the full TrainState — no allocation."""
+    def build():
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        return create_train_state(params, optimizer)
+
+    return jax.eval_shape(build)
+
+
+def _state_shardings(state_specs, mesh: Mesh):
+    """Optimizer state mirrors its parameter's sharding (same tree shape for
+    AdamW m/v; Adafactor row/col stats inherit the matching prefix dims)."""
+    p_shard = param_shardings(state_specs.params, mesh)
+
+    def like_param(path_shard, stat):
+        # Adafactor v_row/v_col drop one dim; fall back to replication when
+        # the param spec no longer fits the stat's rank.
+        spec = path_shard.spec
+        if len(spec) > len(stat.shape):
+            spec = P(*spec[: len(stat.shape)])
+        try:
+            return NamedSharding(mesh, spec)
+        except Exception:
+            return replicated(mesh)
+
+    import dataclasses
+
+    opt = state_specs.opt_state
+    if hasattr(opt, "m"):  # AdamW: m/v exactly mirror params
+        opt_shard = dataclasses.replace(
+            opt, step=replicated(mesh), m=p_shard, v=p_shard
+        )
+    else:  # Adafactor
+        row = jax.tree_util.tree_map(like_param, p_shard, opt.v_row)
+        col = jax.tree_util.tree_map(like_param, p_shard, opt.v_col)
+        opt_shard = dataclasses.replace(
+            opt, step=replicated(mesh), v_row=row, v_col=col
+        )
+    return TrainState(step=replicated(mesh), params=p_shard, opt_state=opt_shard)
+
+
+def make_spmd_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_specs: Mapping[str, jax.ShapeDtypeStruct],
+    optimizer: Optimizer | None = None,
+    num_microbatches: int = 1,
+    remat: bool = True,
+    gather_params_once: bool = False,
+    strategy: str = "tp_fsdp",
+    remat_blocks: bool = False,
+):
+    """Returns (jitted_step, (state_specs, batch_specs)).
+
+    ``gather_params_once`` (beyond-paper §Perf optimization): cast the fp32
+    master weights to the compute dtype and re-pin them to the TP-only
+    (no-FSDP) layout BEFORE the micro-batch scan.  The ZeRO-3 all-gather
+    then happens once per STEP in bf16 instead of once per micro-batch in
+    fp32; the gradient reduce-scatter back to the FSDP layout is inserted
+    by GSPMD at the optimizer boundary.  Only safe when the gathered bf16
+    weights fit per-device HBM (dense archs at TP=16) — not for the 1T
+    MoEs, whose expert banks stay 2-D sharded either way.
+    """
+    optimizer = optimizer or make_optimizer("adamw")
+
+    batch_size = next(
+        v.shape[0] for k, v in batch_specs.items() if k != "mrope_positions"
+    )
+    if strategy == "zero3":
+        return _make_zero3_train_step(
+            cfg, mesh, batch_specs, optimizer, num_microbatches, remat, batch_size
+        )
+    cfg = act_anchor_for(cfg, mesh, batch_size, num_microbatches)
+    if remat_blocks:
+        # per-block remat bounds saved residuals to block boundaries; the
+        # outer whole-loss checkpoint would hold every block's recompute
+        # residuals at once (observed: 443 GB temp on kimi-k2)
+        cfg = cfg.replace(remat_blocks=True)
+        remat = False
+    state_specs = state_specs_for(cfg, optimizer)
+    st_shard = _state_shardings(state_specs, mesh)
+    b_shard = batch_shardings(dict(batch_specs), mesh)
+    # re-pin the batch sharding inside the micro-batch scan: without this,
+    # GSPMD's propagation can drop the batch split on the scanned slices and
+    # replicate per-microbatch compute across the data axis (observed: 14x
+    # flops inflation on the dry-run roofline)
+    b_pspecs = {k: s.spec for k, s in b_shard.items()}
+
+    def constrained_loss(p, b):
+        b = {
+            k: jax.lax.with_sharding_constraint(v, NamedSharding(mesh, b_pspecs[k]))
+            for k, v in b.items()
+        }
+        return api.loss_fn(p, cfg, b)
+
+    loss = jax.checkpoint(constrained_loss) if remat else constrained_loss
+
+    if gather_params_once:
+        tp_shard = param_shardings(state_specs.params, mesh, fsdp=False)
+
+        def outer_loss(p, b, _loss=loss):
+            p = jax.tree_util.tree_map(
+                lambda w, s: jax.lax.with_sharding_constraint(
+                    w.astype(cfg.dtype)
+                    if (w.dtype == jnp.float32 and w.ndim >= 2)
+                    else w,
+                    s,
+                ),
+                p, tp_shard,
+            )
+            return _loss(p, b)
+
+        loss = outer_loss
+    raw_step = make_train_step(loss, optimizer, num_microbatches=num_microbatches)
+
+    jitted = jax.jit(
+        raw_step,
+        in_shardings=(st_shard, b_shard),
+        out_shardings=(st_shard, None),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_specs, dict(batch_specs))
+
+
+def make_spmd_prefill(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_specs: Mapping[str, jax.ShapeDtypeStruct],
+):
+    """Prefill: forward, last-token logits.  Returns (jitted, (param_specs, batch_specs))."""
+    batch_size = next(
+        v.shape[0] for k, v in batch_specs.items() if k != "mrope_positions"
+    )
+    cfg = act_anchor_for(cfg, mesh, batch_size)
+    param_specs = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = param_shardings(param_specs, mesh, fsdp=False)  # weights stationary
+    b_shard = batch_shardings(dict(batch_specs), mesh)
+
+    fn = functools.partial(api.prefill_fn, cfg=cfg)
+    jitted = jax.jit(
+        lambda params, batch: fn(params, batch=batch),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=None,
+    )
+    return jitted, (param_specs, dict(batch_specs))
+
+
+def make_spmd_serve_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_specs: Mapping[str, jax.ShapeDtypeStruct],
+    kv_len: int,
+):
+    """Decode: one new token against a ``kv_len`` cache.
+
+    Returns (jitted, (param_specs, cache_specs, index_spec, batch_specs)).
+    The cache is donated — decode updates it in place, which is what keeps
+    the 500k-KV shapes inside HBM.
+    """
+    batch_size = next(iter(batch_specs.values())).shape[0]
+    cfg = act_anchor_for(cfg, mesh, batch_size)
+    param_specs = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    cache_specs = api.cache_specs(cfg, batch_size, kv_len)
+    p_shard = param_shardings(param_specs, mesh, fsdp=False)  # weights stationary
+    c_shard = cache_shardings(cache_specs, mesh)
+    b_shard = batch_shardings(dict(batch_specs), mesh)
+
+    def step(params, cache, index, batch):
+        logits, new_cache = api.decode_fn(params, cfg, cache, index, batch)
+        return logits, new_cache
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, c_shard, None, b_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+    index_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (param_specs, cache_specs, index_spec, dict(batch_specs))
+
+
+def _zero3_dp_axes(mesh: Mesh, batch: int, microbatches: int):
+    """Largest mesh-axis suffix/whole the per-microbatch batch divides."""
+    names = tuple(mesh.axis_names)
+    per_mb = batch // microbatches
+    for axes in (names, names[:-1], names[:1]):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if n > 1 and per_mb % n == 0:
+            return axes
+    return ()
+
+
+def _make_zero3_train_step(
+    cfg, mesh, batch_specs, optimizer, num_microbatches, remat, batch_size
+):
+    """Beyond-paper §Perf strategy: pure ZeRO-3 data parallelism.
+
+    Batch over ALL mesh axes, every parameter flat-sharded; layer weights
+    all-gathered in bf16 once per use (GSPMD inserts them at the scan-slice
+    boundary), gradients reduce-scattered once.  Removes TP's per-layer
+    activation all-reduces entirely — the right trade whenever one layer's
+    gathered weights fit HBM next to the activations.
+    """
+    dp_axes = _zero3_dp_axes(mesh, batch_size, num_microbatches)
+    anchor = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    # per-block remat instead of whole-loss checkpointing: checkpointing the
+    # whole forward makes the recompute scan save EVERY block's residuals at
+    # once (observed: 409 GB temp); per-block remat bounds it to one block
+    cfg = cfg.replace(act_sharding=(anchor, None, None), remat_blocks=True)
+    remat = False
+    state_specs = state_specs_for(cfg, optimizer)
+    p_pspecs = zero3_param_pspecs(state_specs.params, mesh)
+    p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_pspecs)
+
+    import dataclasses
+
+    opt = state_specs.opt_state
+    if hasattr(opt, "m"):
+        opt_shard = dataclasses.replace(opt, step=replicated(mesh), m=p_shard, v=p_shard)
+    else:
+        def like(ps, stat):
+            spec = ps.spec
+            if len(spec) > len(stat.shape):
+                spec = type(spec)(*spec[: len(stat.shape)])
+            try:
+                return NamedSharding(mesh, spec)
+            except Exception:
+                return replicated(mesh)
+
+        opt_shard = dataclasses.replace(
+            opt,
+            step=replicated(mesh),
+            v_row=jax.tree_util.tree_map(like, p_shard, opt.v_row),
+            v_col=jax.tree_util.tree_map(like, p_shard, opt.v_col),
+        )
+    st_shard = TrainState(step=replicated(mesh), params=p_shard, opt_state=opt_shard)
+
+    def batch_spec_for(name, x):
+        if name == "mrope_positions":
+            return NamedSharding(mesh, jax.sharding.PartitionSpec(None, anchor))
+        return NamedSharding(mesh, jax.sharding.PartitionSpec(anchor))
+
+    b_shard = {k: batch_spec_for(k, v) for k, v in batch_specs.items()}
+
+    def constrained_loss(p, b):
+        b = {k: jax.lax.with_sharding_constraint(v, b_shard[k]) for k, v in b.items()}
+        return api.loss_fn(p, cfg, b)
+
+    loss = jax.checkpoint(constrained_loss) if remat else constrained_loss
+    raw_step = make_train_step(loss, optimizer, num_microbatches=num_microbatches)
+    jitted = jax.jit(
+        raw_step,
+        in_shardings=(st_shard, b_shard),
+        out_shardings=(st_shard, None),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_specs, dict(batch_specs))

@@ -1,0 +1,151 @@
+"""Pallas TPU flash attention: blocked online-softmax with causal/window masks.
+
+TPU adaptation: grid = (batch·heads, q_blocks, k_blocks) with the k axis as
+the minor (sequential) grid dimension; running max/denominator/accumulator
+live in VMEM scratch across the k sweep (the classic TPU flash pattern —
+grid sequentiality replaces the GPU's intra-CTA loop).  Block shapes are
+MXU-aligned: block_q × block_k tiles of the score matrix, hd lanes.
+
+Sliding-window support masks per-element; fully-masked (q, k) block pairs
+are skipped with ``pl.when`` so a 500k-token windowed sweep does not pay for
+dead tiles (this is what makes windowed long-context prefill sub-quadratic
+in practice).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int | None, block_q: int, block_k: int, kv_len: int
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    # block-level skip: with causal masking a k block strictly after the q
+    # block is dead; with a window a k block entirely before (q_end - window)
+    # is dead too.
+    q_end = q_start + block_q - 1
+    live = True
+    if causal:
+        live = jnp.asarray(k_start <= q_end)
+    else:
+        live = jnp.asarray(True)
+    if window is not None:
+        live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)  # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention_pallas(
+    q, k, v,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q [BH, T, hd]; k, v [BH, S, hd] -> [BH, T, hd] (heads pre-flattened)."""
+    BH, T, hd = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+
+    pad_q = (-T) % block_q
+    pad_k = (-S) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Tp, Sp = T + pad_q, S + pad_k
+    nq, nk = Tp // block_q, Sp // block_k
+
+    kern = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=S,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :T, :]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for blocked (flash) attention.
+
+Plain materialized-softmax attention with causal and sliding-window masking.
+Shapes: q [B, T, H, hd]; k, v [B, S, H, hd] (same head count — GQA repeat
+happens in the caller).  Query positions are aligned to the *end* of the key
+range (q token i sits at absolute position ``i + S - T``), matching both
+full-sequence training (S == T) and windowed decode.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention"]
+
+
+def attention(q, k, v, causal: bool = True, window: int | None = None, scale=None):
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k, preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(T)[:, None] + (S - T)
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the chunked Mamba2 SSD scan.
+
+TPU adaptation (vs. the paper's CUDA kernels): one grid step owns a
+(batch, head, chunk) tile; the chunk axis is the *minor* grid dimension, so
+TPU's sequential grid execution threads the recurrent state through a VMEM
+scratch accumulator (no atomics, no inter-block sync — the TPU grid IS the
+scan).  All tiles live in VMEM via BlockSpecs; the [Q, Q] intra-chunk matrix
+and [P, N] state are MXU-shaped (Q, P, N multiples of 8/128 recommended).
+
+VMEM working set per step ≈ Q·P + 2·Q·N + Q² + P·N floats — e.g.
+Q=128, P=64, N=128: ~45 KiB in fp32, comfortably inside the ~16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_chunked_pallas"]
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scratch):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [Q]
+    A = a_ref[0, 0].astype(jnp.float32)  # scalar
+    Bm = b_ref[0].astype(jnp.float32)  # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)  # [Q, N]
+    Q = x.shape[0]
+
+    a = dt * A  # [Q]
+    cum = jnp.cumsum(a)  # [Q]
+    w = dt[:, None] * x  # [Q, P]
+
+    # intra-chunk: (C B^T ∘ L) @ w
+    cb = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    seg = cum[:, None] - cum[None, :]
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    y = jnp.dot(cb * L, w, preferred_element_type=jnp.float32)  # [Q, P]
+
+    # inter-chunk: C_i . (exp(cum_i) h_in)
+    h_in = h_scratch[...]  # [P, N]
+    y = y + jnp.exp(cum)[:, None] * jnp.dot(Cm, h_in.T, preferred_element_type=jnp.float32)
+
+    # carry update
+    inj_w = jnp.exp(cum[-1] - cum)  # [Q]
+    h_new = jnp.exp(cum[-1]) * h_in + jnp.dot(
+        (w * inj_w[:, None]).T, Bm, preferred_element_type=jnp.float32
+    )
+    h_scratch[...] = h_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk: int = 64, interpret: bool = False):
+    """x [B,T,H,P], dt [B,T,H], A [H], Bm/Cm [B,T,N] -> y [B,T,H,P]."""
+    if Bm.ndim == 4:
+        Bm = Bm[:, :, 0, :]
+        Cm = Cm[:, :, 0, :]
+    B_, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if T % chunk != 0:
+        raise ValueError(f"T={T} % chunk={chunk} != 0")
+    nc = T // chunk
+    A2 = A.reshape(H, 1)
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(B_, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),  # x
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),  # dt
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),  # A
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),  # B
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),  # C
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B_, T, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A2, Bm, Cm)

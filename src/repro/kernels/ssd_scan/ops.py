@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the SSD scan kernel.
+
+On CPU (this container) the Pallas kernel runs in ``interpret=True`` mode for
+validation; models default to the fused jnp reference for speed.  On a real
+TPU backend the compiled kernel is used directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_chunked_pallas
+from repro.kernels.ssd_scan import ref as _ref
+
+__all__ = ["ssd_chunked"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = 64, force_kernel: bool = False):
+    """Dispatch: Pallas kernel on TPU (or forced, in interpret mode elsewhere);
+    jnp chunked reference otherwise."""
+    if _on_tpu():
+        return ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=chunk)
+    if force_kernel:
+        return ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    return _ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)

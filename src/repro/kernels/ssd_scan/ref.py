@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for the Mamba2 SSD scan.
+
+Two implementations:
+
+* :func:`ssd_reference` — strict sequential recurrence (``lax.scan`` over
+  time).  The ground truth everything else is validated against.
+* :func:`ssd_chunked`  — the chunked SSD algorithm (quadratic intra-chunk +
+  linear inter-chunk carry) in plain jnp.  This is what the model runs on
+  CPU and what the Pallas kernel mirrors tile-for-tile.
+
+Shapes (G=1 B/C group, squeezed):
+  x  [B, T, H, P]   weighted-input stream per head
+  dt [B, T, H]      positive step sizes (softplus'd already)
+  A  [H]            negative per-head decay rates
+  Bm [B, T, N] or [B, T, 1, N]
+  Cm [B, T, N] or [B, T, 1, N]
+returns y [B, T, H, P].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_reference", "ssd_chunked"]
+
+
+def _squeeze_group(M):
+    if M.ndim == 4:
+        assert M.shape[2] == 1, "only G=1 supported"
+        return M[:, :, 0, :]
+    return M
+
+
+def ssd_reference(x, dt, A, Bm, Cm, chunk: int | None = None):
+    """Sequential recurrence:  h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T ;
+    y_t = h_t C_t.  All state math in fp32."""
+    del chunk
+    Bm = _squeeze_group(Bm).astype(jnp.float32)
+    Cm = _squeeze_group(Cm).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * A32)  # [B,H]
+        h = h * decay[..., None, None] + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x32, 1, 0),
+        jnp.moveaxis(dt32, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = 64):
+    """Chunked SSD (state-space duality).  Equivalent to ssd_reference.
+
+    Per chunk of length Q (with inclusive in-chunk cumsum ``cum`` of
+    ``a_t = dt_t * A``):
+
+      intra: y_i += sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) (dt_j x_j)
+      inter: y_i += C_i . (exp(cum_i) h_in)
+      carry: h_out = exp(cum_{Q-1}) h_in
+                   + sum_j exp(cum_{Q-1} - cum_j) (dt_j x_j) (x) B_j
+    """
+    Bm = _squeeze_group(Bm).astype(jnp.float32)
+    Cm = _squeeze_group(Cm).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if T % chunk != 0:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    nc, Q = T // chunk, chunk
+
+    xc = x32.reshape(Bsz, nc, Q, H, P)
+    dtc = dt32.reshape(Bsz, nc, Q, H)
+    bc = Bm.reshape(Bsz, nc, Q, N)
+    cc = Cm.reshape(Bsz, nc, Q, N)
+
+    a = dtc * A32  # [B,nc,Q,H]
+    cum = jnp.cumsum(a, axis=2)  # inclusive
+    w = dtc[..., None] * xc  # dt_j * x_j  [B,nc,Q,H,P]
+
+    # intra-chunk:  (C B^T) ∘ L  @ w
+    cb = jnp.einsum("bnqs,bnks->bnqk", cc, bc)  # [B,nc,Q,Q] (q=i, k=j)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # cum_i - cum_j [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    y_intra = jnp.einsum("bnqk,bnqkh,bnkhp->bnqhp", cb, L, w)
+
+    # inter-chunk carry scan
+    decay_full = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+    # per-chunk injected state: sum_j exp(cum_last - cum_j) w_j ⊗ B_j
+    inj_w = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    inj = jnp.einsum("bnqh,bnqhp,bnqs->bnhps", inj_w, w, bc)  # [B,nc,H,P,N]
+
+    def carry_step(h, inputs):
+        dec, add = inputs  # [B,H], [B,H,P,N]
+        h_out = h * dec[..., None, None] + add
+        return h_out, h  # emit the state *entering* the chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, h_in = jax.lax.scan(
+        carry_step, h0, (jnp.moveaxis(decay_full, 1, 0), jnp.moveaxis(inj, 1, 0))
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # [B,nc,H,P,N] state entering each chunk
+
+    y_inter = jnp.einsum("bnqs,bnqh,bnhps->bnqhp", cc, jnp.exp(cum), h_in)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype)

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, and extract the roofline inputs.
+
+For each pair this script:
+  1. builds the step for the shape kind (train_4k → train_step with grad
+     accumulation; prefill_32k → last-token prefill; decode shapes →
+     serve_step against a seq_len KV/state cache);
+  2. ``jax.jit(step, in_shardings=…).lower(*ShapeDtypeStructs)`` —
+     no allocation anywhere;
+  3. ``lowered.compile()`` on the 16×16 single-pod mesh (and, with
+     ``--mesh multi``, the 2×16×16 multi-pod mesh);
+  4. records ``memory_analysis()`` (bytes/device), ``cost_analysis()``
+     (FLOPs, bytes accessed) and the collective wire bytes parsed from the
+     optimized HLO into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCH_IDS, INPUT_SHAPES, get_arch
+from repro.configs.io import input_specs, serving_config
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import active_param_count, param_count
+from repro.optim import make_optimizer
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+# micro-batch count for the train shape: keeps per-microbatch activations at
+# 1 sample/device on the single-pod mesh (256 global / 8 µb / 16 data = 2)
+TRAIN_MICROBATCHES = 8
+
+
+def build_lowerable(arch_id: str, shape_name: str, mesh, variant: str = "baseline"):
+    """Returns (lowered, meta) for one (arch, shape, mesh).
+
+    ``variant`` selects a §Perf configuration: "baseline" (paper-faithful
+    defaults) or "gather_once" (bf16 once-per-step ZeRO-3 gather).
+    """
+    from repro.distributed.spmd import (
+        make_spmd_prefill,
+        make_spmd_serve_step,
+        make_spmd_train_step,
+    )
+
+    spec = get_arch(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    if not spec.supports(shape):
+        return None, {"skipped": True, "reason": spec.notes}
+    cfg = serving_config(spec, shape)
+    batch_specs = input_specs(spec, shape)
+    meta = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "family": spec.family,
+        "optimizer": spec.optimizer,
+        "params_total": param_count(cfg),
+        "params_active": active_param_count(cfg),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    with mesh:
+        if shape.kind == "train":
+            opt = make_optimizer(spec.optimizer)
+            # zero3 runs the batch in ONE shot over all chips (1 sample per
+            # device); microbatching exists to bound activations, which
+            # zero3's full batch split already does
+            n_mb = 1 if variant == "zero3" else TRAIN_MICROBATCHES
+            jitted, (state_specs, b_specs) = make_spmd_train_step(
+                cfg, mesh, batch_specs, optimizer=opt,
+                num_microbatches=n_mb,
+                gather_params_once=(variant == "gather_once"),
+                strategy="zero3" if variant == "zero3" else "tp_fsdp",
+                remat_blocks=(variant in ("moe_grouped", "remat_blocks")),
+            )
+            lowered = jitted.lower(state_specs, b_specs)
+            meta["step_kind"] = "train_step"
+            meta["num_microbatches"] = n_mb
+            meta["variant"] = variant
+        elif shape.kind == "prefill":
+            jitted, (p_specs, b_specs) = make_spmd_prefill(cfg, mesh, batch_specs)
+            lowered = jitted.lower(p_specs, b_specs)
+            meta["step_kind"] = "prefill"
+        else:  # decode
+            jitted, (p_specs, c_specs, i_spec, b_specs) = make_spmd_serve_step(
+                cfg, mesh, batch_specs, kv_len=shape.seq_len
+            )
+            lowered = jitted.lower(p_specs, c_specs, i_spec, b_specs)
+            meta["step_kind"] = "serve_step"
+            meta["long_context_policy"] = spec.long_context
+    return lowered, meta
+
+
+def run_pair(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str, force=False,
+             variant: str = "baseline"):
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip]   {tag} (cached)")
+        return json.load(open(out_path))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        lowered, meta = build_lowerable(arch_id, shape_name, mesh, variant=variant)
+        if lowered is None:
+            record = {"tag": tag, **meta}
+            _write(out_path, record)
+            print(f"[SKIP]   {tag}: documented skip")
+            return record
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older jax returns [dict]
+            cost = cost[0]
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (cost_analysis counts while bodies ONCE;
+        # our scans over layers/micro-batches would be undercounted 8-60x)
+        ana = analyze_hlo(hlo)
+        flops = ana.flops
+        bytes_acc = ana.hbm_bytes
+        terms = roofline_terms(flops, bytes_acc, ana.wire_bytes)
+        tokens = meta["seq_len"] * meta["global_batch"]
+        if meta["step_kind"] == "train_step":
+            model_flops = 6.0 * meta["params_active"] * tokens  # fwd + bwd
+        elif meta["step_kind"] == "prefill":
+            model_flops = 2.0 * meta["params_active"] * tokens  # fwd only
+        else:  # serve_step: one new token per sequence
+            model_flops = 2.0 * meta["params_active"] * meta["global_batch"]
+        record = {
+            "tag": tag,
+            **meta,
+            "mesh": mesh_kind,
+            "chips": chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": flops,
+            "bytes_accessed_per_device": bytes_acc,
+            "collective_wire_bytes_per_device": ana.wire_bytes,
+            "collective_counts": ana.collective_counts,
+            "collective_bytes_by_kind": ana.collective_bytes_by_kind,
+            "dot_count": ana.dot_count,
+            "xla_cost_analysis_raw": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "roofline": terms,
+            "model_flops_total": model_flops,
+            "model_flops_per_device": model_flops / chips,
+            "useful_flops_fraction": (model_flops / chips) / flops if flops else None,
+        }
+        _write(out_path, record)
+        bn = terms["bottleneck"]
+        print(
+            f"[ok]     {tag}: compile {t_compile:.0f}s  "
+            f"compute {terms['compute_s']*1e3:.1f}ms  mem {terms['memory_s']*1e3:.1f}ms  "
+            f"coll {terms['collective_s']*1e3:.1f}ms  -> {bn}"
+        )
+        return record
+    except Exception as e:
+        record = {"tag": tag, "error": f"{type(e).__name__}: {e}"}
+        _write(out_path, record)
+        print(f"[FAIL]   {tag}: {type(e).__name__}: {e}")
+        traceback.print_exc()
+        return record
+
+
+def _write(path, record):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()} — "
+        "XLA_FLAGS must be set before jax init"
+    )
+    archs = ALL_ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_pair(arch, shape, mesh_kind, args.out, force=args.force,
+                               variant=args.variant)
+                failures += 1 if "error" in rec else 0
+    print(f"\ndone; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

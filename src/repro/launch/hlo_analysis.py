@@ -1,0 +1,421 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+``compiled.cost_analysis()`` visits each ``while`` body ONCE — a scan over
+40 layers or 8 micro-batches under-counts flops/bytes by that factor.  So we
+parse the optimized (post-SPMD) HLO text ourselves, trip-count-aware:
+
+* computations are parsed into per-instruction symbol tables;
+* ``while`` bodies are weighted by ``backend_config.known_trip_count``;
+* FLOPs come from ``dot`` ops (2 · |result| · |contracted|) — matmuls
+  dominate every architecture here; elementwise/transcendental flops are
+  noise at transformer scale;
+* HBM bytes are fusion-boundary traffic: per top-level instruction,
+  operand bytes + result bytes (fusions are exactly the units XLA
+  materializes between);
+* collective wire bytes per op kind (ring algorithms, per participating
+  device):
+
+    all-gather          (g-1)/g · result_bytes
+    reduce-scatter      (g-1)   · result_bytes      (input = g · result)
+    all-reduce          2 · (g-1)/g · result_bytes  (RS + AG phases)
+    all-to-all          (g-1)/g · result_bytes
+    collective-permute  result_bytes
+
+  with ``g`` the replica-group size from ``replica_groups``.
+
+Post-SPMD modules are per-device programs, so every number here is
+*per device*; roofline terms divide by per-chip peaks directly.
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = [
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "LINK_BW",
+    "HloAnalysis",
+    "analyze_hlo",
+    "parse_collectives",
+    "roofline_terms",
+]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+) = (.*)$")
+# first `name(` token on the rhs after the result shape is the op; shape
+# text contains no parens ( tuple commas, layout braces, /*index=N*/
+# comments are all paren-free )
+_OP_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:true_computation|false_computation)=%?([\w.\-]+)"
+    r"|branch_computations=\{([^}]*)\}"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# ops that carry no HBM traffic of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result_text: str
+    op: str
+    rest: str  # operand list + attributes
+
+
+def _parse_computations(hlo_text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    current: list[_Instr] | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m and line.endswith("{"):
+                comps[m.group(1)] = current = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OP_RE.search(rhs)
+        if not om:
+            continue
+        current.append(
+            _Instr(name, rhs[: om.start(1)], om.group(1), rhs[om.end(0):])
+        )
+    return comps
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float = 0.0  # dot flops, per device, trip-count-weighted
+    hbm_bytes: float = 0.0  # fusion-boundary traffic, per device
+    wire_bytes: float = 0.0  # collective bytes on the ICI, per device
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    collective_bytes_by_kind: dict = dataclasses.field(default_factory=dict)
+    dot_count: int = 0
+
+    def add_collective(self, kind: str, nbytes: float, mult: float) -> None:
+        self.wire_bytes += nbytes * mult
+        self.collective_counts[kind] = self.collective_counts.get(kind, 0) + mult
+        self.collective_bytes_by_kind[kind] = (
+            self.collective_bytes_by_kind.get(kind, 0.0) + nbytes * mult
+        )
+
+
+class _Analyzer:
+    def __init__(self, comps: dict[str, list[_Instr]]):
+        self.comps = comps
+        self.out = HloAnalysis()
+        # symbol tables: comp -> {instr name -> result_text}
+        self.symbols = {
+            cname: {i.name: i.result_text for i in instrs}
+            for cname, instrs in comps.items()
+        }
+        self._sliced_params: dict[str, dict[int, float]] = {}
+
+    def _operand_names(self, rest: str) -> list[str]:
+        """Ordered operand names (the text before the closing paren)."""
+        depth = 1
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args = rest[:idx] if depth == 0 else rest
+        return _OPERAND_RE.findall(args)
+
+    def _operand_bytes(self, comp: str, rest: str) -> float:
+        table = self.symbols.get(comp, {})
+        return sum(
+            _shapes_bytes(table[n]) for n in self._operand_names(rest) if n in table
+        )
+
+    def _slice_charges(self, fused_comp: str) -> dict[int, float]:
+        """Per-parameter byte charges for a fused computation.
+
+        A parameter whose only users are ``dynamic-slice``/``gather`` ops is
+        charged at the slice result size instead of its full shape — loop
+        bodies dynamic-slicing a stacked [n_layers, ...] or [n_chunks, ...]
+        carry would otherwise be billed the whole stack every iteration.
+        """
+        if fused_comp in self._sliced_params:
+            return self._sliced_params[fused_comp]
+        charges: dict[int, float] = {}
+        instrs = self.comps.get(fused_comp, [])
+        params: dict[str, int] = {}
+        for i in instrs:
+            if i.op == "parameter":
+                m = re.match(r"\s*(\d+)", i.rest)
+                if m:
+                    params[i.name] = int(m.group(1))
+        for pname, pidx in params.items():
+            users = [
+                i for i in instrs
+                if i.op != "parameter" and re.search(rf"%{re.escape(pname)}\b", i.rest)
+            ]
+            if not users:
+                continue
+            if all(i.op in ("dynamic-slice", "gather") for i in users):
+                charges[pidx] = sum(_shapes_bytes(i.result_text) for i in users)
+            elif all(
+                i.op == "dynamic-update-slice"
+                and self._operand_names(i.rest)[:1] == [pname]
+                for i in users
+            ):
+                # the param is only the in-place TARGET of updates; the
+                # touched region is charged via the fusion-result correction
+                charges[pidx] = 0.0
+        self._sliced_params[fused_comp] = charges
+        return charges
+
+    def _fusion_result_bytes(self, fused_comp: str, result_text: str) -> float:
+        """Fusion result charge, correcting in-place dynamic-update-slice:
+        a fusion whose root is a DUS of the same shape as its result writes
+        only the update region, not the whole (aliased) buffer."""
+        full = _shapes_bytes(result_text)
+        res_shape = _first_shape(result_text)
+        table = self.symbols.get(fused_comp, {})
+        for i in self.comps.get(fused_comp, []):
+            if i.op != "dynamic-update-slice":
+                continue
+            if _first_shape(i.result_text) == res_shape:
+                names = self._operand_names(i.rest)
+                if len(names) > 1 and names[1] in table:
+                    return _shapes_bytes(table[names[1]])
+        return full
+
+    def _fusion_bytes(self, comp: str, instr: _Instr) -> float:
+        table = self.symbols.get(comp, {})
+        called = _CALLS_RE.findall(instr.rest)
+        charges = self._slice_charges(called[0]) if called else {}
+        if called:
+            total = self._fusion_result_bytes(called[0], instr.result_text)
+        else:
+            total = _shapes_bytes(instr.result_text)
+        for idx, name in enumerate(self._operand_names(instr.rest)):
+            if name not in table:
+                continue
+            total += charges.get(idx, _shapes_bytes(table[name]))
+        return total
+
+    def _dot_flops(self, comp: str, instr: _Instr) -> float:
+        _, result_dims = _first_shape(instr.result_text)
+        result_elems = 1
+        for d in result_dims:
+            result_elems *= d
+        # contracted size from lhs shape + lhs_contracting_dims
+        m_ops = _OPERAND_RE.findall(instr.rest)
+        contracted = 1
+        if m_ops:
+            lhs_text = self.symbols.get(comp, {}).get(m_ops[0], "")
+            _, lhs_dims = _first_shape(lhs_text)
+            m = _DIMS_RE.search(instr.rest)
+            if m and lhs_dims:
+                for d in m.group(1).split(","):
+                    if d and int(d) < len(lhs_dims):
+                        contracted *= lhs_dims[int(d)]
+        return 2.0 * result_elems * contracted
+
+    def walk(self, comp_name: str, mult: float, flops_only: bool = False) -> None:
+        for instr in self.comps.get(comp_name, []):
+            op = instr.op
+            if op == "while":
+                trips = 1
+                m = _TRIP_RE.search(instr.rest)
+                if m:
+                    trips = int(m.group(1))
+                b = _BODY_RE.search(instr.rest)
+                if b:
+                    self.walk(b.group(1), mult * trips, flops_only)
+                continue
+            if op in ("call", "async-start"):
+                for c in _CALLS_RE.findall(instr.rest):
+                    self.walk(c, mult, flops_only)
+                continue
+            if op == "conditional":
+                # each device executes exactly ONE branch per visit; walking
+                # every branch at full weight is an upper bound, so weight
+                # them 1/n_branches (the engine's fwd/bwd/idle mix averages
+                # out over the tick table)
+                branches: list[str] = []
+                for m in _BRANCHES_RE.finditer(instr.rest):
+                    if m.group(1):
+                        branches.append(m.group(1))
+                    elif m.group(2):
+                        branches += _OPERAND_RE.findall(m.group(2))
+                for c in branches:
+                    self.walk(c, mult / max(len(branches), 1), flops_only)
+                continue
+            if op == "dot":
+                self.out.flops += self._dot_flops(comp_name, instr) * mult
+                self.out.dot_count += 1
+                if not flops_only:
+                    self.out.hbm_bytes += (
+                        self._operand_bytes(comp_name, instr.rest)
+                        + _shapes_bytes(instr.result_text)
+                    ) * mult
+                continue
+            kind = next(
+                (k for k in _COLLECTIVE_KINDS if op == k or op == k + "-start"), None
+            )
+            if kind is not None:
+                result_bytes = _shapes_bytes(instr.result_text)
+                if op.endswith("-start"):  # result is a tuple (operand, result)
+                    result_bytes /= 2.0
+                g = _group_size(instr.rest)
+                if g > 1:
+                    frac = (g - 1) / g
+                    wire = {
+                        "all-gather": frac * result_bytes,
+                        "reduce-scatter": (g - 1) * result_bytes,
+                        "all-reduce": 2.0 * frac * result_bytes,
+                        "all-to-all": frac * result_bytes,
+                        "collective-permute": result_bytes,
+                    }[kind]
+                    self.out.add_collective(kind, wire, mult)
+                if not flops_only:
+                    self.out.hbm_bytes += 2.0 * result_bytes * mult
+                continue
+            if op == "fusion":
+                # fusion boundary = the HBM traffic; dots inside still count
+                if not flops_only:
+                    self.out.hbm_bytes += self._fusion_bytes(comp_name, instr) * mult
+                for c in _CALLS_RE.findall(instr.rest):
+                    self.walk(c, mult, flops_only=True)
+                continue
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            if flops_only:
+                continue
+            # in-place / sparse-access ops: charge the touched REGION, not
+            # the whole buffer (XLA aliases DUS targets; a cache update of
+            # one token must not be billed the full 500k-token cache)
+            if op == "dynamic-update-slice":
+                ops_names = self._operand_names(instr.rest)
+                table = self.symbols.get(comp_name, {})
+                upd = _shapes_bytes(table.get(ops_names[1], "")) if len(ops_names) > 1 else 0.0
+                self.out.hbm_bytes += 2.0 * upd * mult
+                continue
+            if op in ("dynamic-slice", "gather"):
+                self.out.hbm_bytes += 2.0 * _shapes_bytes(instr.result_text) * mult
+                continue
+            if op in ("scatter", "scatter-add"):
+                ops_names = self._operand_names(instr.rest)
+                table = self.symbols.get(comp_name, {})
+                upd = _shapes_bytes(table.get(ops_names[-1], "")) if ops_names else 0.0
+                self.out.hbm_bytes += 2.0 * upd * mult
+                continue
+            # remaining top-level ops (sort, custom-call, copy, transpose,
+            # reduce, ...) move their operands + result
+            self.out.hbm_bytes += (
+                self._operand_bytes(comp_name, instr.rest)
+                + _shapes_bytes(instr.result_text)
+            ) * mult
+
+
+def analyze_hlo(hlo_text: str, entry: str | None = None) -> HloAnalysis:
+    comps = _parse_computations(hlo_text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+    analyzer = _Analyzer(comps)
+    analyzer.walk(entry, 1.0)
+    return analyzer.out
+
+
+def parse_collectives(hlo_text: str) -> HloAnalysis:
+    """Back-compat alias: full analysis (collective fields populated)."""
+    return analyze_hlo(hlo_text)
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    wire_bytes: float,
+    peak_flops: float = PEAK_FLOPS,
+    hbm_bw: float = HBM_BW,
+    link_bw: float = LINK_BW,
+) -> dict:
+    """The three roofline terms in seconds (all inputs are per-device)."""
+    terms = {
+        "compute_s": flops / peak_flops,
+        "memory_s": hbm_bytes / hbm_bw,
+        "collective_s": wire_bytes / link_bw,
+    }
+    terms["bottleneck"] = max(terms, key=terms.get).removesuffix("_s")
+    return terms

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked on first jax init — the dry-run sets
+``xla_force_host_platform_device_count=512`` before any import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "CHIPS_PER_POD", "NUM_PODS"]
+
+CHIPS_PER_POD = 256  # 16 x 16 TPU v5e pod
+NUM_PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (data, model) or 2×16×16 (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

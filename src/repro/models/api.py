@@ -1,0 +1,111 @@
+"""Uniform model API over all architecture families.
+
+Every family exposes the same four entry points, keyed off a batch *dict*
+(so jit/pjit and ShapeDtypeStruct dry-runs treat all architectures
+identically):
+
+* ``init_params(key, cfg)``
+* ``loss_fn(params, cfg, batch) -> (loss, metrics)``  — train/prefill
+* ``init_cache(cfg, batch, max_len)``                 — decode state
+* ``decode_fn(params, cfg, cache, index, batch) -> (logits, cache)``
+
+Batch keys by family:
+  text (dense/moe/ssm/hybrid): tokens [B,T], labels [B,T]
+  vlm:    embeds [B,T,d], labels [B,T], mrope_positions [3,B,T]
+  encdec: src_embeds [B,S,d], tgt_tokens [B,T], labels [B,T]
+Decode batches carry ``tokens`` [B,1] (all families) plus ``memory``
+[B,S,d] for enc-dec.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig
+
+__all__ = [
+    "init_params",
+    "loss_fn",
+    "forward_fn",
+    "init_cache",
+    "cache_specs",
+    "decode_fn",
+]
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return tf.init_encdec(key, cfg)
+    return tf.init_decoder(key, cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Mapping[str, jax.Array]):
+    if cfg.family == "encdec":
+        return tf.encdec_loss(
+            params, cfg, batch["src_embeds"], batch["tgt_tokens"], batch["labels"]
+        )
+    if cfg.family == "vlm":
+        return tf.decoder_loss(
+            params,
+            cfg,
+            labels=batch["labels"],
+            embeds=batch["embeds"],
+            mrope_positions=batch.get("mrope_positions"),
+        )
+    return tf.decoder_loss(params, cfg, batch["tokens"], labels=batch["labels"])
+
+
+def forward_fn(params, cfg: ModelConfig, batch: Mapping[str, jax.Array]):
+    if cfg.family == "encdec":
+        return tf.encdec_forward(params, cfg, batch["src_embeds"], batch["tgt_tokens"])
+    if cfg.family == "vlm":
+        return tf.decoder_forward(
+            params, cfg, embeds=batch["embeds"],
+            mrope_positions=batch.get("mrope_positions"),
+        )
+    return tf.decoder_forward(params, cfg, batch["tokens"])
+
+
+def prefill_fn(params, cfg: ModelConfig, batch: Mapping[str, jax.Array]):
+    """Inference prefill: full-sequence forward, last-position logits only.
+
+    Avoids materializing [B, T, V] logits — the serving-path contract the
+    ``prefill_32k`` dry-run shape lowers.
+    """
+    if cfg.family == "encdec":
+        logits, _ = tf.encdec_forward(
+            params, cfg, batch["src_embeds"], batch["tgt_tokens"], last_only=True
+        )
+        return logits
+    if cfg.family == "vlm":
+        logits, _ = tf.decoder_forward(
+            params, cfg, embeds=batch["embeds"],
+            mrope_positions=batch.get("mrope_positions"), last_only=True,
+        )
+        return logits
+    logits, _ = tf.decoder_forward(params, cfg, batch["tokens"], last_only=True)
+    return logits
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    if cfg.family == "encdec":
+        return tf.init_encdec_cache(cfg, batch_size, max_len)
+    return tf.init_decode_cache(cfg, batch_size, max_len)
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_len: int):
+    """ShapeDtypeStruct pytree of the decode cache — no allocation."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch_size, max_len))
+
+
+def decode_fn(params, cfg: ModelConfig, cache, index, batch: Mapping[str, jax.Array]):
+    if cfg.family == "encdec":
+        logits, new_cache = tf.encdec_decode_step(
+            params, cfg, cache, index, batch["tokens"], batch["memory"]
+        )
+        return logits, new_cache
+    return tf.decode_step(params, cfg, cache, index, tokens=batch["tokens"])

@@ -1,0 +1,239 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based sorted dispatch.
+
+TPU-native formulation: tokens are routed with a fixed per-expert capacity
+``C = ceil(T * top_k / E) * capacity_factor`` and gathered into a dense
+``[E, C, d]`` buffer via an argsort-based dispatch (no per-token python, no
+[T, E, C] one-hot blow-up).  Expert FFNs run as one batched einsum over the
+expert dimension, which shards cleanly over the mesh "model" axis (expert
+parallelism — XLA inserts the all-to-all).  Overflowing tokens are dropped
+(standard GShard/Switch semantics); the router carries an auxiliary
+load-balance loss and router z-loss.
+
+FLOPs scale with *active* parameters (top_k experts per token), which keeps
+the compiled roofline honest for kimi-k2 (384 experts, top-8) and
+llama4-maverick (128 experts, top-1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import dense_init, mlp, mlp_init
+
+__all__ = ["moe_init", "moe_apply", "moe_apply_grouped", "router_topk"]
+
+
+def moe_init(key, cfg: ModelConfig):
+    E = cfg.num_experts
+    ks = jax.random.split(key, 4)
+    d, ff = cfg.d_model, cfg.expert_ff
+
+    def expert_bank(k):
+        kk = jax.random.split(k, 3)
+        scale = 1.0 / jnp.sqrt(d)
+        return {
+            "gate": jax.random.normal(kk[0], (E, d, ff), cfg.param_dtype) * scale,
+            "up": jax.random.normal(kk[1], (E, d, ff), cfg.param_dtype) * scale,
+            "down": jax.random.normal(kk[2], (E, ff, d), cfg.param_dtype) * (1.0 / jnp.sqrt(ff)),
+        }
+
+    p = {
+        "router": dense_init(ks[0], d, E, cfg),
+        "experts": expert_bank(ks[1]),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[2], cfg, d_ff=ff * cfg.n_shared_experts)
+    return p
+
+
+def router_topk(cfg: ModelConfig, logits):
+    """Top-k routing weights.  Returns (weights [T,k], idx [T,k], aux metrics)."""
+    k = cfg.num_experts_per_tok
+    if cfg.router_scoring == "sigmoid":  # kimi-k2 style
+        scores = jax.nn.sigmoid(logits.astype(jnp.float32))
+        w, idx = jax.lax.top_k(scores, k)
+        w = w / jnp.clip(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.clip(jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / jnp.clip(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return w, idx, probs
+
+
+def _load_balance_loss(cfg: ModelConfig, probs, idx):
+    """Switch-style aux loss: E * <fraction routed to e> . <mean prob of e>."""
+    E = cfg.num_experts
+    counts = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+    frac = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    mean_prob = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac * mean_prob)
+
+
+def moe_apply_grouped(p, x, cfg: ModelConfig, capacity_factor: float | None = None):
+    """Distributed MoE: per-group dispatch + expert-parallel compute.
+
+    x: [G, S, d] with the group dim G sharded over the data axes (the
+    micro-batch's batch dim, which already is).  Each group routes and
+    packs its own [E, C_loc, d] buffer LOCALLY (argsort dispatch vmapped
+    over G); the buffer's expert dim is then pinned to the "model" axis —
+    a local slice, no communication — so the expert einsums contract with
+    locally-resident full-width expert blocks (their storage stays FSDP
+    over "data"; GSPMD gathers one layer's E/16-slice per use).  The
+    combine scatters each model column's partial token outputs and
+    all-reduces the SMALL [G, S, d] hidden — not the [E, C, d] buffer.
+
+    Why: naive flat dispatch against 2-D-sharded expert weights makes
+    GSPMD all-reduce [E, C_global, ff] partials over "data" per layer —
+    observed 95 TB/device/step on kimi-k2 (collective term 2,247 s).  The
+    grouped form replaces that with ~2 GB of expert-weight all-gather and
+    ~0.5 GB of hidden all-reduce per MoE layer per micro-batch.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    G, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    C = max(int((S * k * cf) // E) + 1, 1)
+    dp = cfg.act_sharding[0] if cfg.act_sharding else None
+    ep_ok = dp is not None and cfg.num_experts % 1 == 0
+
+    def pin(t, spec):
+        if dp is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+
+    logits = jnp.einsum(
+        "gsd,de->gse", x.astype(jnp.float32), p["router"]["w"].astype(jnp.float32)
+    )
+    w, idx, probs = router_topk(cfg, logits)  # [G,S,k]
+
+    def slots_one(idxg, wg):
+        """The INVERSE routing map: for every (expert, capacity-slot) pair,
+        which token fills it (+ its gate weight / validity).
+
+        Both dispatch and combine then index the UNSHARDED token dim
+        (gather x[slot_tok]; scatter-add y at slot_tok), so each EP column
+        works purely on its local E-slice and GSPMD only has to sum tiny
+        [S, d] partials.  Indexing the E-sharded dim instead (destination-
+        indexed scatter / gather) makes its transpose replicate the whole
+        [E, C, d] buffer (observed: 45 TB of backward all-reduce/gather).
+        """
+        flat_e = idxg.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(S), k)
+        flat_w = wg.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        pos = jnp.arange(S * k)
+        seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+        rank = pos - seg_start[se]
+        keep = rank < C
+        e_idx = jnp.where(keep, se, 0)
+        c_idx = jnp.where(keep, rank, 0)
+        slot_tok = jnp.zeros((E, C), jnp.int32).at[e_idx, c_idx].set(
+            st.astype(jnp.int32), mode="drop"
+        )
+        slot_w = jnp.zeros((E, C), jnp.float32).at[e_idx, c_idx].set(
+            jnp.where(keep, sw, 0.0), mode="drop"
+        )
+        slot_valid = jnp.zeros((E, C), bool).at[e_idx, c_idx].set(keep, mode="drop")
+        return slot_tok, slot_w, slot_valid, keep
+
+    slot_tok, slot_w, slot_valid, keep = jax.vmap(slots_one)(idx, w)  # [G,E,C]
+    slot_tok = pin(slot_tok, (dp, "model", None))
+    slot_w = pin(slot_w, (dp, "model", None))
+    slot_valid = pin(slot_valid, (dp, "model", None))
+
+    def dispatch_one(xg, tok_g, valid_g):
+        return jnp.where(valid_g[..., None], xg[tok_g], 0.0).astype(x.dtype)
+
+    buf = jax.vmap(dispatch_one)(x, slot_tok, slot_valid)  # [G,E,C,d]
+    buf = pin(buf, (dp, "model", None, None))  # local slice onto the EP columns
+
+    ex = p["experts"]
+    dt = cfg.dtype
+    # gather this layer's E/16-slice of the expert bank over "data" at use
+    # (storage stays FSDP over data); without this pin the einsums contract
+    # a d-sharded weight and GSPMD all-reduces [G,E,C,ff] partials instead
+    w_gate = pin(ex["gate"].astype(dt), ("model", None, None))
+    w_up = pin(ex["up"].astype(dt), ("model", None, None))
+    w_down = pin(ex["down"].astype(dt), ("model", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf.astype(dt), w_gate))
+    h = h * jnp.einsum("gecd,edf->gecf", buf.astype(dt), w_up)
+    h = pin(h, (dp, "model", None, None))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, w_down)
+    out_buf = pin(out_buf, (dp, "model", None, None))
+
+    def combine_one(out_g, tok_g, w_g, valid_g):
+        upd = out_g * jnp.where(valid_g, w_g, 0.0)[..., None].astype(dt)
+        return jnp.zeros((S, d), dt).at[tok_g.reshape(-1)].add(
+            upd.reshape(E * C, d)
+        )
+
+    y = jax.vmap(combine_one)(out_buf, slot_tok, slot_w, slot_valid)
+    y = pin(y, (dp, None, None))  # GSPMD sums the per-column partials here
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+
+    aux = {
+        "load_balance": _load_balance_loss(
+            cfg, probs.reshape(-1, E), idx.reshape(-1, k)
+        ),
+        "router_z": jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1))),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, capacity_factor: float | None = None):
+    """x: [T, d] (already flattened).  Returns (y [T, d], aux_losses dict)."""
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    C = max(int((T * k * cf) // E) + 1, 1)
+
+    logits = x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)  # [T, E]
+    w, idx, probs = router_topk(cfg, logits)  # [T,k]
+
+    # ---- sorted dispatch: flatten (token, slot) pairs, rank within expert ----
+    flat_e = idx.reshape(-1)  # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), k)  # [T*k]
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)  # group by expert
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank of each entry within its expert group
+    pos = jnp.arange(T * k)
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")  # [E]
+    rank = pos - seg_start[se]
+    keep = rank < C
+    # scatter tokens into the [E, C, d] expert buffer (dropped tokens skipped)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    e_idx = jnp.where(keep, se, 0)
+    c_idx = jnp.where(keep, rank, 0)
+    src = jnp.where(keep[:, None], x[st], 0.0)
+    buf = buf.at[e_idx, c_idx].add(src.astype(x.dtype), mode="drop")
+
+    # ---- expert FFN (batched over E; shards over the expert/model axis) ----
+    ex = p["experts"]
+    dt = cfg.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf.astype(dt), ex["gate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf.astype(dt), ex["up"].astype(dt))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, ex["down"].astype(dt))  # [E, C, d]
+
+    # ---- combine: gather back and weight ----
+    gathered = out_buf[e_idx, c_idx]  # [T*k, d]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    y = jnp.zeros((T, d), dt).at[st].add(gathered * sw[:, None].astype(dt))
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+
+    aux = {
+        "load_balance": _load_balance_loss(cfg, probs, idx),
+        "router_z": jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1))),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

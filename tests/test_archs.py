@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step and
+one decode step on CPU, asserting shapes and no NaNs (brief deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCH_IDS, INPUT_SHAPES, get_arch
+from repro.configs.io import input_specs, make_batch, serving_config
+from repro.models import api
+from repro.models.common import active_param_count, param_count
+from repro.optim import make_optimizer
+from repro.training import create_train_state, make_train_step
+
+B, T = 2, 32
+
+
+@pytest.fixture(scope="module", params=ALL_ARCH_IDS)
+def arch(request):
+    return get_arch(request.param)
+
+
+def test_smoke_constraints(arch):
+    """Reduced variants respect the brief: <=2 layers, d_model<=512, <=4 experts."""
+    cfg = arch.smoke
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+def test_forward_and_train_step(arch):
+    cfg = arch.smoke
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B, T)
+    logits, aux = api.forward_fn(params, cfg, batch)
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    opt = make_optimizer(arch.optimizer)
+    state = create_train_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, b: api.loss_fn(p, cfg, b), opt))
+    state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert int(state.step) == 1
+
+
+def test_decode_step(arch):
+    cfg = arch.smoke
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    cache = api.init_cache(cfg, B, max_len=64)
+    db = make_batch(cfg, B, T, kind="decode")
+    logits, new_cache = api.decode_fn(params, cfg, cache, 0, db)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(new_cache)
+
+
+def test_prefill_last_only(arch):
+    cfg = arch.smoke
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B, T)
+    logits = api.prefill_fn(params, cfg, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyper-parameters."""
+    expected = {
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163_840, 384, 8),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 202_048, 128, 1),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 256_206, 0, 0),
+        "qwen2.5-14b": (48, 5120, 40, 8, 152_064, 0, 0),
+        "internlm2-20b": (48, 6144, 48, 8, 92_544, 0, 0),
+        "gemma3-12b": (48, 3840, 16, 8, 262_144, 0, 0),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 151_936, 0, 0),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 65_536, 16, 2),
+        "qwen1.5-4b": (40, 2560, 20, 20, 151_936, 0, 0),
+        "mamba2-780m": (48, 1536, 0, 0, 50_280, 0, 0),
+    }[arch.arch_id]
+    cfg = arch.model
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.vocab_size, cfg.num_experts, cfg.num_experts_per_tok)
+    assert got == expected
+
+
+def test_param_counts_in_band(arch):
+    """Total parameter counts land near the names' advertised sizes."""
+    bands = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "llama4-maverick-400b-a17b": (3.5e11, 4.5e11),
+        "seamless-m4t-medium": (4e8, 1.5e9),
+        "qwen2.5-14b": (1.2e10, 1.7e10),
+        "internlm2-20b": (1.7e10, 2.3e10),
+        "gemma3-12b": (0.9e10, 1.4e10),
+        "qwen2-vl-2b": (1.2e9, 2.5e9),
+        "jamba-v0.1-52b": (4.5e10, 6e10),
+        "qwen1.5-4b": (3e9, 5e9),
+        "mamba2-780m": (6e8, 1e9),
+    }[arch.arch_id]
+    n = param_count(arch.model)
+    assert bands[0] <= n <= bands[1], f"{arch.arch_id}: {n:.3e}"
+    assert active_param_count(arch.model) <= n
+
+
+def test_input_specs_cover_all_shapes(arch):
+    for shape in INPUT_SHAPES.values():
+        if not arch.supports(shape):
+            assert shape.name == "long_500k"  # only documented skips
+            continue
+        specs = input_specs(arch, shape)
+        assert specs, f"{arch.arch_id} x {shape.name}: empty specs"
+        for v in specs.values():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+        cfg = serving_config(arch, shape)
+        if shape.name == "long_500k" and arch.long_context == "windowed":
+            assert cfg.attn_window == arch.long_window

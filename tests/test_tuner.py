@@ -1,0 +1,100 @@
+"""Cost model + online tuner (§4.3, §5.4) behaviour."""
+
+import pytest
+
+from repro.core import (
+    AutoTuner,
+    Coordinator,
+    CostModel,
+    MemoryModel,
+    Network,
+    NetworkProfiler,
+    RegimeTrace,
+    StableTrace,
+    StageCosts,
+    enumerate_candidates,
+    simulate_plan,
+    uniform_network,
+)
+
+
+def _setup(S=4, B=32, bw=2.0):
+    mm = MemoryModel.uniform(
+        num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+    cands = enumerate_candidates(S, B, mm, 1e8, max_k=4)
+    costs_by_b = {}
+
+    def stage_costs_for(cand):
+        if cand.micro_batch_size not in costs_by_b:
+            costs_by_b[cand.micro_batch_size] = StageCosts.uniform(
+                S, 0.1 * cand.micro_batch_size, act_bytes=float(cand.micro_batch_size)
+            )
+        return costs_by_b[cand.micro_batch_size]
+
+    return cands, stage_costs_for
+
+
+def test_cost_model_equals_simulator_under_frozen_bw():
+    cands, costs_for = _setup()
+    cand = cands[0]
+    bw = {k: 2.0 for s in range(3) for k in [(s, s + 1), (s + 1, s)]}
+    cm = CostModel()
+    est = cm.estimate(cand.plan, costs_for(cand), bw)
+    net = uniform_network(4, lambda: StableTrace(2.0))
+    sim = simulate_plan(cand.plan, costs_for(cand), net).pipeline_length
+    assert est == pytest.approx(sim, rel=1e-9)
+
+
+def test_tuner_prefers_larger_k_when_network_slow():
+    cands, costs_for = _setup()
+    slow = uniform_network(4, lambda: StableTrace(1.0))
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(slow))
+    rec = tuner.tune(now=0.0)
+    assert rec.chosen_k > 1
+
+
+def test_tuner_tracks_regime_change():
+    """Fig 10: when preemption eases, the tuner may step k back down; when
+    it returns, k goes back up.  We assert the chosen plan is always the
+    argmin of its own estimates, and that estimates differ across regimes."""
+    cands, costs_for = _setup()
+    regime = RegimeTrace(
+        breakpoints=[100.0, 200.0],
+        traces=[StableTrace(0.5), StableTrace(1e9), StableTrace(0.5)],
+    )
+    net = Network(default=regime)
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net, window=1))
+    recs = [tuner.tune(t) for t in (0.0, 150.0, 250.0)]
+    for rec in recs:
+        assert rec.estimates[rec.chosen] == min(rec.estimates.values())
+    # preempted regimes must prefer grouping (k > 1); the re-preempted
+    # regime's estimates must be strictly worse than the exclusive one's
+    # (the paper notes improvement is NOT monotone in k, so we do not
+    # assert k ordering between regimes — only that tuning tracks them)
+    assert recs[0].chosen_k > 1 and recs[2].chosen_k > 1
+    assert min(recs[2].estimates.values()) > min(recs[1].estimates.values())
+
+
+def test_coordinator_switches_and_improves():
+    cands, costs_for = _setup()
+    net = uniform_network(4, lambda: StableTrace(1.0))
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net))
+    coord = Coordinator(tuner, net, global_batch=32, tuning_interval=1e9)
+    summary = coord.run(5)
+    assert len(summary.iterations) == 5
+    assert summary.tuning and summary.tuning[0].chosen_k > 1
+    # compare against never tuning (fixed 1F1B)
+    fixed = simulate_plan(cands[0].plan, costs_for(cands[0]), net).pipeline_length
+    assert summary.iterations[0].length <= fixed
+
+
+def test_profiler_moving_average_window():
+    net = uniform_network(2, lambda: StableTrace(10.0))
+    prof = NetworkProfiler(net, window=4)
+    for _ in range(8):
+        prof.measure(0, 1, 100.0, now=0.0, probes=1)
+    assert prof.effective_time(0, 1, 100.0) == pytest.approx(10.0)
+    assert prof.effective_bandwidth(0, 1, 100.0) == pytest.approx(10.0)

@@ -1,0 +1,37 @@
+"""ASCII visualization sanity (also a readable spec of the schedules)."""
+
+from repro.core import StableTrace, StageCosts, make_plan, simulate_plan, uniform_network
+from repro.core.simulator import PipelineSimulator
+from repro.core.taskgraph import build_task_graph
+from repro.core.viz import render_sim_timeline, render_tick_table
+
+
+def test_render_1f1b_shape():
+    out = render_tick_table(make_plan(2, 4, 1))
+    lines = out.splitlines()
+    assert lines[0].startswith("1F1B")
+    assert len(lines) == 3
+    # last stage of 1F1B strictly alternates F B F B ...
+    cells = lines[2].split("|")[1].split()
+    nonidle = [c for c in cells if c != ".."]
+    assert [c[0] for c in nonidle] == ["F", "B"] * 4
+
+
+def test_render_kfkb_grouping_visible():
+    out = render_tick_table(make_plan(2, 4, 2))
+    cells = out.splitlines()[2].split("|")[1].split()
+    nonidle = [c[0] for c in cells if c != ".."]
+    assert nonidle == ["F", "F", "B", "B"] * 2  # 2F2B alternation
+
+
+def test_render_sim_timeline_runs():
+    plan = make_plan(4, 8, 2)
+    costs = StageCosts.uniform(4, 1.0, act_bytes=1.0)
+    net = uniform_network(4, lambda: StableTrace(2.0))
+    graph = build_task_graph(plan, costs)
+    res = PipelineSimulator(graph, net).run()
+    out = render_sim_timeline(graph, res, width=80)
+    lines = out.splitlines()
+    assert len(lines) == 5
+    assert all("busy" in l for l in lines[:4])
+    assert "F" in lines[0] and "B" in lines[0]
