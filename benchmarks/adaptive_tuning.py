@@ -23,11 +23,9 @@ from repro.core import (
     BurstyTrace,
     Candidate,
     Coordinator,
-    MemoryModel,
     Network,
     NetworkProfiler,
     RegimeTrace,
-    StableTrace,
     make_plan,
 )
 

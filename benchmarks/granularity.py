@@ -13,8 +13,6 @@ across busy rounds; gains saturate by k≈3.
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import efficiency, markdown_table, save_result
 from repro.configs.gpt import GPT_CONFIGS, gpt_stage_costs
 from repro.core import (

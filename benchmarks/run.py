@@ -12,16 +12,59 @@ Runs one benchmark per paper table/figure plus the roofline report:
 
 Results land in experiments/results/*.json; each module also asserts the
 paper's qualitative claims so this doubles as an integration gate.
+
+``--dry-run`` (the CI smoke) imports every suite module and exercises one
+tiny simulation per schedule kind instead of the full sweeps.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
 
+# self-locating: `python benchmarks/run.py` works from any cwd without
+# PYTHONPATH gymnastics (repo root for the benchmarks package, src for repro)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def dry_run() -> int:
+    """CI smoke: every suite module imports, every schedule kind simulates."""
+    from benchmarks import (  # noqa: F401 - import is the smoke
+        adaptive_tuning,
+        granularity,
+        pipeline_length,
+        roofline,
+        strong_scaling,
+        weak_scaling,
+    )
+    from repro.core import StableTrace, StageCosts, simulate_plan, uniform_network
+    from repro.core.schedule import make_plan
+
+    S, M = 4, 8
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(S, lambda: StableTrace(4.0))
+    for kind, k, v in [
+        ("kfkb", 1, 1),
+        ("kfkb", 2, 1),
+        ("zb_h1", 1, 1),
+        ("interleaved", 1, 2),
+    ]:
+        plan = make_plan(S, M, k, kind=kind, num_virtual=v)
+        res = simulate_plan(plan, costs, net)
+        print(f"[dry-run] {plan.name:20s} length={res.pipeline_length:7.2f} "
+              f"bubble={res.bubble_fraction:.3f}")
+    print("[dry-run] all benchmark modules import; schedule family simulates OK")
+    return 0
+
 
 def main() -> int:
+    if "--dry-run" in sys.argv[1:]:
+        return dry_run()
     from benchmarks import (
         adaptive_tuning,
         granularity,

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable
 
 from repro.models.common import ModelConfig
 

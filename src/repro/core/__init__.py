@@ -24,8 +24,12 @@ from repro.core.network import (
 from repro.core.profiler import ComputeProfiler, MovingAverage, NetworkProfiler
 from repro.core.schedule import (
     Op,
+    PLAN_KINDS,
+    PlanEdge,
     SchedulePlan,
+    TabularPlan,
     Task,
+    lower_to_table,
     make_plan,
     peak_live_activations,
     tick_table,
@@ -56,8 +60,12 @@ __all__ = [
     "MovingAverage",
     "NetworkProfiler",
     "Op",
+    "PLAN_KINDS",
+    "PlanEdge",
     "SchedulePlan",
+    "TabularPlan",
     "Task",
+    "lower_to_table",
     "make_plan",
     "peak_live_activations",
     "tick_table",

@@ -1,25 +1,29 @@
-"""§4.2 candidate enumeration: the memory-limit (Pareto) curve over (k, b).
+"""§4.2 candidate enumeration: the memory-limit (Pareto) curve over (kind, k, b).
 
-With a fixed global batch ``B``, a plan is identified by the group count
-``k`` and micro-batch size ``b`` (``M = B / b`` micro-batches, ``k | M``).
-Feasible combinations lie under the memory-limit curve; interior points
+With a fixed global batch ``B``, a plan is identified by its schedule
+``kind`` (kFkB, zero-bubble, interleaved), the group count ``k`` and
+micro-batch size ``b`` (``M = B / b`` micro-batches, ``k | M``).  Feasible
+combinations lie under the memory-limit curve; interior points
 under-utilize device memory (point *A* of Fig 3) and points above it OOM
-(point *B*).  Only curve points (like *C*) are kept: for each ``k`` from 1
-upwards, greedily take the **largest** feasible ``b``.
+(point *B*).  Only curve points (like *C*) are kept: for each (kind, k)
+from 1 upwards, greedily take the **largest** feasible ``b``.
 
-Duplicated (k, b) never arise (b is a function of k on the curve), but two
-k values can map to the same b when memory is activation-light; both are
-kept — they are genuinely different schedules with different overlap
-behaviour.
+Duplicated (kind, k, b) never arise (b is a function of (kind, k) on the
+curve), but two k values can map to the same b when memory is
+activation-light; both are kept — they are genuinely different schedules
+with different overlap behaviour.  Schedule kinds beyond kFkB are opt-in
+via ``kinds=`` so the paper's original (k, b)-only search stays the
+default; passing e.g. ``kinds=("kfkb", "zb_h1")`` lets the adaptive loop
+switch schedule *kind* under preemption, not just ``k``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 from repro.core.memory_model import MemoryModel
-from repro.core.schedule import SchedulePlan, make_plan
+from repro.core.schedule import PLAN_KINDS, SchedulePlan, make_plan
 
 __all__ = ["Candidate", "enumerate_candidates", "divisors"]
 
@@ -36,10 +40,35 @@ class Candidate:
     def name(self) -> str:
         return self.plan.name
 
+    @property
+    def kind(self) -> str:
+        return self.plan.kind
+
+    @property
+    def num_virtual(self) -> int:
+        return self.plan.num_virtual
+
 
 def divisors(n: int) -> list[int]:
     out = [d for d in range(1, n + 1) if n % d == 0]
     return out
+
+
+def _build(
+    plan_factory: Callable[..., SchedulePlan],
+    num_stages: int,
+    M: int,
+    k: int,
+    b: int,
+    kind: str,
+    num_virtual: int,
+) -> SchedulePlan:
+    if kind == "kfkb" and num_virtual == 1:
+        # the paper's original search path — keep legacy factories working
+        return plan_factory(num_stages, M, k, micro_batch_size=b)
+    return plan_factory(
+        num_stages, M, k, micro_batch_size=b, kind=kind, num_virtual=num_virtual
+    )
 
 
 def enumerate_candidates(
@@ -50,29 +79,46 @@ def enumerate_candidates(
     max_k: int | None = None,
     min_microbatches: int | None = None,
     plan_factory: Callable[..., SchedulePlan] = make_plan,
+    kinds: Sequence[str] = ("kfkb",),
+    virtual_degrees: Sequence[int] = (2,),
 ) -> list[Candidate]:
     """Enumerate the memory-limit-curve candidates.
 
     ``min_microbatches`` (default: ``num_stages``) rejects plans that cannot
     even fill the pipeline once — the paper always injects at least one
-    micro-batch per stage.
+    micro-batch per stage.  ``kinds`` selects the schedule families searched
+    (one curve point per (kind, k), plus one per (k, v) for interleaved
+    kinds, with ``virtual_degrees`` listing the chunk counts tried);
+    infeasible combinations (e.g. interleaved divisibility) are skipped
+    silently.
     """
     if min_microbatches is None:
         min_microbatches = num_stages
+    known = PLAN_KINDS + ("1f1b", "gpipe")
+    for kind in kinds:
+        if kind not in known:  # fail loudly — the except below is only for
+            # per-(k, b) infeasibility, not misconfiguration
+            raise ValueError(f"unknown schedule kind {kind!r}; expected one of {known}")
     out: list[Candidate] = []
     ks = range(1, (max_k or global_batch) + 1)
-    for k in ks:
-        best: Candidate | None = None
-        # largest feasible b for this k (greedy, walking b downwards)
-        for b in sorted(divisors(global_batch), reverse=True):
-            M = global_batch // b
-            if M % k != 0 or M < min_microbatches:
-                continue
-            plan = plan_factory(num_stages, M, k, micro_batch_size=b)
-            peak = memory_model.peak_bytes(plan)
-            if peak <= memory_limit_bytes:
-                best = Candidate(k, b, M, plan, peak)
-                break  # first (largest) feasible b — the curve point
-        if best is not None:
-            out.append(best)
+    for kind in kinds:
+        vs = tuple(virtual_degrees) if kind == "interleaved" else (1,)
+        for v in vs:
+            for k in ks:
+                best: Candidate | None = None
+                # largest feasible b for this (kind, k, v), walking b downwards
+                for b in sorted(divisors(global_batch), reverse=True):
+                    M = global_batch // b
+                    if M % k != 0 or M < min_microbatches:
+                        continue
+                    try:
+                        plan = _build(plan_factory, num_stages, M, k, b, kind, v)
+                    except ValueError:
+                        continue  # e.g. interleaved group-divisibility
+                    peak = memory_model.peak_bytes(plan)
+                    if peak <= memory_limit_bytes:
+                        best = Candidate(k, b, M, plan, peak)
+                        break  # first (largest) feasible b — the curve point
+                if best is not None:
+                    out.append(best)
     return out

@@ -18,7 +18,7 @@ import dataclasses
 from typing import Callable
 
 from repro.core.candidates import Candidate
-from repro.core.network import Network, ScaledTrace
+from repro.core.network import Network
 from repro.core.simulator import simulate_plan
 from repro.core.tuner import AutoTuner, TuningRecord
 

@@ -2,9 +2,10 @@
 
 The paper's "simple cost model" consumes (a) the stable per-stage compute
 profile and (b) the windowed end-to-end transfer-time measurements, and
-estimates the pipeline length of each candidate.  We implement it as a
-deterministic run of the discrete-event simulator with each link frozen at
-its *measured effective bandwidth* (bytes / measured transfer time) — i.e.
+estimates the pipeline length of each candidate — any schedule kind, since
+the estimator is plan-agnostic.  We implement it as a deterministic run of
+the discrete-event simulator with each link frozen at its *measured
+effective bandwidth* (bytes / measured transfer time) — i.e.
 the model assumes the recently-observed network state persists, which is
 precisely the paper's assumption when it re-evaluates at tuning intervals.
 

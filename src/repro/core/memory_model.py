@@ -9,7 +9,16 @@ HLO; we model the same quantities explicitly, per stage:
 
 ``peak_live_activations`` comes from exact liveness over the plan order (see
 :mod:`repro.core.schedule`), which is where kFkB's k-fold activation cost
-shows up.  The model supports two checkpointing policies matching the real
+shows up.  The same walk covers the whole schedule family: zero-bubble
+plans keep a stage input live until its ``BWD_WEIGHT`` (the weight gradient
+still reads it — the ZB-H1 builder caps issuance so the peak *slot count*
+equals the equal-k kFkB plan's), and interleaved plans count live
+micro-batches across every chunk the device hosts.  Zero-bubble slots are
+priced at twice the stage-input footprint: the engine stashes the incoming
+output gradient (``dy``, hidden-sized) alongside the saved input between
+``BWD_INPUT`` and ``BWD_WEIGHT`` (its ``wctx`` buffer mirrors the slot
+buffer), so zb memory parity holds in slots, not bytes.  The model
+supports two checkpointing policies matching the real
 engine: ``"stage_input"`` (store only the stage input per live micro-batch,
 recompute inside the stage during backward — the engine's default) and
 ``"full"`` (store all per-layer activations; no recompute).
@@ -75,6 +84,10 @@ class MemoryModel:
         for s, spec in enumerate(self.stages):
             static = spec.param_bytes + spec.optimizer_bytes + spec.grad_bytes
             act = self.activation_bytes_per_mb(s, b) * peaks_live[s]
+            if plan.kind == "zb_h1":
+                # the engine's wctx ring: one stashed hidden-sized dy per slot
+                tokens = b * self.seq_len
+                act += spec.stage_input_bytes_per_token * tokens * peaks_live[s]
             out.append(static + act + self.transient_bytes(s, b))
         return out
 

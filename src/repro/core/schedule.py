@@ -1,35 +1,60 @@
-"""Pipeline schedule plans: 1F1B, kFkB, GPipe.
+"""Pipeline schedule family: 1F1B, kFkB, GPipe, ZB-H1, interleaved kFkB.
 
 This module is the heart of the Ada-Grouper reproduction.  A *schedule plan*
-is, per pipeline stage, an ordered list of :class:`Task` records (forward /
-backward of a given micro-batch).  Ordering is the whole contribution of the
-paper: kFkB groups ``k`` micro-batches into one indivisible schedule unit so
-that while the cross-stage transfer of member *i* is in flight, the stage can
-compute member *i+1* (overlap), at the price of keeping up to ``k`` times more
+is, per pipeline device, an ordered list of :class:`Task` records (forward /
+backward work of a given micro-batch, optionally split or interleaved).
+Ordering is the whole contribution of the paper: kFkB groups ``k``
+micro-batches into one indivisible schedule unit so that while the
+cross-stage transfer of member *i* is in flight, the stage can compute
+member *i+1* (overlap), at the price of keeping up to ``k`` times more
 forward activations live.
 
-Construction follows the paper's §5.4: "generate k copies of the 1F1B plan
-[and] cross-merge [them]".  Concretely we build the classic synchronous 1F1B
-(DAPPLE / Megatron) order over ``G = M/k`` *virtual* micro-batches (groups),
-then expand every virtual forward/backward into its ``k`` members in FIFO
-order.  ``k == 1`` is exactly 1F1B and ``k == M`` is exactly GPipe, matching
-the paper's §4.1.
+Schedule-family matrix (``make_plan(..., kind=...)``):
 
-Two derived artifacts are produced from a plan:
+====================  =========  ==========  =======================================
+kind                  k          v (chunks)  trade-off
+====================  =========  ==========  =======================================
+``kfkb`` (k=1)        1          1           1F1B: min activation memory (min(S-s,M)
+                                             live per stage), bubble 2(S-1) ticks.
+``kfkb``              1 < k < M  1           paper's grouping: k-deep transfer
+                                             overlap under preemption, k x 1F1B
+                                             activation memory.
+``kfkb`` (k=M)        M          1           GPipe: max overlap depth, M live
+                                             activations everywhere.
+``zb_h1``             >= 1       1           zero-bubble H1 (Qi et al. 2024): BWD is
+                                             split into BWD_INPUT (critical path) +
+                                             BWD_WEIGHT (bubble filler); same peak
+                                             activation memory as the kFkB plan of
+                                             equal k, strictly shorter pipeline on
+                                             uniform stages.  Composes with k.
+``interleaved``       >= 1       v > 1       Megatron-style virtual stages: device s
+                                             hosts chunks {c*S+s}; fill/drain bubble
+                                             shrinks ~1/v, at v x more full-size
+                                             cross-stage messages (v x total wire
+                                             bytes) and v chunk contexts per
+                                             device.  Composes with k.
+====================  =========  ==========  =======================================
 
-* *slot assignment* — per-stage activation buffer slots from exact liveness
-  (a stage executes its own tasks sequentially, so walking the order gives
-  liveness directly).  The peak slot count is the memory model's input.
-* *tick table* — a lock-step global alignment (greedy list schedule under
-  "data sent at tick t is usable at tick t+1") used by the real ``shard_map``
-  engine, which executes one task per device per tick.
+kFkB construction follows the paper's §5.4: "generate k copies of the 1F1B
+plan [and] cross-merge [them]" — build the base order over ``G = M/k``
+*virtual* micro-batches (groups), then expand every virtual task into its
+``k`` members in FIFO order.  The same group-expansion composes with the
+zero-bubble and interleaved bases, giving the grouped hybrids (``kFkB-ZB``,
+interleaved kFkB).
+
+Every plan lowers to ONE artifact, the :class:`TabularPlan`: a lock-step
+``[num_stages, ticks]`` table (one task per device per tick, data produced
+at tick ``t`` consumable at ``t+1``) plus the *exact* list of send/recv
+edges between devices.  The tabular plan is the single input for the
+discrete-event simulator, the memory model, the cost model, the ASCII
+renderer, and the real ``shard_map`` engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, Sequence
+from typing import Iterator
 
 import numpy as np
 
@@ -37,10 +62,17 @@ __all__ = [
     "Op",
     "Task",
     "SchedulePlan",
+    "TabularPlan",
+    "PlanEdge",
+    "PLAN_KINDS",
     "one_f_one_b_order",
     "gpipe_order",
     "kfkb_order",
+    "zb_h1_orders",
+    "zb_h1_order",
+    "interleaved_kfkb_order",
     "make_plan",
+    "lower_to_table",
     "assign_slots",
     "peak_live_activations",
     "tick_table",
@@ -52,62 +84,107 @@ __all__ = [
 class Op(enum.IntEnum):
     IDLE = 0
     FWD = 1
-    BWD = 2
+    BWD = 2  # combined input+weight backward (1F1B / kFkB / GPipe)
+    BWD_INPUT = 3  # zero-bubble "B": dL/dx only — stays on the critical path
+    BWD_WEIGHT = 4  # zero-bubble "W": dL/dw only — fills bubbles, frees the slot
+
+
+#: ops that consume a cross-stage input produced by the NEXT virtual stage
+_BWD_CRITICAL = (Op.BWD, Op.BWD_INPUT)
+
+PLAN_KINDS = ("kfkb", "zb_h1", "interleaved")
 
 
 @dataclasses.dataclass(frozen=True)
 class Task:
-    """One unit of work on one pipeline stage."""
+    """One unit of work on one pipeline device.
+
+    ``chunk`` is the virtual-stage index on the device (always 0 for
+    non-interleaved plans); the global virtual stage is ``chunk * S + stage``
+    (Megatron's looped placement).
+    """
 
     op: Op
     stage: int
     mb: int  # micro-batch index in [0, M)
+    chunk: int = 0  # virtual-stage chunk on this device
     slot: int = -1  # activation buffer slot (filled by assign_slots)
 
-    def key(self) -> tuple[int, int, int]:
-        return (int(self.op), self.stage, self.mb)
+    def key(self) -> tuple[int, int, int, int]:
+        return (int(self.op), self.stage, self.mb, self.chunk)
 
 
 @dataclasses.dataclass
 class SchedulePlan:
-    """A complete plan: per-stage ordered task lists plus its (k, b) identity."""
+    """A complete plan: per-device ordered task lists plus its identity."""
 
     num_stages: int
     num_microbatches: int
     k: int
     micro_batch_size: int
-    orders: list[list[Task]]  # orders[s] = ordered tasks of stage s
+    orders: list[list[Task]]  # orders[s] = ordered tasks of device s
     name: str = ""
+    kind: str = "kfkb"
+    num_virtual: int = 1  # chunks per device (1 = non-interleaved)
 
     def __post_init__(self) -> None:
         if not self.name:
-            self.name = f"{self.k}F{self.k}B(b={self.micro_batch_size})"
+            base = f"{self.k}F{self.k}B(b={self.micro_batch_size})"
+            if self.kind == "zb_h1":
+                base = f"ZB-H1[{base}]"
+            elif self.kind == "interleaved":
+                base = f"I{self.num_virtual}[{base}]"
+            self.name = base
 
     @property
     def num_groups(self) -> int:
         return (self.num_microbatches + self.k - 1) // self.k
 
+    @property
+    def total_virtual_stages(self) -> int:
+        return self.num_stages * self.num_virtual
+
+    def virtual_stage(self, task: Task) -> int:
+        return task.chunk * self.num_stages + task.stage
+
     def tasks(self) -> Iterator[Task]:
         for order in self.orders:
             yield from order
 
+    def lower(self) -> "TabularPlan":
+        return lower_to_table(self)
+
     def validate(self) -> None:
         """Structural invariants every legal synchronous plan must satisfy."""
-        S, M = self.num_stages, self.num_microbatches
+        S, M, V = self.num_stages, self.num_microbatches, self.num_virtual
+        zb = self.kind == "zb_h1"
         for s, order in enumerate(self.orders):
-            fwd_seen: set[int] = set()
-            bwd_seen: set[int] = set()
+            fwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
+            bwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
+            w_seen: dict[int, set[int]] = {c: set() for c in range(V)}
             for t in order:
-                assert t.stage == s, f"task {t} listed under stage {s}"
+                assert t.stage == s, f"task {t} listed under device {s}"
+                assert 0 <= t.chunk < V, f"chunk out of range: {t}"
                 if t.op == Op.FWD:
-                    assert t.mb not in fwd_seen, f"dup FWD {t}"
-                    fwd_seen.add(t.mb)
-                elif t.op == Op.BWD:
-                    assert t.mb in fwd_seen, f"BWD before FWD: {t}"
-                    assert t.mb not in bwd_seen, f"dup BWD {t}"
-                    bwd_seen.add(t.mb)
-            assert fwd_seen == set(range(M)), f"stage {s}: missing FWDs"
-            assert bwd_seen == set(range(M)), f"stage {s}: missing BWDs"
+                    assert t.mb not in fwd_seen[t.chunk], f"dup FWD {t}"
+                    fwd_seen[t.chunk].add(t.mb)
+                elif t.op in _BWD_CRITICAL:
+                    assert (zb and t.op == Op.BWD_INPUT) or (not zb and t.op == Op.BWD), (
+                        f"op {t.op!r} illegal in kind {self.kind!r}"
+                    )
+                    assert t.mb in fwd_seen[t.chunk], f"BWD before FWD: {t}"
+                    assert t.mb not in bwd_seen[t.chunk], f"dup BWD {t}"
+                    bwd_seen[t.chunk].add(t.mb)
+                elif t.op == Op.BWD_WEIGHT:
+                    assert zb, f"BWD_WEIGHT outside zb plan: {t}"
+                    assert t.mb in bwd_seen[t.chunk], f"W before B: {t}"
+                    assert t.mb not in w_seen[t.chunk], f"dup W {t}"
+                    w_seen[t.chunk].add(t.mb)
+            for c in range(V):
+                assert fwd_seen[c] == set(range(M)), f"device {s} chunk {c}: missing FWDs"
+                assert bwd_seen[c] == set(range(M)), f"device {s} chunk {c}: missing BWDs"
+                if zb:
+                    assert w_seen[c] == set(range(M)), f"device {s} chunk {c}: missing Ws"
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +228,17 @@ def gpipe_order(num_stages: int, num_microbatches: int, stage: int) -> list[tupl
     return [(Op.FWD, m) for m in range(M)] + [(Op.BWD, m) for m in range(M)]
 
 
+def _expand_groups(
+    virt: list[tuple[Op, int]], k: int, num_microbatches: int
+) -> list[tuple[Op, int]]:
+    """Expand group-level (op, g) ops into their k FIFO members."""
+    M = num_microbatches
+    out: list[tuple[Op, int]] = []
+    for op, g in virt:
+        out.extend((op, g * k + i) for i in range(min(k, M - g * k)))
+    return out
+
+
 def kfkb_order(
     num_stages: int, num_microbatches: int, k: int, stage: int
 ) -> list[tuple[Op, int]]:
@@ -164,11 +252,148 @@ def kfkb_order(
     """
     M = num_microbatches
     G = (M + k - 1) // k
-    virt = _virtual_1f1b(num_stages, G, stage)
-    order: list[tuple[Op, int]] = []
-    for op, g in virt:
-        order.extend((op, g * k + i) for i in range(min(k, M - g * k)))
-    return order
+    return _expand_groups(_virtual_1f1b(num_stages, G, stage), k, M)
+
+
+def zb_h1_orders(
+    num_stages: int, num_microbatches: int, k: int = 1
+) -> list[list[tuple[Op, int]]]:
+    """ZB-H1 orders for ALL stages (they are built jointly): the zero-bubble
+    handcrafted schedule of Qi et al. 2024, composed with kFkB grouping.
+
+    Backward is split into ``BWD_INPUT`` (``B``: input gradient, consumed by
+    the upstream stage — critical path) and ``BWD_WEIGHT`` (``W``: weight
+    gradient, no consumer — pure filler).  Per stage the order is built by a
+    greedy lock-step walk with priority ``B > F > W`` where
+
+    * ``F`` issuance is capped so that live activations (allocated at F,
+      freed at the matching W) never exceed 1F1B's ``min(S - s, G)`` — this
+      is the "H1" memory guarantee (same peak as 1F1B), and
+    * ``W`` runs exactly when the device would otherwise bubble, so weight
+      gradient work fills the fill/drain and preemption stalls.
+
+    Grouping expands every group-level F/B/W into its ``k`` FIFO members
+    (the kFkB-ZB hybrid).  Returns one order per stage.
+    """
+    S, M = num_stages, num_microbatches
+    G = (M + k - 1) // k
+    next_f = [0] * S
+    next_b = [0] * S
+    next_w = [0] * S
+    done: dict[tuple[int, int, int], int] = {}  # (op, stage, g) -> tick
+    orders: list[list[tuple[Op, int]]] = [[] for _ in range(S)]
+    cap = [min(S - s, G) for s in range(S)]
+    total = 3 * G * S
+    executed = 0
+    t = 0
+    max_ticks = 6 * G * S + 12 * S + 16
+    while executed < total:
+        if t > max_ticks:  # pragma: no cover - defensive
+            raise RuntimeError("zb_h1_orders failed to converge")
+        fired: list[tuple[int, Op, int]] = []
+        for s in range(S):
+            choice: tuple[Op, int] | None = None
+            b = next_b[s]
+            if b < G and b < next_f[s]:
+                ready = done.get((int(Op.FWD), s, b)) is not None
+                if ready and s < S - 1:
+                    dep = done.get((int(Op.BWD_INPUT), s + 1, b))
+                    ready = dep is not None and dep < t
+                if ready:
+                    choice = (Op.BWD_INPUT, b)
+            if choice is None and next_f[s] < G and next_f[s] - next_w[s] < cap[s]:
+                f = next_f[s]
+                if s == 0:
+                    choice = (Op.FWD, f)
+                else:
+                    dep = done.get((int(Op.FWD), s - 1, f))
+                    if dep is not None and dep < t:
+                        choice = (Op.FWD, f)
+            if choice is None and next_w[s] < next_b[s]:
+                choice = (Op.BWD_WEIGHT, next_w[s])
+            if choice is not None:
+                op, g = choice
+                orders[s].append(choice)
+                fired.append((s, op, g))
+                if op == Op.FWD:
+                    next_f[s] += 1
+                elif op == Op.BWD_INPUT:
+                    next_b[s] += 1
+                else:
+                    next_w[s] += 1
+                executed += 1
+        for s, op, g in fired:
+            done[(int(op), s, g)] = t
+        t += 1
+    return [_expand_groups(o, k, M) for o in orders]
+
+
+def zb_h1_order(
+    num_stages: int, num_microbatches: int, stage: int, k: int = 1
+) -> list[tuple[Op, int]]:
+    """ZB-H1 order for ONE stage (builds all stages jointly, selects one)."""
+    return zb_h1_orders(num_stages, num_microbatches, k)[stage]
+
+
+def interleaved_kfkb_order(
+    num_stages: int,
+    num_microbatches: int,
+    k: int,
+    num_virtual: int,
+    stage: int,
+) -> list[tuple[Op, int, int]]:
+    """Interleaved (virtual-stage) kFkB order for one device: ``(op, mb, chunk)``.
+
+    Megatron-style looped placement: device ``s`` hosts model chunks
+    ``{c * S + s : c in [0, v)}``; the forward of global virtual stage ``j``
+    depends on virtual stage ``j - 1`` (device ``(j-1) % S``).  The base
+    order is Megatron's interleaved 1F1B over ``G = M/k`` groups (warmup
+    ``2*(S - s - 1) + (v - 1) * S`` forwards, steady 1F1B over virtual
+    micro-batches cycling chunks every ``S`` steps, cooldown backwards),
+    then every group op is expanded into its ``k`` FIFO members.
+
+    Requires ``k | M`` and ``S | G`` (Megatron's divisibility constraint).
+    """
+    S, M, v, s = num_stages, num_microbatches, num_virtual, stage
+    if v < 1:
+        raise ValueError(f"num_virtual must be >= 1, got {v}")
+    if M % k != 0:
+        raise ValueError(f"interleaved kFkB needs k | M (k={k}, M={M})")
+    G = M // k
+    if G % S != 0:
+        raise ValueError(f"interleaved needs num_groups % num_stages == 0 (G={G}, S={S})")
+    total = G * v
+    warmup = min(2 * (S - s - 1) + (v - 1) * S, total)
+
+    def chunk_of(step: int, forward: bool) -> int:
+        c = (step % (S * v)) // S
+        return c if forward else v - 1 - c
+
+    fcount = [0] * v
+    bcount = [0] * v
+    seq: list[tuple[Op, int, int]] = []
+
+    def emit_f(step: int) -> None:
+        c = chunk_of(step, True)
+        seq.append((Op.FWD, fcount[c], c))
+        fcount[c] += 1
+
+    def emit_b(step: int) -> None:
+        c = chunk_of(step, False)
+        seq.append((Op.BWD, bcount[c], c))
+        bcount[c] += 1
+
+    for i in range(warmup):
+        emit_f(i)
+    for i in range(warmup, total):
+        emit_f(i)
+        emit_b(i - warmup)
+    for i in range(total - warmup, total):
+        emit_b(i)
+    out: list[tuple[Op, int, int]] = []
+    for op, g, c in seq:
+        out.extend((op, g * k + i, c) for i in range(min(k, M - g * k)))
+    return out
 
 
 def make_plan(
@@ -177,56 +402,103 @@ def make_plan(
     k: int,
     micro_batch_size: int = 1,
     name: str = "",
+    kind: str = "kfkb",
+    num_virtual: int = 1,
 ) -> SchedulePlan:
-    """Build a validated kFkB :class:`SchedulePlan` (k=1 → 1F1B, k=M → GPipe)."""
-    orders = []
-    for s in range(num_stages):
-        raw = kfkb_order(num_stages, num_microbatches, k, s)
-        orders.append([Task(op, s, mb) for op, mb in raw])
-    plan = SchedulePlan(num_stages, num_microbatches, k, micro_batch_size, orders, name)
+    """Build a validated :class:`SchedulePlan` of any family member.
+
+    ``kind`` is one of ``"kfkb"`` (k=1 → 1F1B, k=M → GPipe), ``"zb_h1"``
+    (zero-bubble, B/W split), ``"interleaved"`` (``num_virtual`` chunks per
+    device).  ``"1f1b"`` and ``"gpipe"`` are accepted as aliases that force
+    ``k``.
+    """
+    if kind == "1f1b":
+        kind, k = "kfkb", 1
+    elif kind == "gpipe":
+        kind, k = "kfkb", num_microbatches
+    if kind not in PLAN_KINDS:
+        raise ValueError(f"unknown plan kind {kind!r}; expected one of {PLAN_KINDS}")
+    if kind != "interleaved" and num_virtual != 1:
+        raise ValueError(f"num_virtual > 1 requires kind='interleaved', got {kind!r}")
+    orders: list[list[Task]] = []
+    if kind == "kfkb":
+        for s in range(num_stages):
+            raw = kfkb_order(num_stages, num_microbatches, k, s)
+            orders.append([Task(op, s, mb) for op, mb in raw])
+    elif kind == "zb_h1":
+        for s, raw in enumerate(zb_h1_orders(num_stages, num_microbatches, k)):
+            orders.append([Task(op, s, mb) for op, mb in raw])
+    else:  # interleaved
+        for s in range(num_stages):
+            raw3 = interleaved_kfkb_order(num_stages, num_microbatches, k, num_virtual, s)
+            orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
+    plan = SchedulePlan(
+        num_stages,
+        num_microbatches,
+        k,
+        micro_batch_size,
+        orders,
+        name,
+        kind=kind,
+        num_virtual=num_virtual,
+    )
     plan.validate()
     assign_slots(plan)
     return plan
 
 
 # ---------------------------------------------------------------------------
-# Slot assignment (exact per-stage liveness)
+# Slot assignment (exact per-device liveness)
 # ---------------------------------------------------------------------------
 
 
-def assign_slots(plan: SchedulePlan) -> int:
-    """Assign activation buffer slots per stage; return the global peak count.
+def _frees_slot(plan: SchedulePlan, op: Op) -> bool:
+    """The op that releases a live activation: W for zb (the weight gradient
+    still needs the stage input), the combined BWD otherwise."""
+    return op == (Op.BWD_WEIGHT if plan.kind == "zb_h1" else Op.BWD)
 
-    A forward allocates a slot (it must keep its stage input alive until its
-    backward); the matching backward frees it.  Because each stage executes
-    its own order sequentially, walking the order gives exact liveness.
+
+def assign_slots(plan: SchedulePlan) -> int:
+    """Assign activation buffer slots per device; return the global peak count.
+
+    A forward allocates a slot (the stage input must stay alive until the
+    last backward piece that reads it); the freeing op (see
+    :func:`_frees_slot`) releases it.  Because each device executes its own
+    order sequentially, walking the order gives exact liveness.  For zb
+    plans the intermediate ``BWD_INPUT`` is tagged with the live slot (it
+    reads the activation without freeing it).
     """
     peak_global = 0
     for s, order in enumerate(plan.orders):
         free: list[int] = []
         next_slot = 0
-        live: dict[int, int] = {}  # mb -> slot
-        peak = 0
+        live: dict[tuple[int, int], int] = {}  # (mb, chunk) -> slot
         for i, t in enumerate(order):
             if t.op == Op.FWD:
                 slot = free.pop() if free else next_slot
                 if slot == next_slot:
                     next_slot += 1
-                live[t.mb] = slot
-                peak = max(peak, len(live))
-            elif t.op == Op.BWD:
-                slot = live.pop(t.mb)
+                live[(t.mb, t.chunk)] = slot
+            elif _frees_slot(plan, t.op):
+                slot = live.pop((t.mb, t.chunk))
                 free.append(slot)
+            elif t.op == Op.BWD_INPUT:
+                slot = live[(t.mb, t.chunk)]
             else:
                 slot = -1
             order[i] = dataclasses.replace(t, slot=slot)
-        assert not live, f"stage {s}: activations leaked: {live}"
+        assert not live, f"device {s}: activations leaked: {live}"
         peak_global = max(peak_global, next_slot)
     return peak_global
 
 
 def peak_live_activations(plan: SchedulePlan) -> list[int]:
-    """Per-stage peak number of simultaneously-live forward activations."""
+    """Per-device peak number of simultaneously-live forward activations.
+
+    For interleaved plans this counts across all chunks hosted by the
+    device; for zb plans an activation is live until its ``BWD_WEIGHT``
+    (the weight gradient still reads the stage input).
+    """
     peaks = []
     for order in plan.orders:
         live = 0
@@ -235,76 +507,224 @@ def peak_live_activations(plan: SchedulePlan) -> list[int]:
             if t.op == Op.FWD:
                 live += 1
                 peak = max(peak, live)
-            elif t.op == Op.BWD:
+            elif _frees_slot(plan, t.op):
                 live -= 1
         peaks.append(peak)
     return peaks
 
 
 # ---------------------------------------------------------------------------
-# Lock-step tick table for the real SPMD engine
+# TabularPlan: the lock-step table + exact send/recv edges
 # ---------------------------------------------------------------------------
 
 TICK_IDLE = np.array([int(Op.IDLE), -1, -1], dtype=np.int32)
+_GRID_IDLE = (int(Op.IDLE), -1, -1, -1)
 
 
-def tick_table(plan: SchedulePlan) -> np.ndarray:
-    """Greedy lock-step alignment of a plan: ``[S, T, 3]`` of (op, mb, slot).
+@dataclasses.dataclass(frozen=True)
+class PlanEdge:
+    """One exact cross-device transfer: the output of ``(op, src_stage, mb,
+    src_chunk)`` executed at ``send_tick`` is consumed by ``dst_stage`` at
+    ``recv_tick`` (FWD activations move to the next virtual stage, BWD /
+    BWD_INPUT gradients to the previous one)."""
 
-    Semantics of the real engine: each tick every device executes at most one
-    task; data produced at tick ``t`` (activation moving down, gradient moving
-    up, both via one ppermute pair) is consumable at tick ``t+1`` or later.
-    A task is eligible at tick ``t`` iff
+    src_stage: int
+    dst_stage: int
+    op: Op
+    mb: int
+    src_chunk: int
+    dst_chunk: int
+    send_tick: int
+    recv_tick: int
 
-    * it is the device's next unexecuted task in plan order (in-order, as the
-      paper's runtime), and
-    * its cross-stage input was produced at some tick ``< t``
-      (FWD_s(mb) needs FWD_{s-1}(mb); BWD_s(mb) needs BWD_{s+1}(mb)), and
-    * its intra-stage input exists (BWD_s(mb) needs FWD_s(mb), any tick < t;
-      same-tick is impossible anyway since one task per tick).
+    @property
+    def is_forward(self) -> bool:
+        return self.op == Op.FWD
 
-    This is exactly executable by ``repro.pipeline.engine`` and is also the
-    zero-communication-cost reference point of the cost model.
+
+@dataclasses.dataclass
+class TabularPlan:
+    """The unified lowering target of every plan builder.
+
+    ``grid[s, t] = (op, mb, chunk, slot)`` — device ``s`` executes at most
+    one task per tick; ``edges`` lists every cross-device send/recv pair
+    with exact ticks.  Semantics: data produced at tick ``t`` is consumable
+    at tick ``t + 1`` or later (one ppermute pair per tick in the real
+    engine).
+    """
+
+    plan: SchedulePlan
+    grid: np.ndarray  # [S, T, 4] int32
+    edges: list[PlanEdge]
+
+    @property
+    def num_stages(self) -> int:
+        return self.plan.num_stages
+
+    @property
+    def num_ticks(self) -> int:
+        return int(self.grid.shape[1])
+
+    def device_order(self, s: int) -> list[Task]:
+        """Non-idle tasks of device ``s`` in tick order."""
+        out = []
+        for t in range(self.num_ticks):
+            op, mb, chunk, slot = (int(v) for v in self.grid[s, t])
+            if op != int(Op.IDLE):
+                out.append(Task(Op(op), s, mb, chunk, slot))
+        return out
+
+    def stats(self) -> dict[str, float]:
+        """Bubble fraction & length (unit-cost reference)."""
+        S, T, _ = self.grid.shape
+        busy = int((self.grid[:, :, 0] != int(Op.IDLE)).sum())
+        return {
+            "ticks": float(T),
+            "busy": float(busy),
+            "bubble_fraction": 1.0 - busy / float(S * T),
+        }
+
+    def validate(self) -> None:
+        """Dependency validity and FIFO-per-link invariants.
+
+        * every cross-device consumption is matched by exactly one edge
+          whose send strictly precedes its recv,
+        * per directed link, sends and recvs are FIFO-consistent (the i-th
+          send is the i-th recv — what the engine's ring queues require),
+        * intra-device streams execute in FIFO micro-batch order per
+          (op, chunk).
+        """
+        plan = self.plan
+        exec_tick: dict[tuple[int, int, int, int], int] = {}
+        for s in range(self.num_stages):
+            stream_last: dict[tuple[int, int], int] = {}
+            for t in range(self.num_ticks):
+                op, mb, chunk, _ = (int(v) for v in self.grid[s, t])
+                if op == int(Op.IDLE):
+                    continue
+                key = (op, s, mb, chunk)
+                assert key not in exec_tick, f"task executed twice: {key}"
+                exec_tick[key] = t
+                last = stream_last.get((op, chunk), -1)
+                assert mb > last, f"stream not FIFO at device {s}: {key}"
+                stream_last[(op, chunk)] = mb
+        by_consumer = {
+            (int(e.op), e.dst_stage, e.mb, e.dst_chunk, e.src_stage, e.src_chunk): e
+            for e in self.edges
+        }
+        assert len(by_consumer) == len(self.edges), "duplicate edges"
+        n_expected = 0
+        for key, t in exec_tick.items():
+            op, s, mb, chunk = key
+            deps = _cross_deps(plan, Op(op), s, chunk, mb)
+            for dep_op, dep_s, dep_c in deps:
+                dep_key = (int(dep_op), dep_s, mb, dep_c)
+                assert dep_key in exec_tick, f"missing producer for {key}"
+                assert exec_tick[dep_key] < t, f"recv at {t} not after send for {key}"
+                e = by_consumer.get((int(dep_op), s, mb, chunk, dep_s, dep_c))
+                assert e is not None, f"missing edge for {key} <- {dep_key}"
+                assert e.send_tick == exec_tick[dep_key] and e.recv_tick == t
+                n_expected += 1
+        assert n_expected == len(self.edges), "stray edges"
+        # FIFO per directed link: sends ordered by tick must meet recvs in order
+        links: dict[tuple[int, int, bool], list[PlanEdge]] = {}
+        for e in self.edges:
+            links.setdefault((e.src_stage, e.dst_stage, e.is_forward), []).append(e)
+        for es in links.values():
+            es = sorted(es, key=lambda e: e.send_tick)
+            recvs = [e.recv_tick for e in es]
+            assert recvs == sorted(recvs), "link not FIFO-consistent"
+
+
+def _cross_deps(
+    plan: SchedulePlan, op: Op, stage: int, chunk: int, mb: int
+) -> list[tuple[Op, int, int]]:
+    """Cross-DEVICE producers (op, stage, chunk) that ``(op, stage, mb, chunk)``
+    waits on.  Intra-device deps (B after F, W after B) are enforced by the
+    device's own sequential order and are not transfers."""
+    S, V = plan.num_stages, plan.total_virtual_stages
+    vs = chunk * S + stage
+    deps: list[tuple[Op, int, int]] = []
+    if op == Op.FWD and vs > 0:
+        deps.append((Op.FWD, (vs - 1) % S, (vs - 1) // S))
+    elif op in _BWD_CRITICAL and vs < V - 1:
+        deps.append((op, (vs + 1) % S, (vs + 1) // S))
+    return deps
+
+
+def lower_to_table(plan: SchedulePlan) -> TabularPlan:
+    """Greedy lock-step lowering of ANY plan to its :class:`TabularPlan`.
+
+    Each tick every device executes at most one task; a task is eligible at
+    tick ``t`` iff it is the device's next unexecuted task in plan order
+    (in-order, as the paper's runtime) and every cross-device input was
+    produced at some tick ``< t`` (intra-device inputs are guaranteed by
+    plan order).  Exact send/recv edges are recorded as tasks fire.
     """
     S = plan.num_stages
     ptr = [0] * S
-    done_tick: dict[tuple[int, int, int], int] = {}  # (op, stage, mb) -> tick
-    rows: list[list[np.ndarray]] = [[] for _ in range(S)]
+    done_tick: dict[tuple[int, int, int, int], int] = {}
+    rows: list[list[tuple[int, int, int, int]]] = [[] for _ in range(S)]
+    edges: list[PlanEdge] = []
     t = 0
     total = sum(len(o) for o in plan.orders)
     executed = 0
-    max_ticks = 4 * total + 8 * S + 16  # generous upper bound; loop must end sooner
+    max_ticks = 4 * total + 8 * S * plan.num_virtual + 16
     while executed < total:
         if t > max_ticks:
-            raise RuntimeError("tick_table failed to converge — malformed plan")
-        fired_this_tick: list[tuple[int, Task]] = []
+            raise RuntimeError("lower_to_table failed to converge — malformed plan")
+        fired_this_tick: list[Task] = []
         for s in range(S):
             if ptr[s] >= len(plan.orders[s]):
-                rows[s].append(TICK_IDLE)
+                rows[s].append(_GRID_IDLE)
                 continue
             task = plan.orders[s][ptr[s]]
+            deps = _cross_deps(plan, task.op, s, task.chunk, task.mb)
             ready = True
-            if task.op == Op.FWD and s > 0:
-                dep = done_tick.get((int(Op.FWD), s - 1, task.mb))
-                ready = dep is not None and dep < t
-            elif task.op == Op.BWD:
-                dep_f = done_tick.get((int(Op.FWD), s, task.mb))
-                ready = dep_f is not None and dep_f < t
-                if ready and s < S - 1:
-                    dep = done_tick.get((int(Op.BWD), s + 1, task.mb))
-                    ready = dep is not None and dep < t
+            for dep_op, dep_s, dep_c in deps:
+                dep = done_tick.get((int(dep_op), dep_s, task.mb, dep_c))
+                if dep is None or dep >= t:
+                    ready = False
+                    break
             if ready:
-                rows[s].append(np.array([int(task.op), task.mb, task.slot], np.int32))
-                fired_this_tick.append((s, task))
+                rows[s].append((int(task.op), task.mb, task.chunk, task.slot))
+                for dep_op, dep_s, dep_c in deps:
+                    edges.append(
+                        PlanEdge(
+                            src_stage=dep_s,
+                            dst_stage=s,
+                            op=Op(dep_op),
+                            mb=task.mb,
+                            src_chunk=dep_c,
+                            dst_chunk=task.chunk,
+                            send_tick=done_tick[(int(dep_op), dep_s, task.mb, dep_c)],
+                            recv_tick=t,
+                        )
+                    )
+                fired_this_tick.append(task)
                 ptr[s] += 1
                 executed += 1
             else:
-                rows[s].append(TICK_IDLE)
+                rows[s].append(_GRID_IDLE)
         # completion times are committed only after the whole tick resolves
-        for s, task in fired_this_tick:
-            done_tick[(int(task.op), s, task.mb)] = t
+        for task in fired_this_tick:
+            done_tick[task.key()] = t
         t += 1
-    return np.stack([np.stack(r) for r in rows])  # [S, T, 3]
+    grid = np.asarray(rows, dtype=np.int32)
+    return TabularPlan(plan=plan, grid=grid, edges=edges)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat shims: the legacy [S, T, 3] tick table
+# ---------------------------------------------------------------------------
+
+
+def tick_table(plan: SchedulePlan) -> np.ndarray:
+    """Legacy view of :func:`lower_to_table`: ``[S, T, 3]`` of (op, mb, slot).
+
+    Kept for callers that predate :class:`TabularPlan` (chunk is dropped —
+    only meaningful for non-interleaved plans)."""
+    return lower_to_table(plan).grid[:, :, [0, 1, 3]]
 
 
 def tick_table_stats(table: np.ndarray) -> dict[str, float]:

@@ -6,7 +6,9 @@ Execution model (faithful to the paper's runtime, §3/§4.4/§5.3):
   decided ahead of time; kFkB's benefit is that the *static* order keeps
   locally-ready work available, not that the runtime reorders;
 * a task launches when the device is free AND its cross-stage input has
-  arrived (stage-0 forwards and last-stage backward inputs are always local);
+  arrived (stage-0 forwards and last-stage backward inputs are always local;
+  zero-bubble ``BWD_WEIGHT`` tasks are always local — their whole point is
+  to absorb stalls);
 * Send is issued immediately when the producing task completes ("cross stage
   communications triggered immediately after each stage computation delivers
   its outputs"), is asynchronous, and never blocks the device (§5.3);
@@ -15,6 +17,11 @@ Execution model (faithful to the paper's runtime, §3/§4.4/§5.3):
   send/recv NCCL streams of Fig 5);
 * arrived-but-unconsumed inputs sit in the §4.4 buffer queue; we record its
   depth timeline to reproduce the Fig 4c analysis.
+
+Any member of the schedule family runs here unchanged: the per-device
+orders and transfer specs come from the task graph, which encodes the
+virtual-stage topology (interleaved plans route over the ``S-1 -> 0`` wrap
+link; links are created for whatever directed pairs the plan actually uses).
 
 The simulator returns the pipeline length (makespan incl. optimizer
 epilogue), per-device busy/stall accounting, and the queue timelines.
@@ -25,10 +32,9 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Iterator
 
 from repro.core.network import Network
-from repro.core.schedule import Op, SchedulePlan
+from repro.core.schedule import SchedulePlan
 from repro.core.taskgraph import StageCosts, TaskGraph, TransferSpec, build_task_graph
 
 __all__ = ["SimResult", "PipelineSimulator", "simulate", "simulate_plan"]
@@ -39,7 +45,7 @@ class SimResult:
     pipeline_length: float  # makespan of one training iteration, seconds
     busy_time: list[float]  # per stage
     stall_time: list[float]  # per stage: device idle while tasks remained
-    task_finish: dict[tuple[int, int, int], float]
+    task_finish: dict[tuple[int, int, int, int], float]
     queue_timeline: dict[int, list[tuple[float, int]]]  # stage -> (t, depth)
     link_busy: dict[tuple[int, int], float]
 
@@ -72,12 +78,17 @@ class PipelineSimulator:
         self.device_ready_since = [0.0] * S  # when the device last became free
         self.busy_time = [0.0] * S
         self.stall_time = [0.0] * S
-        self.arrived: set[tuple[int, int, int]] = set()
-        self.task_finish: dict[tuple[int, int, int], float] = {}
+        self.arrived: set[tuple[int, int, int, int]] = set()
+        self.task_finish: dict[tuple[int, int, int, int], float] = {}
         self.links: dict[tuple[int, int], _Link] = {}
-        for s in range(S - 1):
-            self.links[(s, s + 1)] = _Link(network.trace(s, s + 1))
-            self.links[(s + 1, s)] = _Link(network.trace(s + 1, s))
+        pairs = {
+            (x.src, x.dst) for specs in graph.outgoing.values() for x in specs
+        }
+        for s in range(S - 1):  # the base chain always exists
+            pairs.add((s, s + 1))
+            pairs.add((s + 1, s))
+        for src, dst in sorted(pairs):
+            self.links[(src, dst)] = _Link(network.trace(src, dst))
         self.queue_timeline: dict[int, list[tuple[float, int]]] = {s: [] for s in range(S)}
         self.queue_depth = [0] * S
         self._events: list[tuple[float, int, str, object]] = []

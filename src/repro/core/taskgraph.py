@@ -3,9 +3,16 @@
 Mirrors the paper's §2.4: every stage computation fed by a micro-batch is a
 *task node*; Send/Recv pairs are explicit nodes inserted on cross-stage
 edges; gradient-accumulation nodes stitch the micro-batches of one stage.
-The graph is built from a :class:`~repro.core.schedule.SchedulePlan` plus a
-:class:`StageCosts` profile, and is what the discrete-event simulator and the
-cost model consume.
+The graph is built from a :class:`~repro.core.schedule.SchedulePlan` (any
+family member — the cross-device topology comes from the same virtual-stage
+rules the tabular lowering uses) plus a :class:`StageCosts` profile, and is
+what the discrete-event simulator and the cost model consume.
+
+Zero-bubble plans split the backward: ``BWD_INPUT`` (``bwd_input_time``,
+emits the upstream gradient transfer) and ``BWD_WEIGHT``
+(``bwd_weight_time``, no communication at all).  Interleaved plans divide
+per-stage compute by the number of chunks and route transfers along the
+virtual-stage ring (including the ``S-1 -> 0`` wrap link).
 """
 
 from __future__ import annotations
@@ -28,6 +35,9 @@ class StageCosts:
     * ``bwd_bytes[s]`` — gradient bytes sent ``s -> s-1`` after a backward
       (index ``s`` in ``[1, S-1]``).
     * ``optimizer_time[s]`` — per-stage epilogue (grad-accum finalize + apply).
+    * ``bwd_input_time[s]`` / ``bwd_weight_time[s]`` — the zero-bubble split
+      of ``bwd_time``; defaults to an even split (the ZB paper's F = B = W
+      working assumption when ``bwd = 2 * fwd``).
     """
 
     fwd_time: list[float]
@@ -35,6 +45,8 @@ class StageCosts:
     fwd_bytes: list[float]
     bwd_bytes: list[float]
     optimizer_time: list[float] | None = None
+    bwd_input_time: list[float] | None = None
+    bwd_weight_time: list[float] | None = None
 
     @property
     def num_stages(self) -> int:
@@ -47,6 +59,12 @@ class StageCosts:
         assert len(self.bwd_bytes) >= S
         if self.optimizer_time is None:
             self.optimizer_time = [0.0] * S
+        if self.bwd_input_time is None:
+            self.bwd_input_time = [0.5 * t for t in self.bwd_time]
+        if self.bwd_weight_time is None:
+            self.bwd_weight_time = [
+                t - bi for t, bi in zip(self.bwd_time, self.bwd_input_time)
+            ]
 
     @classmethod
     def uniform(
@@ -85,6 +103,8 @@ class StageCosts:
             fwd_bytes=[x * ratio for x in self.fwd_bytes],
             bwd_bytes=[x * ratio for x in self.bwd_bytes],
             optimizer_time=list(self.optimizer_time),
+            bwd_input_time=[t * scale_t for t in self.bwd_input_time],
+            bwd_weight_time=[t * scale_t for t in self.bwd_weight_time],
         )
 
 
@@ -97,57 +117,96 @@ class TransferSpec:
     op: Op  # the op of the *producing* task (FWD moves down, BWD moves up)
     mb: int
     nbytes: float
+    chunk: int = 0  # producing task's chunk (virtual-stage plans)
 
     @property
-    def key(self) -> tuple[int, int, int]:
-        """The (op, stage, mb) the *consumer* waits for — producer's identity."""
-        return (int(self.op), self.src, self.mb)
+    def key(self) -> tuple[int, int, int, int]:
+        """The (op, stage, mb, chunk) the *consumer* waits for — producer's
+        identity."""
+        return (int(self.op), self.src, self.mb, self.chunk)
 
 
 @dataclasses.dataclass
 class TaskGraph:
     plan: SchedulePlan
     costs: StageCosts
-    # transfers emitted by each completed task, keyed by (op, stage, mb)
-    outgoing: dict[tuple[int, int, int], list[TransferSpec]]
+    # transfers emitted by each completed task, keyed by task.key()
+    outgoing: dict[tuple[int, int, int, int], list[TransferSpec]]
     # the cross-stage input each task waits for (None for boundary stages)
-    incoming: dict[tuple[int, int, int], TransferSpec | None]
+    incoming: dict[tuple[int, int, int, int], TransferSpec | None]
 
     @property
     def num_stages(self) -> int:
         return self.plan.num_stages
 
     def task_time(self, task: Task) -> float:
+        v = self.plan.num_virtual
         if task.op == Op.FWD:
-            return self.costs.fwd_time[task.stage]
+            return self.costs.fwd_time[task.stage] / v
         if task.op == Op.BWD:
-            return self.costs.bwd_time[task.stage]
+            return self.costs.bwd_time[task.stage] / v
+        if task.op == Op.BWD_INPUT:
+            return self.costs.bwd_input_time[task.stage] / v
+        if task.op == Op.BWD_WEIGHT:
+            return self.costs.bwd_weight_time[task.stage] / v
         return 0.0
 
     def iter_tasks(self) -> Iterator[Task]:
         yield from self.plan.tasks()
 
 
+def _link_bytes(costs: StageCosts, src: int, forward: bool) -> float:
+    """Bytes crossing the ``src -> dst`` boundary.  Interleaved wrap-link
+    transfers (forward ``S-1 -> 0``, backward ``0 -> S-1``) carry the same
+    hidden-state tensor as any other hop, so they reuse the nearest entry
+    that is inside the StageCosts contract (``fwd_bytes`` defined on
+    ``[0, S-2]``, ``bwd_bytes`` on ``[1, S-1]``) instead of reading the
+    contract's placeholder slots."""
+    if forward:
+        table = costs.fwd_bytes
+        # in-contract entries are [0, S-2] even when a placeholder S-th
+        # entry is present (StageCosts.uniform fills all S slots)
+        return table[max(0, min(src, costs.num_stages - 2))]
+    table = costs.bwd_bytes
+    return table[src] if src >= 1 else table[min(1, len(table) - 1)]
+
+
 def build_task_graph(plan: SchedulePlan, costs: StageCosts) -> TaskGraph:
-    """Insert Send/Recv transfer specs for every cross-stage dependency."""
-    S, M = plan.num_stages, plan.num_microbatches
+    """Insert Send/Recv transfer specs for every cross-device dependency.
+
+    The topology is the virtual-stage chain: the forward of virtual stage
+    ``j`` feeds ``j + 1`` (device ``(j+1) % S``); the critical backward of
+    ``j`` feeds ``j - 1``.  ``BWD_WEIGHT`` tasks neither send nor receive.
+    For interleaved plans it is *compute* that splits across chunks (see
+    :meth:`TaskGraph.task_time`), NOT the wire size: every message still
+    carries the full ``[b, T, d]`` hidden state, and there are ``v`` times
+    more of them — interleaving trades bubble for messaging, raising total
+    wire bytes by ``v``.
+    """
+    S = plan.num_stages
+    V = plan.total_virtual_stages
     assert costs.num_stages == S
-    outgoing: dict[tuple[int, int, int], list[TransferSpec]] = {}
-    incoming: dict[tuple[int, int, int], TransferSpec | None] = {}
-    for mb in range(M):
-        for s in range(S):
-            fkey = (int(Op.FWD), s, mb)
-            bkey = (int(Op.BWD), s, mb)
-            outgoing.setdefault(fkey, [])
-            outgoing.setdefault(bkey, [])
-            if s < S - 1:  # forward activation moves down
-                xf = TransferSpec(s, s + 1, Op.FWD, mb, costs.fwd_bytes[s])
-                outgoing[fkey].append(xf)
-                incoming[(int(Op.FWD), s + 1, mb)] = xf
-            if s > 0:  # backward gradient moves up
-                xb = TransferSpec(s, s - 1, Op.BWD, mb, costs.bwd_bytes[s])
-                outgoing[bkey].append(xb)
-                incoming[(int(Op.BWD), s - 1, mb)] = xb
-            incoming.setdefault(fkey, None)
-            incoming.setdefault(bkey, None)
+    outgoing: dict[tuple[int, int, int, int], list[TransferSpec]] = {}
+    incoming: dict[tuple[int, int, int, int], TransferSpec | None] = {}
+    for task in plan.tasks():
+        key = task.key()
+        outgoing.setdefault(key, [])
+        incoming.setdefault(key, None)
+        vs = plan.virtual_stage(task)
+        if task.op == Op.FWD and vs < V - 1:
+            dst_s, dst_c = (vs + 1) % S, (vs + 1) // S
+            xf = TransferSpec(
+                task.stage, dst_s, Op.FWD, task.mb,
+                _link_bytes(costs, task.stage, forward=True), chunk=task.chunk,
+            )
+            outgoing[key].append(xf)
+            incoming[(int(Op.FWD), dst_s, task.mb, dst_c)] = xf
+        elif task.op in (Op.BWD, Op.BWD_INPUT) and vs > 0:
+            dst_s, dst_c = (vs - 1) % S, (vs - 1) // S
+            xb = TransferSpec(
+                task.stage, dst_s, task.op, task.mb,
+                _link_bytes(costs, task.stage, forward=False), chunk=task.chunk,
+            )
+            outgoing[key].append(xb)
+            incoming[(int(task.op), dst_s, task.mb, dst_c)] = xb
     return TaskGraph(plan=plan, costs=costs, outgoing=outgoing, incoming=incoming)

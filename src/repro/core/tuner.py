@@ -8,6 +8,13 @@ the cost model, and (c) picks the argmin.  Compute profiles are *not*
 re-measured (devices are exclusive).  All candidates stay alive — the next
 interval may pick a different k, and switching carries no parameter-state
 cost because (k, b) do not affect the model parameters (§5.4).
+
+When the candidate set spans several schedule *kinds* (zero-bubble,
+interleaved — see :func:`repro.core.candidates.enumerate_candidates`), the
+same argmin switches the schedule kind too: under heavy preemption the
+grouped plans win, while on a quiet network the zero-bubble plan's shorter
+fill/drain takes over.  Interleaved candidates additionally probe the
+virtual-stage wrap link (``S-1 -> 0``) their ring actually uses.
 """
 
 from __future__ import annotations
@@ -30,6 +37,7 @@ class TuningRecord:
     chosen: str
     chosen_k: int
     switched: bool
+    chosen_kind: str = "kfkb"
 
 
 class AutoTuner:
@@ -56,14 +64,21 @@ class AutoTuner:
     def _profile_links(self, cand: Candidate, now: float) -> dict[tuple[int, int], float]:
         costs = self.stage_costs_for(cand)
         S = cand.plan.num_stages
+        # (src, dst, nbytes): the chain links with their actual transfer sizes
+        probes = [(s, s + 1, costs.fwd_bytes[s]) for s in range(S - 1)]
+        probes += [(s + 1, s, costs.bwd_bytes[s + 1]) for s in range(S - 1)]
+        if cand.plan.num_virtual > 1 and S > 2:
+            # the interleaved ring also crosses the wrap link in both roles;
+            # wrap transfers carry the same hidden state as any other hop, so
+            # probe with in-contract entries (bwd_bytes[0] is a placeholder)
+            probes += [
+                (S - 1, 0, costs.fwd_bytes[S - 2]),
+                (0, S - 1, costs.bwd_bytes[1]),
+            ]
         bw: dict[tuple[int, int], float] = {}
-        for s in range(S - 1):
-            fb = costs.fwd_bytes[s]
-            self.net_profiler.measure(s, s + 1, fb, now, probes=self.probes)
-            bw[(s, s + 1)] = self.net_profiler.effective_bandwidth(s, s + 1, fb)
-            bb = costs.bwd_bytes[s + 1]
-            self.net_profiler.measure(s + 1, s, bb, now, probes=self.probes)
-            bw[(s + 1, s)] = self.net_profiler.effective_bandwidth(s + 1, s, bb)
+        for src, dst, nbytes in probes:
+            self.net_profiler.measure(src, dst, nbytes, now, probes=self.probes)
+            bw[(src, dst)] = self.net_profiler.effective_bandwidth(src, dst, nbytes)
         return bw
 
     def evaluate(self, now: float) -> dict[str, float]:
@@ -87,6 +102,7 @@ class AutoTuner:
             chosen=best.name,
             chosen_k=best.k,
             switched=switched,
+            chosen_kind=best.plan.kind,
         )
         self.history.append(rec)
         return rec

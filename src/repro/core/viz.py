@@ -3,8 +3,11 @@
 Two views, both matching the paper's figures:
 
 * :func:`render_tick_table` — the zero-comm lock-step layout (Fig 2's
-  idealized grids): one row per stage, one column per tick, ``F``/``B``
-  cells tagged with the micro-batch index (mod 10), ``.`` for bubbles.
+  idealized grids) of ANY family member: one row per device, one column
+  per tick.  ``F``/``B`` cells are tagged with the micro-batch index
+  (mod 10); zero-bubble weight-gradient fillers render as ``W``; for
+  interleaved plans every cell carries a chunk suffix (``F3b`` = forward
+  of micro-batch 3 on the device's second chunk); ``.`` marks bubbles.
 * :func:`render_sim_timeline` — the discrete-event simulator's actual task
   intervals under a network trace, quantized to a character raster; shows
   where preemption stretches the pipeline (Fig 2's preempted rows).
@@ -12,13 +15,18 @@ Two views, both matching the paper's figures:
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.schedule import Op, SchedulePlan, tick_table
+from repro.core.schedule import Op, SchedulePlan, lower_to_table
 from repro.core.simulator import SimResult
 from repro.core.taskgraph import TaskGraph
 
 __all__ = ["render_tick_table", "render_sim_timeline"]
+
+_OP_SYMBOL = {
+    int(Op.FWD): "F",
+    int(Op.BWD): "B",
+    int(Op.BWD_INPUT): "B",  # the critical backward half keeps the paper's "B"
+    int(Op.BWD_WEIGHT): "W",
+}
 
 
 def render_tick_table(plan: SchedulePlan) -> str:
@@ -27,17 +35,22 @@ def render_tick_table(plan: SchedulePlan) -> str:
         stage 0 |F0 F1 B0 F2 B1 F3 B2 .. B3|
         stage 1 |.. F0 B0 F1 B1 F2 B2 F3 B3|
     """
-    table = tick_table(plan)
-    S, T, _ = table.shape
+    table = lower_to_table(plan)
+    S, T = table.num_stages, table.num_ticks
+    chunked = plan.num_virtual > 1
+    idle = "..." if chunked else ".."
     rows = []
     for s in range(S):
         cells = []
         for t in range(T):
-            op, mb, _ = (int(v) for v in table[s, t])
+            op, mb, chunk, _ = (int(v) for v in table.grid[s, t])
             if op == int(Op.IDLE):
-                cells.append("..")
+                cells.append(idle)
             else:
-                cells.append(f"{'F' if op == int(Op.FWD) else 'B'}{mb % 10}")
+                cell = f"{_OP_SYMBOL[op]}{mb % 10}"
+                if chunked:
+                    cell += chr(ord("a") + chunk)
+                cells.append(cell)
         rows.append(f"stage {s} |" + " ".join(cells) + "|")
     header = f"{plan.name}: S={S} M={plan.num_microbatches} ({T} ticks)"
     return "\n".join([header] + rows)
@@ -58,7 +71,7 @@ def render_sim_timeline(
             dur = graph.task_time(task)
             a = int((fin - dur) * scale)
             b = max(int(fin * scale), a + 1)
-            ch = "F" if task.op == Op.FWD else "B"
+            ch = _OP_SYMBOL.get(int(task.op), "?")
             for i in range(a, min(b, width)):
                 row[i] = ch
         busy = result.busy_time[s] / end

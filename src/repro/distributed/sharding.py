@@ -100,7 +100,10 @@ def _spec_for(path: str, shape: tuple[int, ...], mesh: Mesh, fsdp: bool = True) 
             if axis == "model" and _fits(shape[i], tp):
                 spec[i] = "model"
             elif axis == "data" and (fsdp or force) and _fits(shape[i], dsz) and data_axes:
-                spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                # always the tuple form: P(("data",)) and P("data") shard
+                # identically, but PartitionSpec equality distinguishes them
+                # and the declared layout intent is "all data axes"
+                spec[i] = data_axes
 
     is_expert = any(k in path for k in _EXPERT)
     # leading stacked-scan dim(s): [n_blocks, ...] never sharded

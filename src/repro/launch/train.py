@@ -23,7 +23,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import get_arch

@@ -19,10 +19,9 @@ Decode batches carry ``tokens`` [B,1] (all families) plus ``memory``
 
 from __future__ import annotations
 
-from typing import Any, Mapping
+from typing import Mapping
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import transformer as tf
 from repro.models.common import ModelConfig

@@ -10,7 +10,6 @@ sliding window vs global) that the assembly code in
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax.numpy as jnp

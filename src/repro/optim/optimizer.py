@@ -11,8 +11,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
-import jax.numpy as jnp
-
 from repro.optim.adafactor import adafactor_init, adafactor_update
 from repro.optim.adamw import adamw_init, adamw_update
 from repro.optim.clipping import clip_by_global_norm

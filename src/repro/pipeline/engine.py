@@ -1,31 +1,45 @@
-"""kFkB pipeline execution engines.
+"""Schedule-family pipeline execution engines.
 
-Two executors drive the SAME tick table (``repro.core.schedule.tick_table``),
+Two executors drive the SAME lowered :class:`~repro.core.schedule.TabularPlan`,
 which is what makes the scheduling layer real rather than simulated:
 
-* :func:`reference_pipeline_grads` — single-device Python walk of the tick
-  table.  Executes forwards/backwards in exactly the plan's order with
-  explicit activation slots and transfer buffers; used to validate that any
-  kFkB plan computes gradients identical to the unpipelined model.
+* :func:`reference_pipeline_grads` — single-device Python walk of the
+  tabular grid.  Executes every task kind (forward, combined backward,
+  zero-bubble ``BWD_INPUT``/``BWD_WEIGHT``, interleaved chunks) in exactly
+  the plan's order with explicit activation slots and transfer buffers;
+  used to validate that ANY family plan computes gradients identical to the
+  unpipelined model.
 
 * :func:`make_pipeline_step` — the real lock-step ``shard_map`` program:
-  stages live on the mesh's ``stage`` axis (one device each in the test
-  mesh; the "model" axis in production), data parallel over the remaining
-  axis.  Each tick every device executes at most one task (``lax.switch``
-  on its table row), then one ``ppermute`` per direction moves activations
-  down / gradients up.  Arrivals land in §4.4-style FIFO ring queues whose
-  push schedule is *static* (derived from the table), so kFkB's
-  early-arrival buffering is structural, exactly as analyzed in the paper.
+  devices live on the mesh's ``stage`` axis, data parallel over the
+  remaining axis.  Each tick every device executes at most one task
+  (``lax.switch`` on its grid row), then one ``ppermute`` per direction
+  moves activations down / gradients up (a full ring when the plan is
+  interleaved — virtual stage ``j`` lives on device ``j % S``, so the
+  forward chain wraps ``S-1 -> 0``).  Arrivals land in §4.4-style FIFO ring
+  queues whose push schedule is *static* (derived from the grid), so
+  kFkB's early-arrival buffering is structural, exactly as analyzed in the
+  paper.
 
 Backward uses the stage-input checkpoint policy: a stage saves only its
 input per in-flight micro-batch and rematerializes the stage body inside
 ``jax.vjp`` during the backward task — matching the memory model
-(``checkpoint_policy="stage_input"``).
+(``checkpoint_policy="stage_input"``).  Zero-bubble plans split that
+backward: ``BWD_INPUT`` rematerializes and emits only the input gradient
+(keeping the upstream critical path short) while stashing the incoming
+output gradient in a per-slot context; ``BWD_WEIGHT`` later rematerializes
+again to produce the weight gradients and frees the slot.  The split costs
+one extra rematerialization — the price of filling bubbles with W work
+without storing per-layer activations.
+
+Interleaved plans expect a :class:`~repro.pipeline.stage.StagedModel` built
+with ``S * v`` stages; parameter stacks are in *global virtual-stage
+order*, and the engine internally re-orders them to Megatron's looped
+placement (device ``s`` hosts chunks ``{c * S + s}``).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -34,7 +48,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.schedule import Op, SchedulePlan, tick_table
+from repro.core.schedule import Op, SchedulePlan, lower_to_table
 from repro.pipeline.stage import StagedModel
 
 __all__ = [
@@ -50,33 +64,58 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-def arrival_tables(table: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """``fwd_arrive[s, t]`` — stage ``s`` receives a forward activation at
-    the END of tick ``t`` (its upstream neighbour executed FWD at ``t``);
-    ``bwd_arrive[s, t]`` likewise for gradients from downstream."""
-    S, T, _ = table.shape
+_BWD_SENDERS = (int(Op.BWD), int(Op.BWD_INPUT))
+
+
+def _grid_chunks(table: np.ndarray) -> np.ndarray:
+    """Chunk column of a grid; legacy [S, T, 3] tick tables are chunkless."""
+    if table.shape[-1] >= 4:
+        return table[:, :, 2]
+    return np.zeros(table.shape[:2], dtype=np.int32)
+
+
+def arrival_tables(
+    table: np.ndarray, num_virtual: int = 1
+) -> tuple[np.ndarray, np.ndarray]:
+    """``fwd_arrive[s, t]`` — device ``s`` receives a forward activation at
+    the END of tick ``t`` (its upstream neighbour executed a sending FWD at
+    ``t``); ``bwd_arrive[s, t]`` likewise for gradients from downstream.
+    Accepts both the legacy ``[S, T, 3]`` tick table and the ``[S, T, 4]``
+    tabular grid; for interleaved plans the neighbours wrap around the ring
+    and a task only sends if it is not the boundary virtual stage."""
+    S, T = table.shape[:2]
+    ops = table[:, :, 0]
+    vstage = _grid_chunks(table) * S + np.arange(S)[:, None]
+    V = S * num_virtual
+    sends_f = (ops == int(Op.FWD)) & (vstage != V - 1)
+    sends_b = np.isin(ops, _BWD_SENDERS) & (vstage != 0)
     fwd = np.zeros((S, T), bool)
     bwd = np.zeros((S, T), bool)
     for s in range(S):
-        if s > 0:
-            fwd[s] = table[s - 1, :, 0] == int(Op.FWD)
-        if s < S - 1:
-            bwd[s] = table[s + 1, :, 0] == int(Op.BWD)
+        up = (s - 1) % S if num_virtual > 1 else s - 1
+        if up >= 0:
+            fwd[s] = sends_f[up]
+        down = (s + 1) % S if num_virtual > 1 else s + 1
+        if down < S:
+            bwd[s] = sends_b[down]
     return fwd, bwd
 
 
-def queue_capacities(table: np.ndarray) -> tuple[int, int]:
+def queue_capacities(table: np.ndarray, num_virtual: int = 1) -> tuple[int, int]:
     """Exact max in-flight depth of the fwd / bwd arrival queues."""
-    S, T, _ = table.shape
-    fwd_arr, bwd_arr = arrival_tables(table)
+    S, T = table.shape[:2]
+    ops = table[:, :, 0]
+    vstage = _grid_chunks(table) * S + np.arange(S)[:, None]
+    V = S * num_virtual
+    fwd_arr, bwd_arr = arrival_tables(table, num_virtual)
     cap_f = cap_b = 1
     for s in range(S):
         depth_f = depth_b = 0
         for t in range(T):
             # consumption happens during tick t, arrivals at its end
-            if table[s, t, 0] == int(Op.FWD) and s > 0:
+            if ops[s, t] == int(Op.FWD) and vstage[s, t] != 0:
                 depth_f -= 1
-            if table[s, t, 0] == int(Op.BWD) and s < S - 1:
+            if ops[s, t] in _BWD_SENDERS and vstage[s, t] != V - 1:
                 depth_b -= 1
             if fwd_arr[s, t]:
                 depth_f += 1
@@ -87,93 +126,132 @@ def queue_capacities(table: np.ndarray) -> tuple[int, int]:
     return cap_f, cap_b
 
 
+def _looped_placement(num_stages: int, num_virtual: int) -> np.ndarray:
+    """Permutation mapping device-major position ``s * v + c`` to the global
+    virtual stage ``c * S + s`` it hosts (identity when ``v == 1``)."""
+    S, v = num_stages, num_virtual
+    return np.array([c * S + s for s in range(S) for c in range(v)], dtype=np.int64)
+
+
 # ---------------------------------------------------------------------------
-# Reference executor (single device, Python loop over the tick table)
+# Reference executor (single device, Python loop over the tabular grid)
 # ---------------------------------------------------------------------------
 
 
 def reference_pipeline_grads(
     staged: StagedModel, all_params, tokens, labels, plan: SchedulePlan
 ):
-    """Execute the plan on one device, following the tick table exactly.
+    """Execute any family plan on one device, following the grid exactly.
 
-    tokens/labels: [M, b, T].  Returns (mean loss, grads pytree like
-    ``all_params``) — bitwise comparable against ``jax.grad`` of
-    ``staged.full_loss`` up to float reduction order.
+    tokens/labels: [M, b, T].  ``all_params`` leaves are stacked over the
+    ``S * v`` virtual stages in global order.  Returns (mean loss, grads
+    pytree like ``all_params``) — bitwise comparable against ``jax.grad``
+    of ``staged.full_loss`` up to float reduction order.
     """
     S, M = plan.num_stages, plan.num_microbatches
-    assert S == staged.num_stages
-    table = tick_table(plan)
-    n_slots = int(table[:, :, 2].max()) + 1
+    v = plan.num_virtual
+    V = S * v
+    assert V == staged.num_stages, (
+        f"staged model has {staged.num_stages} stages; plan needs {V} virtual stages"
+    )
+    table = lower_to_table(plan)
+    grid = table.grid
 
-    def p_of(s):
-        return jax.tree_util.tree_map(lambda p: p[s], all_params)
+    def p_of(vs):
+        return jax.tree_util.tree_map(lambda p: p[vs], all_params)
 
-    slots: list[dict[int, Any]] = [dict() for _ in range(S)]
-    fwd_wire: list[dict[int, Any]] = [dict() for _ in range(S)]  # mb -> act
-    bwd_wire: list[dict[int, Any]] = [dict() for _ in range(S)]  # mb -> grad
+    slots: list[dict[tuple[int, int], Any]] = [dict() for _ in range(S)]
+    wctx: list[dict[tuple[int, int], Any]] = [dict() for _ in range(S)]
+    fwd_wire: list[dict[tuple[int, int], Any]] = [dict() for _ in range(S)]
+    bwd_wire: list[dict[tuple[int, int], Any]] = [dict() for _ in range(S)]
     grads = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), all_params
     )
     loss_sum = jnp.zeros((), jnp.float32)
 
-    def add_grad(grads, s, dparams):
+    def add_grad(grads, vs, dparams):
         def upd(g, d):
-            return g.at[s].add(d.astype(jnp.float32))
+            return g.at[vs].add(d.astype(jnp.float32))
 
         return jax.tree_util.tree_map(upd, grads, dparams)
 
-    del n_slots
-    T_ticks = table.shape[1]
-    for t in range(T_ticks):
-        sends: list[tuple[str, int, int, Any]] = []
+    for t in range(table.num_ticks):
+        sends: list[tuple[str, int, tuple[int, int], Any]] = []
         for s in range(S):
-            op, mb, slot = (int(v) for v in table[s, t])
+            op, mb, chunk, _ = (int(x) for x in grid[s, t])
             if op == int(Op.IDLE):
                 continue
-            params_s = p_of(s)
+            vs = chunk * S + s
+            params_v = p_of(vs)
+            key = (mb, chunk)
             if op == int(Op.FWD):
                 x = (
-                    staged.embed_tokens(params_s, tokens[mb])
-                    if s == 0
-                    else fwd_wire[s].pop(mb)
+                    staged.embed_tokens(params_v, tokens[mb])
+                    if vs == 0
+                    else fwd_wire[s].pop(key)
                 )
-                slots[s][mb] = x
-                if s < S - 1:
-                    y = staged.stage_hidden(params_s, x)
-                    sends.append(("f", s + 1, mb, y))
-                # last stage: fwd output feeds its own bwd; recomputed there
-            else:  # BWD
-                x = slots[s].pop(mb)
-                if s == S - 1:
+                slots[s][key] = x
+                if vs < V - 1:
+                    y = staged.stage_hidden(params_v, x)
+                    nxt = vs + 1
+                    sends.append(("f", nxt % S, (mb, nxt // S), y))
+                # last virtual stage: fwd output feeds its own bwd; recomputed
+            elif op in (int(Op.BWD), int(Op.BWD_INPUT)):
+                zb = op == int(Op.BWD_INPUT)
+                x = slots[s][key] if zb else slots[s].pop(key)
+                if vs == V - 1:
                     def loss_fn(p, xx):
                         h = staged.stage_hidden(p, xx)
                         return staged.head_loss(p, h, labels[mb])
 
-                    loss, vjp = jax.vjp(loss_fn, params_s, x)
-                    dparams, dx = vjp(jnp.ones((), loss.dtype) / M)
+                    if zb:
+                        loss, vjp = jax.vjp(lambda xx: loss_fn(params_v, xx), x)
+                        (dx,) = vjp(jnp.ones((), loss.dtype) / M)
+                        wctx[s][key] = None  # W recomputes the loss path
+                    else:
+                        loss, vjp = jax.vjp(loss_fn, params_v, x)
+                        dparams, dx = vjp(jnp.ones((), loss.dtype) / M)
                     loss_sum = loss_sum + loss / M
                 else:
-                    dy = bwd_wire[s].pop(mb)
-
-                    def fwd_fn(p, xx):
-                        return staged.stage_hidden(p, xx)
-
-                    _, vjp = jax.vjp(fwd_fn, params_s, x)
-                    dparams, dx = vjp(dy)
-                if s == 0:
-                    # gradient into the embedding via the stage-0 input
+                    dy = bwd_wire[s].pop(key)
+                    if zb:
+                        _, vjp = jax.vjp(lambda xx: staged.stage_hidden(params_v, xx), x)
+                        (dx,) = vjp(dy)
+                        wctx[s][key] = dy
+                    else:
+                        _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), params_v, x)
+                        dparams, dx = vjp(dy)
+                if vs == 0:
+                    # gradient into the embedding via the first stage input
                     def embed_fn(p):
                         return staged.embed_tokens(p, tokens[mb])
 
-                    _, evjp = jax.vjp(embed_fn, params_s)
+                    _, evjp = jax.vjp(embed_fn, params_v)
                     (dparams_e,) = evjp(dx)
-                    dparams = jax.tree_util.tree_map(jnp.add, dparams, dparams_e)
+                    if zb:
+                        grads = add_grad(grads, vs, dparams_e)
+                    else:
+                        dparams = jax.tree_util.tree_map(jnp.add, dparams, dparams_e)
                 else:
-                    sends.append(("b", s - 1, mb, dx))
-                grads = add_grad(grads, s, dparams)
-        for kind, dst, mb, payload in sends:
-            (fwd_wire if kind == "f" else bwd_wire)[dst][mb] = payload
+                    sends.append(("b", (vs - 1) % S, (mb, (vs - 1) // S), dx))
+                if not zb:
+                    grads = add_grad(grads, vs, dparams)
+            else:  # BWD_WEIGHT
+                x = slots[s].pop(key)
+                dy = wctx[s].pop(key)
+                if vs == V - 1:
+                    def loss_p(p):
+                        h = staged.stage_hidden(p, x)
+                        return staged.head_loss(p, h, labels[mb])
+
+                    loss, vjp = jax.vjp(loss_p, params_v)
+                    (dparams,) = vjp(jnp.ones((), loss.dtype) / M)
+                else:
+                    _, vjp = jax.vjp(lambda p: staged.stage_hidden(p, x), params_v)
+                    (dparams,) = vjp(dy)
+                grads = add_grad(grads, vs, dparams)
+        for kind, dst, key, payload in sends:
+            (fwd_wire if kind == "f" else bwd_wire)[dst][key] = payload
     return loss_sum, grads
 
 
@@ -191,32 +269,53 @@ def make_pipeline_step(
 ):
     """Build ``step(all_params, tokens, labels) -> (loss, grads)``.
 
-    ``all_params`` leaves are stacked [S, ...]; tokens/labels [M, b, T].
-    Stages map onto ``stage_axis`` (size S); if ``data_axis`` is given the
-    micro-batch dim ``b`` is data-parallel over it and grads are psum'd.
-    The returned function is shard_map'd but NOT jitted (callers jit).
+    ``all_params`` leaves are stacked [S * v, ...] in global virtual-stage
+    order; tokens/labels [M, b, T].  Devices map onto ``stage_axis`` (size
+    S); if ``data_axis`` is given the micro-batch dim ``b`` is
+    data-parallel over it and grads are psum'd.  The returned function is
+    shard_map'd but NOT jitted (callers jit).
     """
     S, M = plan.num_stages, plan.num_microbatches
+    v = plan.num_virtual
+    V = S * v
+    assert V == staged.num_stages, (
+        f"staged model has {staged.num_stages} stages; plan needs {V} virtual stages"
+    )
     cfg = staged.cfg
-    table_np = tick_table(plan)
-    T_ticks = table_np.shape[1]
-    n_slots = int(table_np[:, :, 2].max()) + 1
-    fwd_arr_np, bwd_arr_np = arrival_tables(table_np)
-    cap_f, cap_b = queue_capacities(table_np)
+    tabular = lower_to_table(plan)
+    tabular.validate()  # engine ring queues require the FIFO invariants
+    grid_np = tabular.grid  # [S, T, 4]
+    T_ticks = tabular.num_ticks
+    n_slots = int(grid_np[:, :, 3].max()) + 1
+    fwd_arr_np, bwd_arr_np = arrival_tables(grid_np, v)
+    cap_f, cap_b = queue_capacities(grid_np, v)
+    placement = _looped_placement(S, v)
+    inverse_placement = np.argsort(placement)
 
-    fwd_perm = [(i, i + 1) for i in range(S - 1)]
-    bwd_perm = [(i + 1, i) for i in range(S - 1)]
+    if v > 1:
+        fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+        bwd_perm = [((i + 1) % S, i) for i in range(S)]
+    else:
+        fwd_perm = [(i, i + 1) for i in range(S - 1)]
+        bwd_perm = [(i + 1, i) for i in range(S - 1)]
+
+    # lax.switch over only the ops this plan actually uses
+    present_ops = sorted({int(o) for o in np.unique(grid_np[:, :, 0])})
+    branch_of = np.full(int(max(present_ops)) + 1, -1, dtype=np.int32)
+    for i, o in enumerate(present_ops):
+        branch_of[o] = i
 
     def device_body(all_params, tokens, labels):
-        # all_params leaves [1, ...] (this stage's shard); tokens [M, b, T]
-        params = jax.tree_util.tree_map(lambda p: p[0], all_params)
+        # all_params leaves [v, ...] (this device's chunks, looped placement)
+        params = all_params
         s = jax.lax.axis_index(stage_axis)
-        table = jnp.asarray(table_np)[s]  # [T_ticks, 3]
+        grid = jnp.asarray(grid_np)[s]  # [T_ticks, 4]
         fwd_arr = jnp.asarray(fwd_arr_np)[s]  # [T_ticks]
         bwd_arr = jnp.asarray(bwd_arr_np)[s]
         b, T = tokens.shape[1], tokens.shape[2]
         d = cfg.d_model
         act = jnp.zeros((n_slots, b, T, d), cfg.dtype)
+        wctx = jnp.zeros((n_slots, b, T, d), cfg.dtype)  # zb: stashed dy per slot
         fq = jnp.zeros((cap_f, b, T, d), cfg.dtype)
         bq = jnp.zeros((cap_b, b, T, d), cfg.dtype)
         zeros_bTd = jnp.zeros((b, T, d), cfg.dtype)
@@ -229,26 +328,47 @@ def make_pipeline_step(
         bq_push = jnp.zeros((), jnp.int32)
         bq_pop = jnp.zeros((), jnp.int32)
 
-        is_first = s == 0
-        is_last = s == S - 1
+        def params_of(chunk):
+            return jax.tree_util.tree_map(
+                lambda p: jax.lax.dynamic_index_in_dim(p, chunk, 0, keepdims=False),
+                params,
+            )
 
-        def fwd_task(state, mb, slot):
-            act, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+        def add_grads(grads, chunk, dparams):
+            return jax.tree_util.tree_map(
+                lambda g, dp: g.at[chunk].add(dp.astype(jnp.float32)), grads, dparams
+            )
+
+        def vstage_flags(chunk):
+            vs = chunk * S + s
+            return vs == 0, vs == V - 1
+
+        def fwd_task(state, mb, chunk, slot):
+            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            p_c = params_of(chunk)
+            is_first, is_last = vstage_flags(chunk)
             x_wire = jax.lax.dynamic_index_in_dim(
                 fq, fq_pop % cap_f, axis=0, keepdims=False
             )
-            x_emb = staged.embed_tokens(params, tokens[mb])
+            x_emb = staged.embed_tokens(p_c, tokens[mb])
             x = jnp.where(is_first, x_emb, x_wire)
             fq_pop = fq_pop + jnp.where(is_first, 0, 1)
             act = jax.lax.dynamic_update_index_in_dim(
                 act, x.astype(act.dtype), slot, axis=0
             )
-            y = staged.stage_hidden(params, x)
+            y = staged.stage_hidden(p_c, x)
             send_f = jnp.where(is_last, zeros_bTd, y.astype(cfg.dtype))
-            return (act, fq, fq_pop, bq, bq_pop, grads, loss_sum), send_f, zeros_bTd
+            return (
+                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum),
+                send_f,
+                zeros_bTd,
+            )
 
-        def bwd_task(state, mb, slot):
-            act, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+        def bwd_task(state, mb, chunk, slot):
+            """Combined backward (kFkB / interleaved plans)."""
+            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            p_c = params_of(chunk)
+            is_first, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
 
             def last_branch(_):
@@ -256,7 +376,7 @@ def make_pipeline_step(
                     h = staged.stage_hidden(p, xx)
                     return staged.head_loss(p, h, labels[mb])
 
-                loss, vjp = jax.vjp(loss_fn, params, x)
+                loss, vjp = jax.vjp(loss_fn, p_c, x)
                 dparams, dx = vjp(jnp.ones((), loss.dtype) / M)
                 return loss / M, dparams, dx
 
@@ -264,7 +384,7 @@ def make_pipeline_step(
                 dy = jax.lax.dynamic_index_in_dim(
                     bq, bq_pop % cap_b, axis=0, keepdims=False
                 )
-                _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), params, x)
+                _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), p_c, x)
                 dparams, dx = vjp(dy.astype(cfg.dtype))
                 return jnp.zeros((), jnp.float32), dparams, dx
 
@@ -272,32 +392,112 @@ def make_pipeline_step(
             bq_pop = bq_pop + jnp.where(is_last, 0, 1)
 
             def first_branch(dp):
-                _, evjp = jax.vjp(lambda p: staged.embed_tokens(p, tokens[mb]), params)
+                _, evjp = jax.vjp(lambda p: staged.embed_tokens(p, tokens[mb]), p_c)
                 (dpe,) = evjp(dx.astype(cfg.dtype))
                 return jax.tree_util.tree_map(jnp.add, dp, dpe)
 
             dparams = jax.lax.cond(is_first, first_branch, lambda dp: dp, dparams)
-            grads = jax.tree_util.tree_map(
-                lambda g, dp: g + dp.astype(jnp.float32), grads, dparams
-            )
+            grads = add_grads(grads, chunk, dparams)
             send_b = jnp.where(is_first, zeros_bTd, dx.astype(cfg.dtype))
             return (
-                (act, fq, fq_pop, bq, bq_pop, grads, loss_sum + dloss),
+                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum + dloss),
                 zeros_bTd,
                 send_b,
             )
 
-        def idle_task(state, mb, slot):
+        def bwd_input_task(state, mb, chunk, slot):
+            """Zero-bubble B: input gradient only; stash dy for the later W."""
+            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            p_c = params_of(chunk)
+            is_first, is_last = vstage_flags(chunk)
+            x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
+
+            def last_branch(_):
+                def loss_fn(xx):
+                    h = staged.stage_hidden(p_c, xx)
+                    return staged.head_loss(p_c, h, labels[mb])
+
+                loss, vjp = jax.vjp(loss_fn, x)
+                (dx,) = vjp(jnp.ones((), loss.dtype) / M)
+                return loss / M, dx, zeros_bTd  # W recomputes the loss path
+
+            def mid_branch(_):
+                dy = jax.lax.dynamic_index_in_dim(
+                    bq, bq_pop % cap_b, axis=0, keepdims=False
+                )
+                _, vjp = jax.vjp(lambda xx: staged.stage_hidden(p_c, xx), x)
+                (dx,) = vjp(dy.astype(cfg.dtype))
+                return jnp.zeros((), jnp.float32), dx, dy.astype(cfg.dtype)
+
+            dloss, dx, dy_keep = jax.lax.cond(is_last, last_branch, mid_branch, None)
+            bq_pop = bq_pop + jnp.where(is_last, 0, 1)
+            wctx = jax.lax.dynamic_update_index_in_dim(wctx, dy_keep, slot, axis=0)
+
+            def first_branch(g):
+                _, evjp = jax.vjp(lambda p: staged.embed_tokens(p, tokens[mb]), p_c)
+                (dpe,) = evjp(dx.astype(cfg.dtype))
+                return add_grads(g, chunk, dpe)
+
+            grads = jax.lax.cond(is_first, first_branch, lambda g: g, grads)
+            send_b = jnp.where(is_first, zeros_bTd, dx.astype(cfg.dtype))
+            return (
+                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum + dloss),
+                zeros_bTd,
+                send_b,
+            )
+
+        def bwd_weight_task(state, mb, chunk, slot):
+            """Zero-bubble W: weight gradients via a second rematerialization."""
+            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            p_c = params_of(chunk)
+            _, is_last = vstage_flags(chunk)
+            x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
+            dy = jax.lax.dynamic_index_in_dim(wctx, slot, axis=0, keepdims=False)
+
+            def last_branch(_):
+                def loss_fn(p):
+                    h = staged.stage_hidden(p, x)
+                    return staged.head_loss(p, h, labels[mb])
+
+                loss, vjp = jax.vjp(loss_fn, p_c)
+                (dparams,) = vjp(jnp.ones((), loss.dtype) / M)
+                return dparams
+
+            def mid_branch(_):
+                _, vjp = jax.vjp(lambda p: staged.stage_hidden(p, x), p_c)
+                (dparams,) = vjp(dy.astype(cfg.dtype))
+                return dparams
+
+            dparams = jax.lax.cond(is_last, last_branch, mid_branch, None)
+            grads = add_grads(grads, chunk, dparams)
+            return (
+                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum),
+                zeros_bTd,
+                zeros_bTd,
+            )
+
+        def idle_task(state, mb, chunk, slot):
             return state, zeros_bTd, zeros_bTd
 
+        all_branches = {
+            int(Op.IDLE): idle_task,
+            int(Op.FWD): fwd_task,
+            int(Op.BWD): bwd_task,
+            int(Op.BWD_INPUT): bwd_input_task,
+            int(Op.BWD_WEIGHT): bwd_weight_task,
+        }
+        branches = [all_branches[o] for o in present_ops]
+        branch_lut = jnp.asarray(branch_of)
+
         for t in range(T_ticks):
-            op, mb, slot = table[t, 0], table[t, 1], table[t, 2]
-            state = (act, fq, fq_pop, bq, bq_pop, grads, loss_sum)
+            op, mb, chunk, slot = grid[t, 0], grid[t, 1], grid[t, 2], grid[t, 3]
+            state = (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum)
             state, send_f, send_b = jax.lax.switch(
-                op, [idle_task, fwd_task, bwd_task], state, mb, slot
+                branch_lut[op], branches, state, mb, chunk, slot
             )
-            act, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
-            # lock-step transfers: activations down, gradients up
+            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            # lock-step transfers: activations down, gradients up (ring when
+            # the plan is interleaved)
             recv_f = jax.lax.ppermute(send_f, stage_axis, fwd_perm)
             recv_b = jax.lax.ppermute(send_b, stage_axis, bwd_perm)
             # static-schedule arrivals: the write must be CONDITIONAL — when
@@ -317,11 +517,14 @@ def make_pipeline_step(
             bq_push = bq_push + bwd_arr[t].astype(jnp.int32)
 
         # replicated leaves (embed, final_norm) accumulate their one non-zero
-        # contribution per stage; stage-local leaves (blocks) stay local
+        # contribution per virtual stage; stage-local leaves (blocks) stay
+        # local.  Replicated rows are broadcast back across local chunks so
+        # every [v, ...] row carries the global sum (as in the v == 1 case).
         def reduce_replicated(path, g):
             top = path[0].key if hasattr(path[0], "key") else str(path[0])
             if top in ("embed", "final_norm"):
-                return jax.lax.psum(g, stage_axis)
+                total = jax.lax.psum(g.sum(axis=0), stage_axis)
+                return jnp.broadcast_to(total[None], g.shape)
             return g
 
         grads = jax.tree_util.tree_map_with_path(reduce_replicated, grads)
@@ -331,18 +534,27 @@ def make_pipeline_step(
                 lambda g: jax.lax.pmean(g, data_axis), grads
             )
             loss = jax.lax.pmean(loss, data_axis)
-        grads = jax.tree_util.tree_map(lambda g: g[None], grads)  # re-stack [1,...]
         return loss, grads
 
     param_spec = P(stage_axis)
     data_spec = P(None, data_axis) if data_axis else P()
-    step = shard_map(
+    sharded = shard_map(
         device_body,
         mesh=mesh,
         in_specs=(param_spec, data_spec, data_spec),
         out_specs=(P(), param_spec),
         check_rep=False,
     )
+
+    if v == 1:
+        return sharded  # placement is the identity — no re-ordering needed
+
+    def step(all_params, tokens, labels):
+        # global virtual-stage order -> looped device placement, and back
+        placed = jax.tree_util.tree_map(lambda p: p[placement], all_params)
+        loss, grads = sharded(placed, tokens, labels)
+        return loss, jax.tree_util.tree_map(lambda g: g[inverse_placement], grads)
+
     return step
 
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tf
-from repro.models.common import LayerSpec, ModelConfig, layer_specs
+from repro.models.common import LayerSpec, ModelConfig
 from repro.models.layers import (
     cross_entropy_loss,
     embed,

@@ -1,0 +1,53 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The deterministic tests in the suite must run on a bare environment (the
+tier-1 CI image installs only ``requirements-dev.txt``, but a stripped
+container may lack ``hypothesis``).  Test modules import ``given``,
+``settings`` and ``st`` from here instead of from ``hypothesis`` directly:
+with ``hypothesis`` installed the real objects pass straight through; when
+it is missing, each property test body turns into a clean
+``pytest.importorskip("hypothesis")`` skip at call time while every
+deterministic test in the same module keeps running.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare environments
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Chainable stand-in for ``hypothesis.strategies``.
+
+        Any attribute access or call returns the stub again, so module-level
+        strategy definitions like ``st.tuples(...).map(fn)`` import cleanly.
+        """
+
+        def _chain(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self._chain
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def _decorate(_fn):
+            def _skipped(*_a, **_k):
+                pytest.importorskip("hypothesis")
+
+            _skipped.__name__ = getattr(_fn, "__name__", "_skipped")
+            _skipped.__doc__ = getattr(_fn, "__doc__", None)
+            return _skipped
+
+        return _decorate
+
+    settings = given

@@ -14,8 +14,24 @@ from repro.training import create_train_state, make_train_step
 
 B, T = 2, 32
 
+# the big-vocab / many-expert smoke configs dominate suite runtime; their
+# full coverage moves to the `slow` tier (CI `full` job), tier-1 keeps the
+# fast archs
+_HEAVY_ARCHS = {
+    "kimi-k2-1t-a32b",
+    "llama4-maverick-400b-a17b",
+    "seamless-m4t-medium",
+    "jamba-v0.1-52b",
+}
 
-@pytest.fixture(scope="module", params=ALL_ARCH_IDS)
+
+@pytest.fixture(
+    scope="module",
+    params=[
+        pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+        for a in ALL_ARCH_IDS
+    ],
+)
 def arch(request):
     return get_arch(request.param)
 

@@ -1,7 +1,7 @@
 """§4.2 memory-limit-curve enumeration properties."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional: property tests skip cleanly
 
 from repro.core import MemoryModel, enumerate_candidates
 from repro.core.schedule import make_plan

@@ -75,6 +75,7 @@ def test_ssd_kernel_vs_sequential_oracle(B, T, H, P, N, chunk, dtype, tol):
     )
 
 
+@pytest.mark.slow
 def test_ssd_chunked_jnp_matches_sequential():
     """The chunked jnp path (what models run on CPU) vs the recurrence."""
     key = jax.random.PRNGKey(2)

@@ -1,0 +1,209 @@
+"""Schedule-family invariants: zero-bubble + interleaved over the tabular plan.
+
+Deterministic (no hypothesis): these guard the heart of the reproduction —
+every plan builder lowers to a dependency-valid TabularPlan with exact
+send/recv edges, the zero-bubble plan really removes bubbles without
+costing activation slots, and the grouped hybrids compose.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    StableTrace,
+    StageCosts,
+    simulate_plan,
+    uniform_network,
+)
+from repro.core.schedule import (
+    Op,
+    gpipe_order,
+    kfkb_order,
+    lower_to_table,
+    make_plan,
+    one_f_one_b_order,
+    peak_live_activations,
+    tick_table,
+    tick_table_stats,
+    zb_h1_order,
+)
+
+FAMILY = [
+    ("kfkb", 1, 1),
+    ("kfkb", 2, 1),
+    ("kfkb", 8, 1),  # == GPipe at M=8
+    ("zb_h1", 1, 1),
+    ("zb_h1", 2, 1),
+    ("interleaved", 1, 2),
+    ("interleaved", 2, 2),
+]
+
+
+def _plans(S=4, M=8):
+    return [
+        make_plan(S, M, k, kind=kind, num_virtual=v) for kind, k, v in FAMILY
+    ]
+
+
+def test_every_builder_lowers_to_valid_tabular_plan():
+    """Acceptance: all plan builders (1F1B, GPipe, kFkB, ZB-H1, interleaved)
+    lower to TabularPlan, and the lowering satisfies the dependency-validity
+    and FIFO invariants (every recv preceded by its matching send)."""
+    for plan in _plans():
+        table = plan.lower()
+        table.validate()
+        # every non-idle cell appears once per task of the plan
+        busy = int((table.grid[:, :, 0] != int(Op.IDLE)).sum())
+        assert busy == sum(len(o) for o in plan.orders)
+
+
+def test_edges_cover_exactly_the_cross_device_transfers():
+    S, M = 4, 8
+    for plan in _plans(S, M):
+        table = plan.lower()
+        V = plan.total_virtual_stages
+        n_fwd = sum(1 for t in plan.tasks() if t.op == Op.FWD) - M  # vstage 0 local
+        n_bwd = M * (V - 1)  # every non-last virtual stage's B receives
+        fwd_edges = [e for e in table.edges if e.is_forward]
+        bwd_edges = [e for e in table.edges if not e.is_forward]
+        assert len(fwd_edges) == n_fwd == M * (V - 1)
+        assert len(bwd_edges) == n_bwd
+        for e in table.edges:
+            assert e.send_tick < e.recv_tick
+
+
+def test_degenerate_k_cases():
+    """k == 1 is exactly 1F1B and k == M exactly GPipe, for the base kind and
+    through make_plan's aliases."""
+    S, M = 4, 8
+    for s in range(S):
+        assert kfkb_order(S, M, 1, s) == one_f_one_b_order(S, M, s)
+        assert kfkb_order(S, M, M, s) == gpipe_order(S, M, s)
+    alias_1f1b = make_plan(S, M, 3, kind="1f1b")
+    assert alias_1f1b.k == 1 and alias_1f1b.kind == "kfkb"
+    alias_gpipe = make_plan(S, M, 1, kind="gpipe")
+    assert alias_gpipe.k == M
+
+
+def test_zb_streams_are_fifo_and_complete():
+    """Per-stage F, B, W streams of ZB-H1 each run every micro-batch exactly
+    once in FIFO order, W strictly after its B, B strictly after its F."""
+    S, M = 4, 8
+    for k in (1, 2, 4, M):
+        plan = make_plan(S, M, k, kind="zb_h1")
+        for order in plan.orders:
+            pos = {}
+            for i, t in enumerate(order):
+                pos[(int(t.op), t.mb)] = i
+            for op in (Op.FWD, Op.BWD_INPUT, Op.BWD_WEIGHT):
+                mbs = [t.mb for t in order if t.op == op]
+                assert mbs == sorted(mbs), f"{op} stream not FIFO"
+                assert set(mbs) == set(range(M))
+            for mb in range(M):
+                assert pos[(int(Op.FWD), mb)] < pos[(int(Op.BWD_INPUT), mb)]
+                assert pos[(int(Op.BWD_INPUT), mb)] < pos[(int(Op.BWD_WEIGHT), mb)]
+
+
+def test_zb_h1_memory_equals_1f1b():
+    """The "H1" guarantee: peak live activations (slot needs) match the
+    equal-k kFkB plan per stage — zero-bubble is free memory-wise."""
+    for S, M in [(2, 4), (4, 8), (4, 16), (8, 16)]:
+        for k in (1, 2):
+            zb = peak_live_activations(make_plan(S, M, k, kind="zb_h1"))
+            base = peak_live_activations(make_plan(S, M, k))
+            assert zb == base, (S, M, k, zb, base)
+
+
+def test_zb_h1_order_per_stage_helper():
+    S, M = 4, 8
+    plan = make_plan(S, M, 1, kind="zb_h1")
+    for s in range(S):
+        assert [(t.op, t.mb) for t in plan.orders[s]] == zb_h1_order(S, M, s)
+
+
+def test_interleaved_divisibility_guard():
+    with pytest.raises(ValueError):
+        make_plan(4, 6, 1, kind="interleaved", num_virtual=2)  # G=6, S=4
+    with pytest.raises(ValueError):
+        make_plan(4, 8, 3, kind="interleaved", num_virtual=2)  # k does not divide M
+    with pytest.raises(ValueError):
+        make_plan(4, 8, 1, kind="kfkb", num_virtual=2)  # chunks need interleaved
+
+
+def test_interleaved_chunks_cover_all_microbatches():
+    S, M, v = 4, 8, 2
+    for k in (1, 2):
+        plan = make_plan(S, M, k, kind="interleaved", num_virtual=v)
+        for order in plan.orders:
+            for c in range(v):
+                for op in (Op.FWD, Op.BWD):
+                    mbs = [t.mb for t in order if t.op == op and t.chunk == c]
+                    assert mbs == sorted(mbs)
+                    assert set(mbs) == set(range(M))
+
+
+def test_interleaved_shrinks_fill_drain_bubble():
+    """The point of virtual stages: on the unit-cost tick grid the bubble
+    fraction strictly drops going 1F1B -> interleaved (same device count)."""
+    S, M = 4, 8
+    base = tick_table_stats(tick_table(make_plan(S, M, 1)))
+    inter = make_plan(S, M, 1, kind="interleaved", num_virtual=2).lower().stats()
+    assert inter["bubble_fraction"] < base["bubble_fraction"]
+
+
+def test_slot_liveness_family():
+    """Slots are liveness-exact for every family member: the number of
+    distinct slots per device equals its peak live count, with no gaps."""
+    for plan in _plans():
+        peaks = peak_live_activations(plan)
+        for s, order in enumerate(plan.orders):
+            slots_used = {t.slot for t in order if t.op == Op.FWD}
+            assert slots_used == set(range(peaks[s]))
+
+
+def test_legacy_tick_table_shim_matches_grid():
+    plan = make_plan(4, 8, 2)
+    legacy = tick_table(plan)
+    grid = lower_to_table(plan).grid
+    assert legacy.shape == (4, grid.shape[1], 3)
+    np.testing.assert_array_equal(legacy, grid[:, :, [0, 1, 3]])
+
+
+def test_simulator_runs_every_family_member():
+    S, M = 4, 8
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(S, lambda: StableTrace(10.0))
+    for plan in _plans(S, M):
+        res = simulate_plan(plan, costs, net)
+        # conservation: every device executed all of its tasks
+        assert len(res.task_finish) == sum(len(o) for o in plan.orders)
+        assert res.pipeline_length > 0
+
+
+def test_enumerate_rejects_unknown_kind():
+    """A typo'd kind must fail loudly, not silently drop the whole family."""
+    from repro.core import MemoryModel, enumerate_candidates
+
+    mm = MemoryModel.uniform(
+        num_stages=4, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+    with pytest.raises(ValueError, match="unknown schedule kind"):
+        enumerate_candidates(4, 32, mm, 1e8, max_k=2, kinds=("kfkb", "zb-h1"))
+
+
+def test_zb_memory_model_prices_the_dy_context():
+    """ZB-H1 matches kFkB in peak *slots* but must cost MORE in bytes: the
+    engine stashes a hidden-sized dy next to each saved stage input."""
+    from repro.core import MemoryModel
+
+    mm = MemoryModel.uniform(
+        num_stages=4, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+    base = make_plan(4, 8, 2, micro_batch_size=4)
+    zb = make_plan(4, 8, 2, micro_batch_size=4, kind="zb_h1")
+    assert peak_live_activations(zb) == peak_live_activations(base)
+    assert mm.peak_bytes(zb) > mm.peak_bytes(base)

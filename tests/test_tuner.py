@@ -98,3 +98,42 @@ def test_profiler_moving_average_window():
         prof.measure(0, 1, 100.0, now=0.0, probes=1)
     assert prof.effective_time(0, 1, 100.0) == pytest.approx(10.0)
     assert prof.effective_bandwidth(0, 1, 100.0) == pytest.approx(10.0)
+
+
+def test_tuner_selects_schedule_kind_not_just_k():
+    """Acceptance: with a kind-diverse candidate set the tuner's argmin can
+    switch the schedule *kind*.  On a fast dedicated network the
+    zero-bubble / interleaved plans win (shorter fill/drain); under heavy
+    preemption the chosen estimate still tracks the argmin and the record
+    carries the kind."""
+    S, B = 4, 32
+    mm = MemoryModel.uniform(
+        num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+    cands = enumerate_candidates(
+        S, B, mm, 1e8, max_k=4, kinds=("kfkb", "zb_h1", "interleaved"),
+    )
+    kinds = {c.kind for c in cands}
+    assert kinds == {"kfkb", "zb_h1", "interleaved"}
+    assert len({c.name for c in cands}) == len(cands)  # names stay unique
+
+    costs_by_b = {}
+
+    def costs_for(cand):
+        if cand.micro_batch_size not in costs_by_b:
+            costs_by_b[cand.micro_batch_size] = StageCosts.uniform(
+                S, 0.1 * cand.micro_batch_size, act_bytes=float(cand.micro_batch_size)
+            )
+        return costs_by_b[cand.micro_batch_size]
+
+    fast = uniform_network(S, lambda: StableTrace(1e12))
+    rec = AutoTuner(cands, costs_for, NetworkProfiler(fast)).tune(0.0)
+    assert rec.chosen_kind in ("zb_h1", "interleaved")  # beats every kFkB plan
+    assert rec.estimates[rec.chosen] == min(rec.estimates.values())
+
+    slow = uniform_network(S, lambda: StableTrace(0.5))
+    rec2 = AutoTuner(cands, costs_for, NetworkProfiler(slow)).tune(0.0)
+    assert rec2.estimates[rec2.chosen] == min(rec2.estimates.values())
+    assert rec2.chosen_kind in ("kfkb", "zb_h1", "interleaved")
