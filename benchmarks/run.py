@@ -48,13 +48,15 @@ def dry_run() -> int:
     S, M = 4, 8
     costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
     net = uniform_network(S, lambda: StableTrace(4.0))
-    for kind, k, v in [
-        ("kfkb", 1, 1),
-        ("kfkb", 2, 1),
-        ("zb_h1", 1, 1),
-        ("interleaved", 1, 2),
+    for kind, k, v, w in [
+        ("kfkb", 1, 1, 0),
+        ("kfkb", 2, 1, 0),
+        ("zb_h1", 1, 1, 0),
+        ("zb_h2", 1, 1, 1),
+        ("interleaved", 1, 2, 0),
+        ("interleaved_zb", 1, 2, 0),
     ]:
-        plan = make_plan(S, M, k, kind=kind, num_virtual=v)
+        plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
         res = simulate_plan(plan, costs, net)
         print(f"[dry-run] {plan.name:20s} length={res.pipeline_length:7.2f} "
               f"bubble={res.bubble_fraction:.3f}")

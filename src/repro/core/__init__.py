@@ -11,7 +11,7 @@ Public API re-exports the pieces a user composes:
 from repro.core.candidates import Candidate, enumerate_candidates
 from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
 from repro.core.costmodel import CostModel, closed_form_1f1b_length
-from repro.core.memory_model import MemoryModel, StageMemorySpec
+from repro.core.memory_model import MemoryModel, StageMemorySpec, predicted_peak_live
 from repro.core.network import (
     BandwidthTrace,
     BurstyTrace,
@@ -23,8 +23,10 @@ from repro.core.network import (
 )
 from repro.core.profiler import ComputeProfiler, MovingAverage, NetworkProfiler
 from repro.core.schedule import (
+    INTERLEAVED_KINDS,
     Op,
     PLAN_KINDS,
+    ZB_KINDS,
     PlanEdge,
     SchedulePlan,
     TabularPlan,
@@ -49,6 +51,7 @@ __all__ = [
     "closed_form_1f1b_length",
     "MemoryModel",
     "StageMemorySpec",
+    "predicted_peak_live",
     "BandwidthTrace",
     "BurstyTrace",
     "Network",
@@ -61,6 +64,8 @@ __all__ = [
     "NetworkProfiler",
     "Op",
     "PLAN_KINDS",
+    "ZB_KINDS",
+    "INTERLEAVED_KINDS",
     "PlanEdge",
     "SchedulePlan",
     "TabularPlan",

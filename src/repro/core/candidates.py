@@ -8,13 +8,22 @@ under-utilize device memory (point *A* of Fig 3) and points above it OOM
 (point *B*).  Only curve points (like *C*) are kept: for each (kind, k)
 from 1 upwards, greedily take the **largest** feasible ``b``.
 
+``zb_h2`` candidates add one more memory-priced axis: the extra-warmup
+depth ``w``.  Peak bytes are monotone non-decreasing in ``w`` (each unit
+raises the per-stage live cap by one until the group count clamps it), so
+the curve point is found by **binary-searching the largest ``w``** the
+:class:`MemoryModel` limit admits at the chosen ``b``; a (k, b) where not
+even ``w = 1`` fits — or where the group count leaves no warmup headroom,
+making H2 degenerate to H1 — yields no H2 candidate at all, which is how
+the tuner "refuses" H2 and falls back to H1 under a tight limit.
+
 Duplicated (kind, k, b) never arise (b is a function of (kind, k) on the
 curve), but two k values can map to the same b when memory is
 activation-light; both are kept — they are genuinely different schedules
 with different overlap behaviour.  Schedule kinds beyond kFkB are opt-in
 via ``kinds=`` so the paper's original (k, b)-only search stays the
-default; passing e.g. ``kinds=("kfkb", "zb_h1")`` lets the adaptive loop
-switch schedule *kind* under preemption, not just ``k``.
+default; passing e.g. ``kinds=("kfkb", "zb_h1", "zb_h2")`` lets the
+adaptive loop switch schedule *kind* under preemption, not just ``k``.
 """
 
 from __future__ import annotations
@@ -23,7 +32,13 @@ import dataclasses
 from typing import Callable, Sequence
 
 from repro.core.memory_model import MemoryModel
-from repro.core.schedule import PLAN_KINDS, SchedulePlan, make_plan
+from repro.core.schedule import (
+    INTERLEAVED_KINDS,
+    PLAN_KINDS,
+    SchedulePlan,
+    TabularPlan,
+    make_plan,
+)
 
 __all__ = ["Candidate", "enumerate_candidates", "divisors"]
 
@@ -48,6 +63,17 @@ class Candidate:
     def num_virtual(self) -> int:
         return self.plan.num_virtual
 
+    @property
+    def extra_warmup(self) -> int:
+        return self.plan.extra_warmup
+
+    @property
+    def table(self) -> TabularPlan:
+        """The candidate's lowered :class:`TabularPlan` (cached on the plan —
+        candidates are static, so the tuner and engines lower each at most
+        once across all tuning intervals)."""
+        return self.plan.lower()
+
 
 def divisors(n: int) -> list[int]:
     out = [d for d in range(1, n + 1) if n % d == 0]
@@ -62,13 +88,51 @@ def _build(
     b: int,
     kind: str,
     num_virtual: int,
+    extra_warmup: int = 0,
 ) -> SchedulePlan:
     if kind == "kfkb" and num_virtual == 1:
         # the paper's original search path — keep legacy factories working
         return plan_factory(num_stages, M, k, micro_batch_size=b)
-    return plan_factory(
-        num_stages, M, k, micro_batch_size=b, kind=kind, num_virtual=num_virtual
-    )
+    kw = dict(kind=kind, num_virtual=num_virtual)
+    if extra_warmup:
+        kw["extra_warmup"] = extra_warmup
+    return plan_factory(num_stages, M, k, micro_batch_size=b, **kw)
+
+
+def _largest_feasible_warmup(
+    plan_factory: Callable[..., SchedulePlan],
+    num_stages: int,
+    M: int,
+    k: int,
+    b: int,
+    memory_model: MemoryModel,
+    memory_limit_bytes: float,
+    max_extra_warmup: int,
+) -> tuple[SchedulePlan, float] | None:
+    """Binary-search the largest ``w`` in [1, max_extra_warmup] whose ZB-H2
+    plan the memory limit admits (peak bytes are monotone non-decreasing in
+    ``w``); returns ``(plan, peak_bytes)``, or ``None`` when even ``w = 1``
+    does not fit or cannot grow the live set beyond H1's (no warmup headroom
+    — H2 would just be H1)."""
+    if (M + k - 1) // k < 2:
+        # a single group clamps the live cap at every stage (min(base + w, G)
+        # == base for all s iff G == 1): H2 degenerates to H1 exactly
+        return None
+    probe = _build(plan_factory, num_stages, M, k, b, "zb_h2", 1, extra_warmup=1)
+    peak = memory_model.peak_bytes(probe)
+    if peak > memory_limit_bytes:
+        return None
+    lo, best = 1, (probe, peak)
+    hi = max_extra_warmup
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        plan = _build(plan_factory, num_stages, M, k, b, "zb_h2", 1, extra_warmup=mid)
+        peak = memory_model.peak_bytes(plan)
+        if peak <= memory_limit_bytes:
+            lo, best = mid, (plan, peak)
+        else:
+            hi = mid - 1
+    return best
 
 
 def enumerate_candidates(
@@ -81,6 +145,7 @@ def enumerate_candidates(
     plan_factory: Callable[..., SchedulePlan] = make_plan,
     kinds: Sequence[str] = ("kfkb",),
     virtual_degrees: Sequence[int] = (2,),
+    max_extra_warmup: int | None = None,
 ) -> list[Candidate]:
     """Enumerate the memory-limit-curve candidates.
 
@@ -90,10 +155,16 @@ def enumerate_candidates(
     (one curve point per (kind, k), plus one per (k, v) for interleaved
     kinds, with ``virtual_degrees`` listing the chunk counts tried);
     infeasible combinations (e.g. interleaved divisibility) are skipped
-    silently.
+    silently.  For ``zb_h2`` the extra-warmup depth ``w`` is itself
+    memory-priced: the largest ``w <= max_extra_warmup`` (default ``S - 1``,
+    the full warmup-bubble depth) under the limit is binary-searched per
+    (k, b); when not even ``w = 1`` fits, the kind contributes no candidate
+    at that k — the tuner then falls back to the H1 plans in the set.
     """
     if min_microbatches is None:
         min_microbatches = num_stages
+    if max_extra_warmup is None:
+        max_extra_warmup = max(num_stages - 1, 1)
     known = PLAN_KINDS + ("1f1b", "gpipe")
     for kind in kinds:
         if kind not in known:  # fail loudly — the except below is only for
@@ -102,7 +173,7 @@ def enumerate_candidates(
     out: list[Candidate] = []
     ks = range(1, (max_k or global_batch) + 1)
     for kind in kinds:
-        vs = tuple(virtual_degrees) if kind == "interleaved" else (1,)
+        vs = tuple(virtual_degrees) if kind in INTERLEAVED_KINDS else (1,)
         for v in vs:
             for k in ks:
                 best: Candidate | None = None
@@ -112,10 +183,19 @@ def enumerate_candidates(
                     if M % k != 0 or M < min_microbatches:
                         continue
                     try:
-                        plan = _build(plan_factory, num_stages, M, k, b, kind, v)
+                        if kind == "zb_h2":
+                            found = _largest_feasible_warmup(
+                                plan_factory, num_stages, M, k, b,
+                                memory_model, memory_limit_bytes, max_extra_warmup,
+                            )
+                            if found is None:
+                                continue  # no w >= 1 admitted at this b
+                            plan, peak = found
+                        else:
+                            plan = _build(plan_factory, num_stages, M, k, b, kind, v)
+                            peak = memory_model.peak_bytes(plan)
                     except ValueError:
                         continue  # e.g. interleaved group-divisibility
-                    peak = memory_model.peak_bytes(plan)
                     if peak <= memory_limit_bytes:
                         best = Candidate(k, b, M, plan, peak)
                         break  # first (largest) feasible b — the curve point

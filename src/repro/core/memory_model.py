@@ -10,27 +10,77 @@ HLO; we model the same quantities explicitly, per stage:
 ``peak_live_activations`` comes from exact liveness over the plan order (see
 :mod:`repro.core.schedule`), which is where kFkB's k-fold activation cost
 shows up.  The same walk covers the whole schedule family: zero-bubble
-plans keep a stage input live until its ``BWD_WEIGHT`` (the weight gradient
-still reads it — the ZB-H1 builder caps issuance so the peak *slot count*
-equals the equal-k kFkB plan's), and interleaved plans count live
-micro-batches across every chunk the device hosts.  Zero-bubble slots are
-priced at twice the stage-input footprint: the engine stashes the incoming
-output gradient (``dy``, hidden-sized) alongside the saved input between
-``BWD_INPUT`` and ``BWD_WEIGHT`` (its ``wctx`` buffer mirrors the slot
-buffer), so zb memory parity holds in slots, not bytes.  The model
-supports two checkpointing policies matching the real
-engine: ``"stage_input"`` (store only the stage input per live micro-batch,
-recompute inside the stage during backward — the engine's default) and
-``"full"`` (store all per-layer activations; no recompute).
+plans (``zb_h1`` / ``zb_h2`` / ``interleaved_zb``) keep a stage input live
+until its ``BWD_WEIGHT`` (the weight gradient still reads it — the ZB-H1
+builder caps issuance so the peak *slot count* equals the equal-k kFkB
+plan's, while ZB-H2 buys exactly ``extra_warmup`` more slots per stage),
+and interleaved plans count live micro-batches across every chunk the
+device hosts.  Zero-bubble slots are priced at twice the stage-input
+footprint: the engine stashes the incoming output gradient (``dy``,
+hidden-sized) alongside the saved input between ``BWD_INPUT`` and
+``BWD_WEIGHT`` (its ``wctx`` buffer mirrors the slot buffer), so zb memory
+parity holds in slots, not bytes.  The model supports two checkpointing
+policies matching the real engine: ``"stage_input"`` (store only the stage
+input per live micro-batch, recompute inside the stage during backward —
+the engine's default) and ``"full"`` (store all per-layer activations; no
+recompute).
+
+:func:`predicted_peak_live` is the closed-form companion of the exact walk:
+the per-stage peak every builder is contractually bound to (exact for the
+non-zb and zb kinds when ``k | M``; an upper bound for ``interleaved_zb``,
+whose greedy W placement may retire slots early).  The conformance suite
+holds every builder to it.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.schedule import SchedulePlan, peak_live_activations
+from repro.core.schedule import (
+    INTERLEAVED_KINDS,
+    ZB_KINDS,
+    SchedulePlan,
+    peak_live_activations,
+)
 
-__all__ = ["StageMemorySpec", "MemoryModel"]
+__all__ = ["StageMemorySpec", "MemoryModel", "predicted_peak_live"]
+
+
+def predicted_peak_live(plan: SchedulePlan) -> list[int]:
+    """Closed-form per-stage peak live activations for any family member.
+
+    Group-level peaks (exact when ``k | M``, an upper bound otherwise —
+    partial trailing groups can only shrink the expanded peak):
+
+    * ``kfkb`` / ``zb_h1``: the 1F1B depth bound ``min(S - s, G)``,
+    * ``zb_h2``: ``min(min(S - s, G) + w, G)`` — exactly ``w`` more than
+      H1 wherever the group count leaves room,
+    * ``interleaved``: Megatron's warmup depth plus the steady-state
+      in-flight forward, ``min(2*(S - s - 1) + (v - 1)*S + 1, G*v)``,
+    * ``interleaved_zb``: capped by construction at the plain interleaved
+      plan's peak (the builder's memory guarantee), so the same formula is
+      an upper bound.
+
+    Expanded to micro-batches, each group holds ``k`` members.
+    """
+    S, M, k = plan.num_stages, plan.num_microbatches, plan.k
+    v, w = plan.num_virtual, plan.extra_warmup
+    G = (M + k - 1) // k
+    out = []
+    for s in range(S):
+        if plan.kind in ("kfkb", "zb_h1"):
+            groups = min(S - s, G)
+        elif plan.kind == "zb_h2":
+            groups = min(min(S - s, G) + w, G)
+        elif plan.kind in INTERLEAVED_KINDS:
+            groups = min(2 * (S - s - 1) + (v - 1) * S + 1, G * v)
+        else:  # fail closed: a new kind must bring its own peak contract
+            raise ValueError(
+                f"no peak-live prediction for plan kind {plan.kind!r}; "
+                "add its closed form here before shipping the kind"
+            )
+        out.append(min(groups * k, M * v))
+    return out
 
 
 @dataclasses.dataclass
@@ -84,7 +134,7 @@ class MemoryModel:
         for s, spec in enumerate(self.stages):
             static = spec.param_bytes + spec.optimizer_bytes + spec.grad_bytes
             act = self.activation_bytes_per_mb(s, b) * peaks_live[s]
-            if plan.kind == "zb_h1":
+            if plan.kind in ZB_KINDS:
                 # the engine's wctx ring: one stashed hidden-sized dy per slot
                 tokens = b * self.seq_len
                 act += spec.stage_input_bytes_per_token * tokens * peaks_live[s]

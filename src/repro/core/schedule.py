@@ -1,4 +1,4 @@
-"""Pipeline schedule family: 1F1B, kFkB, GPipe, ZB-H1, interleaved kFkB.
+"""Pipeline schedule family: 1F1B, kFkB, GPipe, ZB-H1/H2, interleaved kFkB(-ZB).
 
 This module is the heart of the Ada-Grouper reproduction.  A *schedule plan*
 is, per pipeline device, an ordered list of :class:`Task` records (forward /
@@ -27,12 +27,28 @@ kind                  k          v (chunks)  trade-off
                                              activation memory as the kFkB plan of
                                              equal k, strictly shorter pipeline on
                                              uniform stages.  Composes with k.
+``zb_h2``             >= 1       1           zero-bubble H2 (Qi et al. 2024): same
+                                             B/W split, but the per-stage warmup cap
+                                             is raised by ``extra_warmup`` (``w``)
+                                             forwards beyond the 1F1B bound — the
+                                             warmup bubble is filled with real F
+                                             work at the price of exactly ``w``
+                                             extra live activation slots per stage
+                                             (clamped at G).  Composes with k.
 ``interleaved``       >= 1       v > 1       Megatron-style virtual stages: device s
                                              hosts chunks {c*S+s}; fill/drain bubble
                                              shrinks ~1/v, at v x more full-size
                                              cross-stage messages (v x total wire
                                              bytes) and v chunk contexts per
                                              device.  Composes with k.
+``interleaved_zb``    >= 1       v > 1       joint interleaved x zero-bubble: the
+                                             virtual-stage chunk walk of
+                                             ``interleaved`` with the critical
+                                             backward narrowed to ``BWD_INPUT`` and
+                                             ``BWD_WEIGHT`` greedily filling the
+                                             remaining bubbles; peak live
+                                             activations never exceed the plain
+                                             interleaved plan's.  Composes with k.
 ====================  =========  ==========  =======================================
 
 kFkB construction follows the paper's §5.4: "generate k copies of the 1F1B
@@ -65,12 +81,16 @@ __all__ = [
     "TabularPlan",
     "PlanEdge",
     "PLAN_KINDS",
+    "ZB_KINDS",
+    "INTERLEAVED_KINDS",
     "one_f_one_b_order",
     "gpipe_order",
     "kfkb_order",
+    "zb_orders",
     "zb_h1_orders",
     "zb_h1_order",
     "interleaved_kfkb_order",
+    "interleaved_zb_orders",
     "make_plan",
     "lower_to_table",
     "assign_slots",
@@ -92,7 +112,14 @@ class Op(enum.IntEnum):
 #: ops that consume a cross-stage input produced by the NEXT virtual stage
 _BWD_CRITICAL = (Op.BWD, Op.BWD_INPUT)
 
-PLAN_KINDS = ("kfkb", "zb_h1", "interleaved")
+PLAN_KINDS = ("kfkb", "zb_h1", "zb_h2", "interleaved", "interleaved_zb")
+
+#: kinds whose backward is split into BWD_INPUT + BWD_WEIGHT (the activation
+#: slot is freed by the weight gradient, not the critical backward)
+ZB_KINDS = ("zb_h1", "zb_h2", "interleaved_zb")
+
+#: kinds whose devices host ``num_virtual`` chunks in looped placement
+INTERLEAVED_KINDS = ("interleaved", "interleaved_zb")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,14 +153,25 @@ class SchedulePlan:
     name: str = ""
     kind: str = "kfkb"
     num_virtual: int = 1  # chunks per device (1 = non-interleaved)
+    extra_warmup: int = 0  # zb_h2: forwards beyond the 1F1B cap per stage
+    # lazily-populated lowering cache: plans are static once built, so the
+    # TabularPlan is computed at most once (the tuner re-evaluates candidates
+    # every interval and must not re-lower them)
+    _table: "TabularPlan | None" = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     def __post_init__(self) -> None:
         if not self.name:
             base = f"{self.k}F{self.k}B(b={self.micro_batch_size})"
             if self.kind == "zb_h1":
                 base = f"ZB-H1[{base}]"
+            elif self.kind == "zb_h2":
+                base = f"ZB-H2+{self.extra_warmup}[{base}]"
             elif self.kind == "interleaved":
                 base = f"I{self.num_virtual}[{base}]"
+            elif self.kind == "interleaved_zb":
+                base = f"I{self.num_virtual}ZB[{base}]"
             self.name = base
 
     @property
@@ -152,12 +190,21 @@ class SchedulePlan:
             yield from order
 
     def lower(self) -> "TabularPlan":
-        return lower_to_table(self)
+        """Lower to the :class:`TabularPlan`, caching the result.
+
+        Plans are immutable once :func:`make_plan` returns (``assign_slots``
+        runs before any lowering), so the table is computed at most once per
+        plan — candidates re-evaluated across tuner intervals and handed to
+        the engines share one lowering.
+        """
+        if self._table is None:
+            self._table = lower_to_table(self)
+        return self._table
 
     def validate(self) -> None:
         """Structural invariants every legal synchronous plan must satisfy."""
         S, M, V = self.num_stages, self.num_microbatches, self.num_virtual
-        zb = self.kind == "zb_h1"
+        zb = self.kind in ZB_KINDS
         for s, order in enumerate(self.orders):
             fwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
             bwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
@@ -255,11 +302,12 @@ def kfkb_order(
     return _expand_groups(_virtual_1f1b(num_stages, G, stage), k, M)
 
 
-def zb_h1_orders(
-    num_stages: int, num_microbatches: int, k: int = 1
+def zb_orders(
+    num_stages: int, num_microbatches: int, k: int = 1, extra_warmup: int = 0
 ) -> list[list[tuple[Op, int]]]:
-    """ZB-H1 orders for ALL stages (they are built jointly): the zero-bubble
-    handcrafted schedule of Qi et al. 2024, composed with kFkB grouping.
+    """Zero-bubble orders for ALL stages (they are built jointly): the
+    handcrafted schedules of Qi et al. 2024, composed with kFkB grouping.
+    ``extra_warmup == 0`` is ZB-H1; ``extra_warmup == w > 0`` is ZB-H2.
 
     Backward is split into ``BWD_INPUT`` (``B``: input gradient, consumed by
     the upstream stage — critical path) and ``BWD_WEIGHT`` (``W``: weight
@@ -267,29 +315,34 @@ def zb_h1_orders(
     greedy lock-step walk with priority ``B > F > W`` where
 
     * ``F`` issuance is capped so that live activations (allocated at F,
-      freed at the matching W) never exceed 1F1B's ``min(S - s, G)`` — this
-      is the "H1" memory guarantee (same peak as 1F1B), and
+      freed at the matching W) never exceed ``min(min(S - s, G) + w, G)``:
+      at ``w == 0`` this is 1F1B's bound — the "H1" memory guarantee (same
+      peak as 1F1B) — and every extra warmup forward of H2 buys one more
+      live slot to fill the warmup bubble with real F work (the same
+      memory-for-stall trade Ada-Grouper makes with ``k``), and
     * ``W`` runs exactly when the device would otherwise bubble, so weight
       gradient work fills the fill/drain and preemption stalls.
 
     Grouping expands every group-level F/B/W into its ``k`` FIFO members
     (the kFkB-ZB hybrid).  Returns one order per stage.
     """
-    S, M = num_stages, num_microbatches
+    S, M, w = num_stages, num_microbatches, extra_warmup
+    if w < 0:
+        raise ValueError(f"extra_warmup must be >= 0, got {w}")
     G = (M + k - 1) // k
     next_f = [0] * S
     next_b = [0] * S
     next_w = [0] * S
     done: dict[tuple[int, int, int], int] = {}  # (op, stage, g) -> tick
     orders: list[list[tuple[Op, int]]] = [[] for _ in range(S)]
-    cap = [min(S - s, G) for s in range(S)]
+    cap = [min(min(S - s, G) + w, G) for s in range(S)]
     total = 3 * G * S
     executed = 0
     t = 0
-    max_ticks = 6 * G * S + 12 * S + 16
+    max_ticks = 6 * G * S + 12 * S + 4 * w * S + 16
     while executed < total:
         if t > max_ticks:  # pragma: no cover - defensive
-            raise RuntimeError("zb_h1_orders failed to converge")
+            raise RuntimeError("zb_orders failed to converge")
         fired: list[tuple[int, Op, int]] = []
         for s in range(S):
             choice: tuple[Op, int] | None = None
@@ -328,33 +381,23 @@ def zb_h1_orders(
     return [_expand_groups(o, k, M) for o in orders]
 
 
+def zb_h1_orders(
+    num_stages: int, num_microbatches: int, k: int = 1
+) -> list[list[tuple[Op, int]]]:
+    """ZB-H1 orders for ALL stages: :func:`zb_orders` at ``extra_warmup=0``."""
+    return zb_orders(num_stages, num_microbatches, k, extra_warmup=0)
+
+
 def zb_h1_order(
     num_stages: int, num_microbatches: int, stage: int, k: int = 1
 ) -> list[tuple[Op, int]]:
     """ZB-H1 order for ONE stage (builds all stages jointly, selects one)."""
-    return zb_h1_orders(num_stages, num_microbatches, k)[stage]
+    return zb_orders(num_stages, num_microbatches, k)[stage]
 
 
-def interleaved_kfkb_order(
-    num_stages: int,
-    num_microbatches: int,
-    k: int,
-    num_virtual: int,
-    stage: int,
-) -> list[tuple[Op, int, int]]:
-    """Interleaved (virtual-stage) kFkB order for one device: ``(op, mb, chunk)``.
-
-    Megatron-style looped placement: device ``s`` hosts model chunks
-    ``{c * S + s : c in [0, v)}``; the forward of global virtual stage ``j``
-    depends on virtual stage ``j - 1`` (device ``(j-1) % S``).  The base
-    order is Megatron's interleaved 1F1B over ``G = M/k`` groups (warmup
-    ``2*(S - s - 1) + (v - 1) * S`` forwards, steady 1F1B over virtual
-    micro-batches cycling chunks every ``S`` steps, cooldown backwards),
-    then every group op is expanded into its ``k`` FIFO members.
-
-    Requires ``k | M`` and ``S | G`` (Megatron's divisibility constraint).
-    """
-    S, M, v, s = num_stages, num_microbatches, num_virtual, stage
+def _interleaved_groups(num_stages: int, num_microbatches: int, k: int, num_virtual: int) -> int:
+    """Validate the interleaved divisibility constraints; return ``G = M/k``."""
+    S, M, v = num_stages, num_microbatches, num_virtual
     if v < 1:
         raise ValueError(f"num_virtual must be >= 1, got {v}")
     if M % k != 0:
@@ -362,6 +405,16 @@ def interleaved_kfkb_order(
     G = M // k
     if G % S != 0:
         raise ValueError(f"interleaved needs num_groups % num_stages == 0 (G={G}, S={S})")
+    return G
+
+
+def _interleaved_virtual_order(
+    num_stages: int, num_groups: int, num_virtual: int, stage: int
+) -> list[tuple[Op, int, int]]:
+    """Megatron's interleaved 1F1B for one device over GROUP indices:
+    ``(op, g, chunk)`` with warmup ``2*(S - s - 1) + (v - 1) * S`` forwards,
+    steady 1F1B cycling chunks every ``S`` steps, cooldown backwards."""
+    S, G, v, s = num_stages, num_groups, num_virtual, stage
     total = G * v
     warmup = min(2 * (S - s - 1) + (v - 1) * S, total)
 
@@ -390,10 +443,127 @@ def interleaved_kfkb_order(
         emit_b(i - warmup)
     for i in range(total - warmup, total):
         emit_b(i)
+    return seq
+
+
+def _expand_groups3(
+    virt: list[tuple[Op, int, int]], k: int, num_microbatches: int
+) -> list[tuple[Op, int, int]]:
+    """Expand group-level (op, g, chunk) ops into their k FIFO members."""
+    M = num_microbatches
     out: list[tuple[Op, int, int]] = []
-    for op, g, c in seq:
+    for op, g, c in virt:
         out.extend((op, g * k + i, c) for i in range(min(k, M - g * k)))
     return out
+
+
+def interleaved_kfkb_order(
+    num_stages: int,
+    num_microbatches: int,
+    k: int,
+    num_virtual: int,
+    stage: int,
+) -> list[tuple[Op, int, int]]:
+    """Interleaved (virtual-stage) kFkB order for one device: ``(op, mb, chunk)``.
+
+    Megatron-style looped placement: device ``s`` hosts model chunks
+    ``{c * S + s : c in [0, v)}``; the forward of global virtual stage ``j``
+    depends on virtual stage ``j - 1`` (device ``(j-1) % S``).  The base
+    order is Megatron's interleaved 1F1B over ``G = M/k`` groups (see
+    :func:`_interleaved_virtual_order`), then every group op is expanded
+    into its ``k`` FIFO members.
+
+    Requires ``k | M`` and ``S | G`` (Megatron's divisibility constraint).
+    """
+    S, M, v, s = num_stages, num_microbatches, num_virtual, stage
+    G = _interleaved_groups(S, M, k, v)
+    return _expand_groups3(_interleaved_virtual_order(S, G, v, s), k, M)
+
+
+def interleaved_zb_orders(
+    num_stages: int, num_microbatches: int, k: int, num_virtual: int
+) -> list[list[tuple[Op, int, int]]]:
+    """Joint interleaved x zero-bubble orders for ALL devices: ``(op, mb, chunk)``.
+
+    The critical stream is exactly Megatron's interleaved 1F1B chunk walk
+    (:func:`_interleaved_virtual_order`) with the combined backward narrowed
+    to ``BWD_INPUT``; ``BWD_WEIGHT`` tasks are scheduled by a greedy
+    lock-step walk that runs them whenever the device would otherwise bubble
+    — the next critical task is blocked on a cross-device input that has not
+    arrived, or its forward is blocked by the memory cap.  The cap per
+    device is the PLAIN interleaved plan's peak live count (an activation is
+    allocated at F and freed at its W), so the composition inherits the H1
+    memory guarantee: peak live activations never exceed the equal-(k, v)
+    interleaved plan's.
+
+    Returns one order per device.  Requires ``k | M`` and ``S | (M/k)``.
+    """
+    S, M, v = num_stages, num_microbatches, num_virtual
+    G = _interleaved_groups(S, M, k, v)
+    V = S * v
+    base = [_interleaved_virtual_order(S, G, v, s) for s in range(S)]
+    # memory cap = the plain interleaved plan's peak live groups per device
+    cap = []
+    for seq in base:
+        live = peak = 0
+        for op, _, _ in seq:
+            live += 1 if op == Op.FWD else -1
+            peak = max(peak, live)
+        cap.append(peak)
+    ptr = [0] * S
+    live = [0] * S
+    wq: list[list[tuple[int, int]]] = [[] for _ in range(S)]  # FIFO of (g, c)
+    done: dict[tuple[int, int, int, int], int] = {}  # (op, stage, g, chunk) -> tick
+    orders: list[list[tuple[Op, int, int]]] = [[] for _ in range(S)]
+    total = 3 * G * v * S
+    executed = 0
+    t = 0
+    max_ticks = 8 * total + 16 * V + 32
+    while executed < total:
+        if t > max_ticks:  # pragma: no cover - defensive
+            raise RuntimeError("interleaved_zb_orders failed to converge")
+        fired: list[tuple[int, Op, int, int]] = []
+        for s in range(S):
+            choice: tuple[Op, int, int] | None = None
+            if ptr[s] < len(base[s]):
+                op, g, c = base[s][ptr[s]]
+                vs = c * S + s
+                if op == Op.FWD:
+                    if live[s] < cap[s]:
+                        if vs == 0:
+                            choice = (Op.FWD, g, c)
+                        else:
+                            dep = done.get((int(Op.FWD), (vs - 1) % S, g, (vs - 1) // S))
+                            if dep is not None and dep < t:
+                                choice = (Op.FWD, g, c)
+                else:  # critical backward; its own F precedes it in base order
+                    if vs == V - 1:
+                        choice = (Op.BWD_INPUT, g, c)
+                    else:
+                        dep = done.get((int(Op.BWD_INPUT), (vs + 1) % S, g, (vs + 1) // S))
+                        if dep is not None and dep < t:
+                            choice = (Op.BWD_INPUT, g, c)
+            if choice is not None:
+                ptr[s] += 1
+            elif wq[s]:
+                g, c = wq[s].pop(0)
+                choice = (Op.BWD_WEIGHT, g, c)
+            if choice is not None:
+                op, g, c = choice
+                orders[s].append(choice)
+                if op == Op.FWD:
+                    live[s] += 1
+                elif op == Op.BWD_INPUT:
+                    wq[s].append((g, c))
+                else:
+                    live[s] -= 1
+                if op != Op.BWD_WEIGHT:
+                    fired.append((s, op, g, c))
+                executed += 1
+        for s, op, g, c in fired:
+            done[(int(op), s, g, c)] = t
+        t += 1
+    return [_expand_groups3(o, k, M) for o in orders]
 
 
 def make_plan(
@@ -404,13 +574,15 @@ def make_plan(
     name: str = "",
     kind: str = "kfkb",
     num_virtual: int = 1,
+    extra_warmup: int = 0,
 ) -> SchedulePlan:
     """Build a validated :class:`SchedulePlan` of any family member.
 
-    ``kind`` is one of ``"kfkb"`` (k=1 → 1F1B, k=M → GPipe), ``"zb_h1"``
-    (zero-bubble, B/W split), ``"interleaved"`` (``num_virtual`` chunks per
-    device).  ``"1f1b"`` and ``"gpipe"`` are accepted as aliases that force
-    ``k``.
+    ``kind`` is one of ``"kfkb"`` (k=1 → 1F1B, k=M → GPipe), ``"zb_h1"`` /
+    ``"zb_h2"`` (zero-bubble, B/W split — H2 takes ``extra_warmup >= 1``
+    forwards beyond the 1F1B cap), ``"interleaved"`` / ``"interleaved_zb"``
+    (``num_virtual`` chunks per device).  ``"1f1b"`` and ``"gpipe"`` are
+    accepted as aliases that force ``k``.
     """
     if kind == "1f1b":
         kind, k = "kfkb", 1
@@ -418,19 +590,32 @@ def make_plan(
         kind, k = "kfkb", num_microbatches
     if kind not in PLAN_KINDS:
         raise ValueError(f"unknown plan kind {kind!r}; expected one of {PLAN_KINDS}")
-    if kind != "interleaved" and num_virtual != 1:
-        raise ValueError(f"num_virtual > 1 requires kind='interleaved', got {kind!r}")
+    if kind not in INTERLEAVED_KINDS and num_virtual != 1:
+        raise ValueError(f"num_virtual > 1 requires an interleaved kind, got {kind!r}")
+    if kind == "zb_h2":
+        if extra_warmup < 1:
+            raise ValueError(
+                f"kind='zb_h2' needs extra_warmup >= 1 (got {extra_warmup}); "
+                "extra_warmup == 0 is exactly zb_h1"
+            )
+    elif extra_warmup != 0:
+        raise ValueError(f"extra_warmup > 0 requires kind='zb_h2', got {kind!r}")
     orders: list[list[Task]] = []
     if kind == "kfkb":
         for s in range(num_stages):
             raw = kfkb_order(num_stages, num_microbatches, k, s)
             orders.append([Task(op, s, mb) for op, mb in raw])
-    elif kind == "zb_h1":
-        for s, raw in enumerate(zb_h1_orders(num_stages, num_microbatches, k)):
+    elif kind in ("zb_h1", "zb_h2"):
+        raws = zb_orders(num_stages, num_microbatches, k, extra_warmup=extra_warmup)
+        for s, raw in enumerate(raws):
             orders.append([Task(op, s, mb) for op, mb in raw])
-    else:  # interleaved
+    elif kind == "interleaved":
         for s in range(num_stages):
             raw3 = interleaved_kfkb_order(num_stages, num_microbatches, k, num_virtual, s)
+            orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
+    else:  # interleaved_zb
+        raws3 = interleaved_zb_orders(num_stages, num_microbatches, k, num_virtual)
+        for s, raw3 in enumerate(raws3):
             orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
     plan = SchedulePlan(
         num_stages,
@@ -441,6 +626,7 @@ def make_plan(
         name,
         kind=kind,
         num_virtual=num_virtual,
+        extra_warmup=extra_warmup,
     )
     plan.validate()
     assign_slots(plan)
@@ -453,9 +639,10 @@ def make_plan(
 
 
 def _frees_slot(plan: SchedulePlan, op: Op) -> bool:
-    """The op that releases a live activation: W for zb (the weight gradient
-    still needs the stage input), the combined BWD otherwise."""
-    return op == (Op.BWD_WEIGHT if plan.kind == "zb_h1" else Op.BWD)
+    """The op that releases a live activation: W for the zero-bubble kinds
+    (the weight gradient still needs the stage input), the combined BWD
+    otherwise."""
+    return op == (Op.BWD_WEIGHT if plan.kind in ZB_KINDS else Op.BWD)
 
 
 def assign_slots(plan: SchedulePlan) -> int:
@@ -724,7 +911,7 @@ def tick_table(plan: SchedulePlan) -> np.ndarray:
 
     Kept for callers that predate :class:`TabularPlan` (chunk is dropped —
     only meaningful for non-interleaved plans)."""
-    return lower_to_table(plan).grid[:, :, [0, 1, 3]]
+    return plan.lower().grid[:, :, [0, 1, 3]]
 
 
 def tick_table_stats(table: np.ndarray) -> dict[str, float]:

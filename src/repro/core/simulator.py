@@ -20,8 +20,11 @@ Execution model (faithful to the paper's runtime, §3/§4.4/§5.3):
 
 Any member of the schedule family runs here unchanged: the per-device
 orders and transfer specs come from the task graph, which encodes the
-virtual-stage topology (interleaved plans route over the ``S-1 -> 0`` wrap
-link; links are created for whatever directed pairs the plan actually uses).
+virtual-stage topology (interleaved plans — including ``interleaved_zb`` —
+route over the ``S-1 -> 0`` wrap link; links are created for whatever
+directed pairs the plan actually uses).  ZB-H2's deeper warmup shows up
+purely as more locally-ready forwards early on, which is exactly how it
+buys preemption tolerance.
 
 The simulator returns the pipeline length (makespan incl. optimizer
 epilogue), per-device busy/stall accounting, and the queue timelines.

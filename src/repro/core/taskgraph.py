@@ -8,11 +8,14 @@ family member — the cross-device topology comes from the same virtual-stage
 rules the tabular lowering uses) plus a :class:`StageCosts` profile, and is
 what the discrete-event simulator and the cost model consume.
 
-Zero-bubble plans split the backward: ``BWD_INPUT`` (``bwd_input_time``,
-emits the upstream gradient transfer) and ``BWD_WEIGHT``
-(``bwd_weight_time``, no communication at all).  Interleaved plans divide
-per-stage compute by the number of chunks and route transfers along the
-virtual-stage ring (including the ``S-1 -> 0`` wrap link).
+Zero-bubble plans (``zb_h1`` and the deeper-warmup ``zb_h2``) split the
+backward: ``BWD_INPUT`` (``bwd_input_time``, emits the upstream gradient
+transfer) and ``BWD_WEIGHT`` (``bwd_weight_time``, no communication at
+all).  Interleaved plans divide per-stage compute by the number of chunks
+and route transfers along the virtual-stage ring (including the ``S-1 ->
+0`` wrap link); the joint ``interleaved_zb`` kind combines both rules —
+everything here is op- and chunk-driven, so no kind-specific branches are
+needed.
 """
 
 from __future__ import annotations

@@ -9,12 +9,21 @@ re-measured (devices are exclusive).  All candidates stay alive — the next
 interval may pick a different k, and switching carries no parameter-state
 cost because (k, b) do not affect the model parameters (§5.4).
 
-When the candidate set spans several schedule *kinds* (zero-bubble,
-interleaved — see :func:`repro.core.candidates.enumerate_candidates`), the
-same argmin switches the schedule kind too: under heavy preemption the
-grouped plans win, while on a quiet network the zero-bubble plan's shorter
-fill/drain takes over.  Interleaved candidates additionally probe the
-virtual-stage wrap link (``S-1 -> 0``) their ring actually uses.
+When the candidate set spans several schedule *kinds* (zero-bubble H1/H2,
+interleaved, interleaved-ZB — see
+:func:`repro.core.candidates.enumerate_candidates`), the same argmin
+switches the schedule kind too: under heavy preemption the grouped and
+deep-warmup (ZB-H2) plans win, while on a quiet network the zero-bubble
+plans' shorter fill/drain takes over.  ZB-H2 appears in the set only when
+the memory limit admits ``extra_warmup >= 1`` (the enumeration refuses it
+otherwise), so picking it is always memory-safe.  Interleaved candidates
+additionally probe the virtual-stage wrap link (``S-1 -> 0``) their ring
+actually uses.
+
+Candidates are static, so each one's lowered
+:class:`~repro.core.schedule.TabularPlan` is computed at most once (cached
+on the plan): re-evaluating every interval and dispatching the winner to
+the engines never re-lowers.
 """
 
 from __future__ import annotations
@@ -38,6 +47,8 @@ class TuningRecord:
     chosen_k: int
     switched: bool
     chosen_kind: str = "kfkb"
+    chosen_num_virtual: int = 1
+    chosen_extra_warmup: int = 0  # > 0 only for zb_h2 winners
 
 
 class AutoTuner:
@@ -57,6 +68,7 @@ class AutoTuner:
         self.cost_model = cost_model or CostModel()
         self.probes = probes
         self.current: Candidate = candidates[0]
+        self.current_table = self.current.table  # dispatched to the engines
         self.history: list[TuningRecord] = []
 
     # -- one tuning round -----------------------------------------------------
@@ -96,6 +108,9 @@ class AutoTuner:
         best = next(c for c in self.candidates if c.name == best_name)
         switched = best is not self.current
         self.current = best
+        # dispatch artifact for the engines: lowered once per candidate ever
+        # (Candidate.table caches on the static plan)
+        self.current_table = best.table
         rec = TuningRecord(
             time=now,
             estimates=estimates,
@@ -103,6 +118,8 @@ class AutoTuner:
             chosen_k=best.k,
             switched=switched,
             chosen_kind=best.plan.kind,
+            chosen_num_virtual=best.plan.num_virtual,
+            chosen_extra_warmup=best.plan.extra_warmup,
         )
         self.history.append(rec)
         return rec

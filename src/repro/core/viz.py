@@ -5,7 +5,8 @@ Two views, both matching the paper's figures:
 * :func:`render_tick_table` — the zero-comm lock-step layout (Fig 2's
   idealized grids) of ANY family member: one row per device, one column
   per tick.  ``F``/``B`` cells are tagged with the micro-batch index
-  (mod 10); zero-bubble weight-gradient fillers render as ``W``; for
+  (mod 10); zero-bubble weight-gradient fillers render as ``W`` (both the
+  H1 and H2 depths, and the chunked ``interleaved_zb`` fillers); for
   interleaved plans every cell carries a chunk suffix (``F3b`` = forward
   of micro-batch 3 on the device's second chunk); ``.`` marks bubbles.
 * :func:`render_sim_timeline` — the discrete-event simulator's actual task
@@ -15,7 +16,7 @@ Two views, both matching the paper's figures:
 
 from __future__ import annotations
 
-from repro.core.schedule import Op, SchedulePlan, lower_to_table
+from repro.core.schedule import Op, SchedulePlan
 from repro.core.simulator import SimResult
 from repro.core.taskgraph import TaskGraph
 
@@ -35,7 +36,7 @@ def render_tick_table(plan: SchedulePlan) -> str:
         stage 0 |F0 F1 B0 F2 B1 F3 B2 .. B3|
         stage 1 |.. F0 B0 F1 B1 F2 B2 F3 B3|
     """
-    table = lower_to_table(plan)
+    table = plan.lower()
     S, T = table.num_stages, table.num_ticks
     chunked = plan.num_virtual > 1
     idle = "..." if chunked else ".."

@@ -10,6 +10,15 @@ which is what makes the scheduling layer real rather than simulated:
   used to validate that ANY family plan computes gradients identical to the
   unpipelined model.
 
+Both executors are op-driven off the lowered grid, so the whole schedule
+family — ``kfkb``, ``zb_h1``, ``zb_h2`` (deeper warmup, same zb task
+bodies), ``interleaved``, and the joint ``interleaved_zb`` (chunked
+``BWD_INPUT``/``BWD_WEIGHT`` over the virtual-stage ring) — runs through
+the same code paths; a new kind only has to lower to a valid
+:class:`~repro.core.schedule.TabularPlan`.  Lowering goes through
+``plan.lower()``, which caches the table on the static plan (shared with
+the tuner's dispatch path — never re-lowered).
+
 * :func:`make_pipeline_step` — the real lock-step ``shard_map`` program:
   devices live on the mesh's ``stage`` axis, data parallel over the
   remaining axis.  Each tick every device executes at most one task
@@ -48,7 +57,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.schedule import Op, SchedulePlan, lower_to_table
+from repro.core.schedule import Op, SchedulePlan
 from repro.pipeline.stage import StagedModel
 
 __all__ = [
@@ -154,7 +163,7 @@ def reference_pipeline_grads(
     assert V == staged.num_stages, (
         f"staged model has {staged.num_stages} stages; plan needs {V} virtual stages"
     )
-    table = lower_to_table(plan)
+    table = plan.lower()
     grid = table.grid
 
     def p_of(vs):
@@ -282,7 +291,7 @@ def make_pipeline_step(
         f"staged model has {staged.num_stages} stages; plan needs {V} virtual stages"
     )
     cfg = staged.cfg
-    tabular = lower_to_table(plan)
+    tabular = plan.lower()
     tabular.validate()  # engine ring queues require the FIFO invariants
     grid_np = tabular.grid  # [S, T, 4]
     T_ticks = tabular.num_ticks

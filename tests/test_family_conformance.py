@@ -1,0 +1,171 @@
+"""Differential conformance harness for the WHOLE schedule family.
+
+One oracle, every kind: for each (kind, k, num_virtual, extra_warmup, S, M)
+cell of the family matrix the same battery runs —
+
+* the plan validates and lowers to a dependency-valid :class:`TabularPlan`,
+* every directed link is FIFO-consistent (the i-th send is the i-th recv —
+  what the engine's static ring queues structurally require),
+* exact per-device liveness never exceeds the closed-form memory-model
+  prediction (:func:`repro.core.predicted_peak_live`), with equality for
+  the kinds whose builders carry a hard guarantee: kFkB and ZB-H1 hit the
+  1F1B bound, ZB-H2 hits 1F1B + w (clamped at the group count), plain
+  interleaved hits Megatron's warmup depth + 1,
+* total and per-op task counts conserve (F/B[/W] each exactly M per chunk),
+* slot assignment is liveness-exact (slots form a gap-free prefix).
+
+This file replaces the per-kind ad-hoc structure checks that used to live
+in ``test_schedule_family.py`` (kind-specific *semantic* claims — memory
+pricing, degenerate aliases, divisibility guards — stay there).  A
+hypothesis sweep widens the same oracle to random family cells when
+``hypothesis`` is installed (via the ``tests/_hyp.py`` shim).
+"""
+
+import pytest
+from _hyp import given, settings, st  # hypothesis optional: property tests skip cleanly
+
+from repro.core import predicted_peak_live
+from repro.core.schedule import (
+    INTERLEAVED_KINDS,
+    PLAN_KINDS,
+    ZB_KINDS,
+    Op,
+    make_plan,
+    peak_live_activations,
+)
+
+# ---------------------------------------------------------------------------
+# The family grid: every kind x k x num_virtual x (S, M) cell that satisfies
+# the kind's divisibility constraints (k | M everywhere so the closed-form
+# peak predictions are exact, S | M/k for the interleaved kinds).
+# ---------------------------------------------------------------------------
+
+_SHAPES = [(2, 4), (2, 8), (4, 8), (4, 16), (3, 12)]
+_KS = (1, 2, 4)
+_VS = (2, 3)
+_WS = (1, 2)
+
+#: builders whose peak-live contract is an equality, not just a bound
+_EXACT_PEAK_KINDS = ("kfkb", "zb_h1", "zb_h2", "interleaved")
+
+
+def _family_cells():
+    cells = []
+    for S, M in _SHAPES:
+        for k in _KS:
+            if M % k:
+                continue
+            G = M // k
+            for kind in PLAN_KINDS:
+                if kind in INTERLEAVED_KINDS:
+                    if G % S:
+                        continue
+                    for v in _VS:
+                        cells.append((kind, k, v, 0, S, M))
+                elif kind == "zb_h2":
+                    if G < 2:
+                        continue  # no warmup headroom: H2 degenerates to H1
+                    for w in _WS:
+                        cells.append((kind, k, 1, w, S, M))
+                else:
+                    cells.append((kind, k, 1, 0, S, M))
+    return cells
+
+
+CELLS = _family_cells()
+
+
+def _ids(cell):
+    kind, k, v, w, S, M = cell
+    return f"{kind}-k{k}-v{v}-w{w}-S{S}-M{M}"
+
+
+def _conformance(kind, k, v, w, S, M):
+    """The single differential oracle every family member must pass."""
+    plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
+    plan.validate()
+    table = plan.lower()
+    table.validate()  # dependency validity + per-link FIFO + stream order
+
+    # -- FIFO send/recv order on every TabularPlan edge ---------------------
+    links = {}
+    for e in table.edges:
+        assert e.send_tick < e.recv_tick
+        links.setdefault((e.src_stage, e.dst_stage, e.is_forward), []).append(e)
+    for es in links.values():
+        es.sort(key=lambda e: e.send_tick)
+        recvs = [e.recv_tick for e in es]
+        assert recvs == sorted(recvs), "link recv order diverges from send order"
+
+    # -- op-count conservation ---------------------------------------------
+    zb = kind in ZB_KINDS
+    per_device = (3 if zb else 2) * M * v
+    busy = int((table.grid[:, :, 0] != int(Op.IDLE)).sum())
+    assert busy == per_device * S == sum(len(o) for o in plan.orders)
+    for s, order in enumerate(plan.orders):
+        for c in range(v):
+            ops_expected = [Op.FWD, Op.BWD_INPUT, Op.BWD_WEIGHT] if zb else [Op.FWD, Op.BWD]
+            for op in ops_expected:
+                mbs = [t.mb for t in order if t.op == op and t.chunk == c]
+                assert mbs == sorted(mbs), f"{op} stream not FIFO at device {s}"
+                assert set(mbs) == set(range(M)), f"device {s} chunk {c}: {op} incomplete"
+
+    # -- edge-count conservation -------------------------------------------
+    V = S * v
+    n_fwd = sum(1 for e in table.edges if e.is_forward)
+    n_bwd = len(table.edges) - n_fwd
+    assert n_fwd == M * (V - 1)  # every non-first virtual stage receives one F
+    assert n_bwd == M * (V - 1)  # every non-last one receives one B
+
+    # -- memory: exact liveness vs the closed-form model prediction --------
+    peaks = peak_live_activations(plan)
+    predicted = predicted_peak_live(plan)
+    assert all(1 <= p <= pr for p, pr in zip(peaks, predicted)), (peaks, predicted)
+    if kind in _EXACT_PEAK_KINDS:
+        assert peaks == predicted, (kind, peaks, predicted)
+    if kind == "zb_h2":
+        h1 = predicted_peak_live(make_plan(S, M, k, kind="zb_h1"))
+        G = M // k
+        assert peaks == [min(p + w * k, G * k) for p in h1]  # 1F1B + w, clamped
+    if kind == "interleaved_zb":
+        plain = peak_live_activations(make_plan(S, M, k, kind="interleaved", num_virtual=v))
+        assert all(p <= q for p, q in zip(peaks, plain))  # never above plain interleaved
+
+    # -- slots are a liveness-exact, gap-free prefix ------------------------
+    for s, order in enumerate(plan.orders):
+        slots_used = {t.slot for t in order if t.op == Op.FWD}
+        assert slots_used == set(range(peaks[s]))
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=_ids)
+def test_family_conformance(cell):
+    _conformance(*cell)
+
+
+def test_grid_covers_every_plan_kind():
+    """The sweep is differential only if no kind can silently drop out."""
+    assert {c[0] for c in CELLS} == set(PLAN_KINDS)
+
+
+@given(
+    st.sampled_from(PLAN_KINDS),
+    st.integers(0, 2).map(lambda e: 2**e),  # k
+    st.integers(2, 3),  # v (interleaved kinds only)
+    st.integers(1, 3),  # w (zb_h2 only)
+    st.integers(2, 5),  # S
+    st.integers(1, 4),  # M = S * k * mult for divisibility
+)
+@settings(max_examples=40, deadline=None)
+def test_family_conformance_hypothesis(kind, k, v, w, S, mult):
+    """Random family cells through the same oracle (skips without hypothesis)."""
+    M = S * k * mult  # guarantees k | M and S | (M / k)
+    if kind == "zb_h2" and M // k < 2:
+        M *= 2
+    _conformance(
+        kind,
+        k,
+        v if kind in INTERLEAVED_KINDS else 1,
+        w if kind == "zb_h2" else 0,
+        S,
+        M,
+    )

@@ -137,3 +137,62 @@ def test_grouped_zero_bubble_beats_kfkb_under_preemption():
     res_kfkb = simulate_plan(make_plan(S, M, k), costs, net)
     res_hybrid = simulate_plan(make_plan(S, M, k, kind="zb_h1"), costs, net)
     assert res_hybrid.pipeline_length < res_kfkb.pipeline_length
+
+
+def _warmup_bubble_ticks(plan):
+    """Idle ticks before a stage's first critical backward, summed over
+    stages — the bubble ZB-H2's extra forwards exist to fill."""
+    from repro.core.schedule import Op
+
+    grid = plan.lower().grid
+    total = 0
+    for s in range(grid.shape[0]):
+        ops = grid[s, :, 0]
+        first_b = next(
+            t for t in range(len(ops)) if ops[t] in (int(Op.BWD), int(Op.BWD_INPUT))
+        )
+        total += int((ops[:first_b] == int(Op.IDLE)).sum())
+    return total
+
+
+def test_zb_h2_golden_fills_warmup_at_exactly_w_slots():
+    """Golden gate for ZB-H2: under a preempted network it strictly shortens
+    the pipeline vs H1, it strictly shrinks the warmup-bubble ticks on the
+    lock-step grid, and the price is exactly w extra live slots per stage."""
+    from repro.core.schedule import peak_live_activations
+
+    S, M = 4, 16
+    h1 = make_plan(S, M, 1, kind="zb_h1")
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(
+        S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+    )
+    len_h1 = simulate_plan(h1, costs, net).pipeline_length
+    warm_h1 = _warmup_bubble_ticks(h1)
+    prev = len_h1
+    for w in (1, 2, 3):
+        h2 = make_plan(S, M, 1, kind="zb_h2", extra_warmup=w)
+        # the memory price: exactly w extra live slots at every stage
+        assert peak_live_activations(h2) == [
+            p + w for p in peak_live_activations(h1)
+        ]
+        assert _warmup_bubble_ticks(h2) < warm_h1
+        len_h2 = simulate_plan(h2, costs, net).pipeline_length
+        assert len_h2 < len_h1  # strictly shorter under preemption
+        assert len_h2 <= prev + 1e-9  # deeper warmup never hurts here
+        prev = len_h2
+
+
+def test_interleaved_zb_golden_beats_plain_interleaved():
+    """Golden gate for the joint kind: same chunk walk, B/W-split backward —
+    strictly shorter makespan than plain interleaved (fast net and under
+    transfer cost), with identical per-device busy time."""
+    S, M, v = 4, 8, 2
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    plain = make_plan(S, M, 1, kind="interleaved", num_virtual=v)
+    joint = make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v)
+    for net in (_fast_net(S), uniform_network(S, lambda: StableTrace(2.0))):
+        res_p = simulate_plan(plain, costs, net)
+        res_j = simulate_plan(joint, costs, net)
+        assert res_j.pipeline_length < res_p.pipeline_length
+        assert sum(res_j.busy_time) == pytest.approx(sum(res_p.busy_time))

@@ -137,3 +137,105 @@ def test_tuner_selects_schedule_kind_not_just_k():
     rec2 = AutoTuner(cands, costs_for, NetworkProfiler(slow)).tune(0.0)
     assert rec2.estimates[rec2.chosen] == min(rec2.estimates.values())
     assert rec2.chosen_kind in ("kfkb", "zb_h1", "interleaved")
+
+
+def _mm(S=4):
+    return MemoryModel.uniform(
+        num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+
+
+def _uniform_costs_for(S):
+    costs_by_b = {}
+
+    def costs_for(cand):
+        if cand.micro_batch_size not in costs_by_b:
+            costs_by_b[cand.micro_batch_size] = StageCosts.uniform(
+                S, 0.1 * cand.micro_batch_size, act_bytes=float(cand.micro_batch_size)
+            )
+        return costs_by_b[cand.micro_batch_size]
+
+    return costs_for
+
+
+def _preempted_network(S):
+    """A genuinely preempted fabric (the ISSUE's acceptance scenario): links
+    periodically collapse to 1/100th bandwidth, as in Fig 2's preempted
+    rows — not merely a uniformly slow StableTrace."""
+    from repro.core import PeriodicPreemptionTrace
+
+    return uniform_network(
+        S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+    )
+
+
+def test_tuner_selects_zb_h2_when_memory_admits_extra_warmup():
+    """Acceptance: with a generous memory limit the H2 candidate exists
+    (largest admissible w, binary-searched) and under a preempted network
+    the tuner picks it over H1 — its extra warmup forwards absorb the
+    stalls.  The record carries the chosen warmup depth."""
+    S, B = 4, 32
+    cands = enumerate_candidates(
+        S, B, _mm(S), 1e8, max_k=1, min_microbatches=16, kinds=("zb_h1", "zb_h2"),
+    )
+    assert {c.kind for c in cands} == {"zb_h1", "zb_h2"}
+    h2 = next(c for c in cands if c.kind == "zb_h2")
+    assert h2.extra_warmup >= 1 and h2.est_peak_bytes <= 1e8
+
+    rec = AutoTuner(cands, _uniform_costs_for(S), NetworkProfiler(_preempted_network(S))).tune(0.0)
+    assert rec.chosen_kind == "zb_h2"
+    assert rec.chosen_extra_warmup == h2.extra_warmup >= 1
+    assert rec.estimates[rec.chosen] == min(rec.estimates.values())
+
+
+def test_tuner_refuses_zb_h2_when_memory_forbids_it():
+    """Acceptance: a limit that admits ZB-H1 but not even w=1 of ZB-H2 (the
+    H2 surcharge is the extra live slots) must yield NO H2 candidate, so the
+    tuner falls back to H1 even under the preemption that favours H2."""
+    from repro.core import make_plan
+
+    S, B = 4, 32
+    mm = _mm(S)
+    # at the smallest feasible b (=1), H1 fits but H2's w=1 does not
+    t1 = mm.peak_bytes(make_plan(S, B, 1, micro_batch_size=1, kind="zb_h1"))
+    t2 = mm.peak_bytes(make_plan(S, B, 1, micro_batch_size=1, kind="zb_h2", extra_warmup=1))
+    assert t1 < t2
+    tight = (t1 + t2) / 2
+    cands = enumerate_candidates(
+        S, B, mm, tight, max_k=1, min_microbatches=B, kinds=("zb_h1", "zb_h2"),
+    )
+    assert [c.kind for c in cands] == ["zb_h1"]  # H2 refused entirely
+
+    rec = AutoTuner(cands, _uniform_costs_for(S), NetworkProfiler(_preempted_network(S))).tune(0.0)
+    assert rec.chosen_kind == "zb_h1"
+    assert rec.chosen_extra_warmup == 0
+
+
+def test_tuner_lowers_each_candidate_at_most_once():
+    """Regression for the ROADMAP caching item: candidates are static, so
+    across many tuning intervals plus engine-style dispatches the tabular
+    lowering runs at most once per candidate (cached on the plan)."""
+    import repro.core.schedule as schedule_mod
+
+    S = 4
+    cands, costs_for = _setup(S)
+    net = uniform_network(S, lambda: StableTrace(1.0))
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net))
+
+    calls = []
+    real = schedule_mod.lower_to_table
+    schedule_mod.lower_to_table = lambda plan: (calls.append(plan.name), real(plan))[1]
+    try:
+        for t in (0.0, 10.0, 20.0):
+            tuner.tune(t)
+            # engine dispatch path: the chosen plan's table is re-requested
+            assert tuner.current_table is tuner.current.plan.lower()
+        for cand in cands:  # a full-family dispatch sweep
+            cand.table
+            cand.plan.lower()
+    finally:
+        schedule_mod.lower_to_table = real
+    assert len(calls) == len(set(calls)), f"re-lowered candidates: {sorted(calls)}"
+    assert len(calls) <= len(cands)
