@@ -6,15 +6,24 @@ import json
 import os
 from typing import Any
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+RESULTS_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+)
+
+
+def ensure_results_dir() -> str:
+    """Create experiments/results/ (gitignored) so a fresh clone's first
+    benchmark write can never fail; every suite's write path funnels here."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
 
 
 def save_result(name: str, payload: Any) -> str:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    ensure_results_dir()
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
-    return os.path.abspath(path)
+    return path
 
 
 def markdown_table(headers: list[str], rows: list[list]) -> str:

@@ -40,11 +40,14 @@ def dry_run() -> int:
         pipeline_length,
         roofline,
         strong_scaling,
+        trajectory,
         weak_scaling,
     )
+    from benchmarks.common import ensure_results_dir
     from repro.core import StableTrace, StageCosts, simulate_plan, uniform_network
     from repro.core.schedule import make_plan
 
+    ensure_results_dir()  # a fresh clone must survive its first write
     S, M = 4, 8
     costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
     net = uniform_network(S, lambda: StableTrace(4.0))
@@ -53,12 +56,14 @@ def dry_run() -> int:
         ("kfkb", 2, 1, 0),
         ("zb_h1", 1, 1, 0),
         ("zb_h2", 1, 1, 1),
+        ("zb_h2", 1, 1, (0, 1, 2, 1)),  # heterogeneous warmup vector
         ("interleaved", 1, 2, 0),
         ("interleaved_zb", 1, 2, 0),
+        ("interleaved_zb", 1, 2, (1, 0, 2, 1)),  # interleaved H2
     ]:
         plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
         res = simulate_plan(plan, costs, net)
-        print(f"[dry-run] {plan.name:20s} length={res.pipeline_length:7.2f} "
+        print(f"[dry-run] {plan.name:28s} length={res.pipeline_length:7.2f} "
               f"bubble={res.bubble_fraction:.3f}")
     print("[dry-run] all benchmark modules import; schedule family simulates OK")
     return 0
@@ -73,8 +78,16 @@ def main() -> int:
         pipeline_length,
         roofline,
         strong_scaling,
+        trajectory,
         weak_scaling,
     )
+    from benchmarks.common import ensure_results_dir
+
+    ensure_results_dir()
+
+    def run_trajectory():
+        if trajectory.main(["--check"]) != 0:
+            raise RuntimeError("trajectory regression gate failed")
 
     suites = [
         ("pipeline_length (Fig 2)", pipeline_length.run),
@@ -84,6 +97,7 @@ def main() -> int:
         ("adaptive_tuning (Fig 10)", adaptive_tuning.run),
         ("roofline single-pod (g)", lambda: roofline.run("single")),
         ("roofline multi-pod (g)", lambda: roofline.run("multi")),
+        ("trajectory (CI gate)", run_trajectory),
     ]
     failures = []
     for name, fn in suites:

@@ -1,0 +1,294 @@
+"""Benchmark-trajectory gate: pinned, seeded metrics committed per PR.
+
+The repo had no performance history: nothing in CI would notice a PR that
+halved simulator throughput or regressed schedule quality.  This suite runs
+a PINNED, fully seeded subset of the paper benchmarks —
+
+* **Fig-2 pipeline-length ratios** — 1F1B vs kFkB gains in the preempted
+  network (deterministic discrete-event simulation),
+* **tuner-switch counts** on a seeded Fig-10-style regime trace (the
+  adaptive loop's decision trajectory, deterministic given the trace
+  seeds),
+* **vector-w gain** — the heterogeneous-warmup golden scenario's
+  best-scalar / vector length ratio (this PR's tentpole, now a tracked
+  number),
+* **simulator events/sec** — wall-clock throughput of the discrete-event
+  core on a fixed workload (the only non-deterministic metric, so it gates
+  with a wider band than the deterministic 10%),
+
+— and writes them as schema-versioned ``BENCH_<tag>.json`` at the repo
+root.  The CI ``bench`` job (main only) runs ``--check``: against the most
+recent previously committed ``BENCH_*.json`` (when one exists), any gated
+metric that regresses beyond its tolerance fails the job.  Each PR that
+touches performance commits its own ``BENCH_<tag>.json``, growing the
+trajectory.
+
+Usage:
+  python benchmarks/trajectory.py                 # print metrics
+  python benchmarks/trajectory.py --out BENCH_PR3.json [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import re
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core import (  # noqa: E402
+    AutoTuner,
+    BurstyTrace,
+    MemoryModel,
+    Network,
+    NetworkProfiler,
+    RegimeTrace,
+    StableTrace,
+    StageCosts,
+    enumerate_candidates,
+    make_plan,
+    simulate_plan,
+    uniform_network,
+)
+from repro.core.network import PeriodicPreemptionTrace  # noqa: E402
+
+SCHEMA_VERSION = 1
+REL_TOL = 0.10  # >10% regression on a gated deterministic metric fails the job
+
+#: metric -> (direction, rel_tol); "higher" means bigger is better and the
+#: gate requires ``new >= old * (1 - tol)`` (resp. <= for "lower").  The
+#: deterministic simulation metrics gate at the tight default; the one
+#: wall-clock metric (events/sec) gets a wider band for shared-runner noise.
+GATES = {
+    "fig2_gain_k2": ("higher", REL_TOL),
+    "fig2_gain_k4": ("higher", REL_TOL),
+    "vector_w_gain": ("higher", REL_TOL),
+    "tuner_preempted_hours_beat_1f1b": ("higher", REL_TOL),
+    "sim_events_per_sec": ("higher", 0.5),
+}
+
+#: wall-clock metrics only gate against a baseline recorded on a comparable
+#: machine — a BENCH committed from a dev laptop must not fail the CI
+#: runner (or vice versa) on hardware difference alone; on a fingerprint
+#: mismatch they are reported but not gated
+WALL_CLOCK_METRICS = {"sim_events_per_sec"}
+
+
+def machine_fingerprint() -> dict:
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def fig2_ratios() -> dict:
+    """Fig-2 pinned cell: S=4, M=8, bwd=2·fwd, transfer = F/2."""
+    S, M = 4, 8
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(S, lambda: StableTrace(2.0))
+    lengths = {
+        k: simulate_plan(make_plan(S, M, k), costs, net).pipeline_length
+        for k in (1, 2, 4)
+    }
+    return {
+        "fig2_len_1f1b": lengths[1],
+        "fig2_gain_k2": lengths[1] / lengths[2],
+        "fig2_gain_k4": lengths[1] / lengths[4],
+    }
+
+
+def vector_w_gain() -> dict:
+    """The heterogeneity golden scenario: memory-skewed 4-stage pipeline
+    under periodic preemption; gain = best-admissible-scalar / vector."""
+    S, M = 4, 32
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(
+        S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+    )
+    vec = make_plan(S, M, 1, kind="zb_h2", extra_warmup=(3, 3, 2, 1))
+    scal = make_plan(S, M, 1, kind="zb_h2", extra_warmup=1)
+    len_v = simulate_plan(vec, costs, net).pipeline_length
+    len_s = simulate_plan(scal, costs, net).pipeline_length
+    return {
+        "vector_w_len": len_v,
+        "scalar_w_len": len_s,
+        "vector_w_gain": len_s / len_v,
+    }
+
+
+def tuner_switch_trace() -> dict:
+    """Seeded Fig-10-style regime trace (4 'hours', preemption heavy ->
+    heavy -> eased -> heavy); kind-diverse candidates; all decisions are
+    deterministic given the trace seeds."""
+    S, B, hour = 4, 32, 600.0
+    mm = MemoryModel.uniform(
+        num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+    cands = enumerate_candidates(
+        S, B, mm, 1e8, max_k=4, kinds=("kfkb", "zb_h1", "zb_h2"),
+    )
+
+    costs_by_b = {}
+
+    def costs_for(cand):
+        if cand.micro_batch_size not in costs_by_b:
+            costs_by_b[cand.micro_batch_size] = StageCosts.uniform(
+                S, 0.1 * cand.micro_batch_size, act_bytes=float(cand.micro_batch_size)
+            )
+        return costs_by_b[cand.micro_batch_size]
+
+    def hourly(seed, heavy):
+        if heavy:
+            return BurstyTrace(8.0, contended_frac=0.1, mean_free=0.3,
+                               mean_contended=0.9, seed=seed)
+        return BurstyTrace(8.0, contended_frac=0.6, mean_free=2.0,
+                           mean_contended=0.2, seed=seed)
+
+    def link_trace(a, b):
+        seed = a * 17 + b
+        return RegimeTrace(
+            breakpoints=[hour, 2 * hour, 3 * hour],
+            traces=[hourly(seed, True), hourly(seed + 7, True),
+                    hourly(seed + 13, False), hourly(seed + 23, True)],
+        )
+
+    net = Network.build(S, link_trace)
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net, window=4))
+    recs = [tuner.tune(h * hour + 30.0) for h in range(4)]
+    switches = sum(1 for r in recs[1:] if r.switched)
+    beat = 0
+    one_f1b = next(c.name for c in cands if c.kind == "kfkb" and c.k == 1)
+    for h in (0, 1, 3):  # the preempted hours
+        r = recs[h]
+        if r.estimates[r.chosen] < r.estimates[one_f1b]:
+            beat += 1
+    return {
+        "tuner_switch_count": switches,
+        "tuner_chosen_kinds": [r.chosen_kind for r in recs],
+        "tuner_chosen_ks": [r.chosen_k for r in recs],
+        "tuner_preempted_hours_beat_1f1b": beat,
+        "tuner_candidates": len(cands),
+    }
+
+
+def simulator_throughput(repeats: int = 5) -> dict:
+    """Discrete-event core speed on a fixed workload (events = executed
+    tasks + completed transfers).  Wall-clock, hence gated loosely."""
+    S, M, k = 8, 32, 2
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    plan = make_plan(S, M, k, kind="zb_h1")
+    net = uniform_network(S, lambda: BurstyTrace(4.0, seed=11))
+    graph_tasks = sum(len(o) for o in plan.orders)
+    transfers = 2 * M * (S - 1)
+    events = graph_tasks + transfers
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        simulate_plan(plan, costs, net)
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "sim_events": events,
+        "sim_events_per_sec": events / best,
+    }
+
+
+def collect() -> dict:
+    metrics = {}
+    metrics.update(fig2_ratios())
+    metrics.update(vector_w_gain())
+    metrics.update(tuner_switch_trace())
+    metrics.update(simulator_throughput())
+    return metrics
+
+
+def previous_bench(root: str, out_name: str) -> tuple[str, dict] | None:
+    """The most recent other committed BENCH_*.json (by PR number suffix)."""
+    pat = re.compile(r"BENCH_PR(\d+)\.json$")
+    found = []
+    for f in os.listdir(root):
+        m = pat.match(f)
+        if m and f != out_name:
+            found.append((int(m.group(1)), f))
+    if not found:
+        return None
+    _, name = max(found)
+    with open(os.path.join(root, name)) as fh:
+        return name, json.load(fh)
+
+
+def check_regression(metrics: dict, prev_name: str, prev: dict) -> list[str]:
+    failures = []
+    prev_metrics = prev.get("metrics", {})
+    same_machine = prev.get("machine") == machine_fingerprint()
+    for key, (direction, tol) in GATES.items():
+        if key not in metrics or key not in prev_metrics:
+            continue
+        if key in WALL_CLOCK_METRICS and not same_machine:
+            print(f"[trajectory] {key} not gated: baseline from a different "
+                  f"machine ({prev_name})")
+            continue
+        new, old = float(metrics[key]), float(prev_metrics[key])
+        if old == 0:
+            continue
+        if direction == "higher" and new < old * (1.0 - tol):
+            failures.append(f"{key}: {new:.4g} < {old:.4g} * {1 - tol} ({prev_name})")
+        if direction == "lower" and new > old * (1.0 + tol):
+            failures.append(f"{key}: {new:.4g} > {old:.4g} * {1 + tol} ({prev_name})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write schema-versioned JSON here (e.g. BENCH_PR3.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >10%% regression vs the previous committed BENCH_*.json")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    metrics = collect()
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "source": "benchmarks/trajectory.py",
+        "rel_tol": REL_TOL,
+        "gated": sorted(GATES),
+        "machine": machine_fingerprint(),
+        "metrics": metrics,
+        "wall_seconds": round(time.time() - t0, 2),
+    }
+    print(json.dumps(payload, indent=1, default=str))
+    if args.out:
+        parent = os.path.dirname(os.path.abspath(args.out))
+        os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+            f.write("\n")
+        print(f"[trajectory] wrote {os.path.abspath(args.out)}")
+    if args.check:
+        out_name = os.path.basename(args.out) if args.out else ""
+        prev = previous_bench(_ROOT, out_name)
+        if prev is None:
+            print("[trajectory] no previous BENCH_*.json — gate passes trivially")
+            return 0
+        failures = check_regression(metrics, *prev)
+        if failures:
+            print("[trajectory] REGRESSION vs committed baseline:")
+            for f in failures:
+                print("  -", f)
+            return 1
+        print(f"[trajectory] no gated metric regressed vs {prev[0]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 from repro.checkpoint.io import (
-    load_checkpoint,
     latest_step,
+    load_checkpoint,
     save_checkpoint,
 )
 

@@ -8,10 +8,19 @@ Public API re-exports the pieces a user composes:
     summary   = Coordinator(tuner, net, B, interval).run(iters)
 """
 
-from repro.core.candidates import Candidate, enumerate_candidates
+from repro.core.candidates import (
+    Candidate,
+    enumerate_candidates,
+    largest_admissible_warmup,
+)
 from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
 from repro.core.costmodel import CostModel, closed_form_1f1b_length
-from repro.core.memory_model import MemoryModel, StageMemorySpec, predicted_peak_live
+from repro.core.memory_model import (
+    MemoryModel,
+    StageMemorySpec,
+    limit_curve,
+    predicted_peak_live,
+)
 from repro.core.network import (
     BandwidthTrace,
     BurstyTrace,
@@ -21,18 +30,21 @@ from repro.core.network import (
     StableTrace,
     uniform_network,
 )
+from repro.core.placement import optimize_weight_placement
 from repro.core.profiler import ComputeProfiler, MovingAverage, NetworkProfiler
 from repro.core.schedule import (
     INTERLEAVED_KINDS,
-    Op,
     PLAN_KINDS,
+    WARMUP_KINDS,
     ZB_KINDS,
+    Op,
     PlanEdge,
     SchedulePlan,
     TabularPlan,
     Task,
     lower_to_table,
     make_plan,
+    normalize_warmup,
     peak_live_activations,
     tick_table,
     tick_table_stats,
@@ -44,6 +56,7 @@ from repro.core.tuner import AutoTuner, TuningRecord
 __all__ = [
     "Candidate",
     "enumerate_candidates",
+    "largest_admissible_warmup",
     "Coordinator",
     "IterationRecord",
     "RunSummary",
@@ -51,7 +64,9 @@ __all__ = [
     "closed_form_1f1b_length",
     "MemoryModel",
     "StageMemorySpec",
+    "limit_curve",
     "predicted_peak_live",
+    "optimize_weight_placement",
     "BandwidthTrace",
     "BurstyTrace",
     "Network",
@@ -66,12 +81,14 @@ __all__ = [
     "PLAN_KINDS",
     "ZB_KINDS",
     "INTERLEAVED_KINDS",
+    "WARMUP_KINDS",
     "PlanEdge",
     "SchedulePlan",
     "TabularPlan",
     "Task",
     "lower_to_table",
     "make_plan",
+    "normalize_warmup",
     "peak_live_activations",
     "tick_table",
     "tick_table_stats",

@@ -1,0 +1,243 @@
+"""Calibrated per-stage costs from REAL stage bodies (the heterogeneity source).
+
+Everything upstream of this module prices schedules with
+``StageCosts.uniform`` — an even 50/50 B/W split over identical stages.
+Real pipelines are not uniform: stage 0 carries the embedding lookup, the
+last stage the vocabulary projection inside its loss head, and the backward
+of attention-heavy stages skews toward the weight gradient.  This module
+closes that gap end to end: it compiles each stage's actual forward /
+``BWD_INPUT`` / ``BWD_WEIGHT`` bodies (the exact task kernels the engines
+run — ``jax.vjp`` pullbacks of :class:`~repro.pipeline.stage.StagedModel`),
+analyzes the optimized HLO with :mod:`repro.launch.hlo_analysis`, and turns
+the trip-count-aware FLOP / HBM-byte counts into per-stage roofline times:
+
+    t[s] = max(flops[s] / peak_flops, hbm_bytes[s] / hbm_bw)
+
+The result is a non-uniform :class:`~repro.core.taskgraph.StageCosts`
+(true ``fwd_time[s]`` / ``bwd_input_time[s]`` / ``bwd_weight_time[s]`` plus
+exact activation wire bytes) and a matching per-stage
+:class:`~repro.core.memory_model.MemoryModel` — the two inputs the
+candidate enumeration's per-stage warmup greedy and the simulator's
+heterogeneous golden gates consume.  ``method="wallclock"`` swaps the
+roofline estimate for actually timing the compiled stage functions on the
+host (useful on CPU where the TPU roofline constants are meaningless but
+*relative* stage skew still matters).
+
+Entry point: ``python -m repro.launch.dryrun_pipeline --calibrate`` runs
+this against the configs/ model ladder at production shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memory_model import MemoryModel, StageMemorySpec
+from repro.core.taskgraph import StageCosts
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, analyze_hlo
+from repro.pipeline.stage import StagedModel
+
+__all__ = ["StageTaskProfile", "Calibration", "calibrate_stage_costs"]
+
+
+@dataclasses.dataclass
+class StageTaskProfile:
+    """Roofline terms of one task kind at one stage (per micro-batch)."""
+
+    flops: float
+    hbm_bytes: float
+    seconds: float
+
+
+@dataclasses.dataclass
+class Calibration:
+    """Calibrated heterogeneous pipeline profile."""
+
+    costs: StageCosts
+    memory: MemoryModel
+    profiles: list[dict[str, StageTaskProfile]]  # per stage: fwd/bwd_input/bwd_weight
+
+    def summary_rows(self) -> list[list[str]]:
+        """Per-stage table rows: times in ms (3 sig figs), wire bytes in MB."""
+        rows = []
+        for s, prof in enumerate(self.profiles):
+            rows.append(
+                [
+                    str(s),
+                    f"{prof['fwd'].seconds * 1e3:.3g}",
+                    f"{prof['bwd_input'].seconds * 1e3:.3g}",
+                    f"{prof['bwd_weight'].seconds * 1e3:.3g}",
+                    f"{self.costs.fwd_bytes[s] / 1e6:.3g}",
+                ]
+            )
+        return rows
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _tree_bytes(tree) -> float:
+    return float(
+        sum(np.prod(leaf.shape) * _dtype_bytes(leaf.dtype)
+            for leaf in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def _stage_param_spec(staged: StagedModel, params_spec, stage: int):
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype), params_spec
+    )
+
+
+def _roofline_seconds(
+    flops: float, hbm_bytes: float, peak_flops: float, hbm_bw: float
+) -> float:
+    return max(flops / peak_flops, hbm_bytes / hbm_bw)
+
+
+def _profile_compiled(
+    fn, arg_specs, peak_flops: float, hbm_bw: float, method: str
+) -> StageTaskProfile:
+    compiled = jax.jit(fn).lower(*arg_specs).compile()
+    ana = analyze_hlo(compiled.as_text())
+    if method == "wallclock":
+        from repro.core.profiler import time_callable
+
+        args = [
+            jax.tree_util.tree_map(
+                lambda sp: jnp.zeros(sp.shape, sp.dtype), spec
+            )
+            for spec in arg_specs
+        ]
+        seconds = time_callable(
+            lambda: jax.block_until_ready(compiled(*args)), repeats=3, warmup=1
+        )
+    else:
+        seconds = _roofline_seconds(ana.flops, ana.hbm_bytes, peak_flops, hbm_bw)
+    return StageTaskProfile(flops=ana.flops, hbm_bytes=ana.hbm_bytes, seconds=seconds)
+
+
+def calibrate_stage_costs(
+    staged: StagedModel,
+    micro_batch_size: int,
+    seq_len: int,
+    peak_flops: float = PEAK_FLOPS,
+    hbm_bw: float = HBM_BW,
+    method: str = "hlo",
+    optimizer_bytes_per_param_byte: float = 2.0,
+) -> Calibration:
+    """Profile every stage's real task bodies into a heterogeneous profile.
+
+    Per stage ``s`` of ``staged`` three programs are lowered, compiled and
+    analyzed (mirroring exactly what the engines execute per task):
+
+    * **fwd** — ``stage_hidden`` (stage 0 prepends ``embed_tokens``),
+    * **bwd_input** — the ``jax.vjp`` pullback w.r.t. the stage input (the
+      last stage differentiates through its loss head, which is where the
+      vocab-projection backward — the single biggest skew source — lands),
+    * **bwd_weight** — the pullback w.r.t. the stage parameters.
+
+    ``method="hlo"`` (default) converts the HLO FLOP/byte counts to seconds
+    with the roofline constants; ``method="wallclock"`` times the compiled
+    functions on the host instead.  Returns the calibrated
+    :class:`StageCosts`, a per-stage :class:`MemoryModel`, and the raw
+    per-task profiles.
+    """
+    if method not in ("hlo", "wallclock"):
+        raise ValueError(f"unknown calibration method {method!r}")
+    cfg = staged.cfg
+    S = staged.num_stages
+    b, T, d = micro_batch_size, seq_len, cfg.d_model
+    act_bytes = float(b * T * d * _dtype_bytes(cfg.dtype))
+
+    params_spec = jax.eval_shape(
+        lambda: staged.init_all_stages(jax.random.PRNGKey(0))
+    )
+    x_spec = jax.ShapeDtypeStruct((b, T, d), cfg.dtype)
+    tok_spec = jax.ShapeDtypeStruct((b, T), jnp.int32)
+    lbl_spec = jax.ShapeDtypeStruct((b, T), jnp.int32)
+
+    profiles: list[dict[str, StageTaskProfile]] = []
+    specs: list[StageMemorySpec] = []
+    fwd_t, bwd_i_t, bwd_w_t = [], [], []
+    for s in range(S):
+        p_spec = _stage_param_spec(staged, params_spec, s)
+        first, last = s == 0, s == S - 1
+
+        if first:
+            def fwd_fn(p, tok):
+                return staged.stage_hidden(p, staged.embed_tokens(p, tok))
+
+            fwd = _profile_compiled(
+                fwd_fn, (p_spec, tok_spec), peak_flops, hbm_bw, method
+            )
+        else:
+            fwd = _profile_compiled(
+                staged.stage_hidden, (p_spec, x_spec), peak_flops, hbm_bw, method
+            )
+
+        if last:
+            def bwd_input_fn(p, x, lbl):
+                def through_x(xx):
+                    return staged.head_loss(p, staged.stage_hidden(p, xx), lbl)
+
+                loss, vjp = jax.vjp(through_x, x)
+                return vjp(jnp.ones_like(loss))[0]
+
+            def bwd_weight_fn(p, x, lbl):
+                def through_p(pp):
+                    return staged.head_loss(pp, staged.stage_hidden(pp, x), lbl)
+
+                loss, vjp = jax.vjp(through_p, p)
+                return vjp(jnp.ones_like(loss))[0]
+
+            bi_args = (p_spec, x_spec, lbl_spec)
+            bw_args = (p_spec, x_spec, lbl_spec)
+        else:
+            def bwd_input_fn(p, x, dy):
+                _, vjp = jax.vjp(lambda xx: staged.stage_hidden(p, xx), x)
+                return vjp(dy)[0]
+
+            def bwd_weight_fn(p, x, dy):
+                _, vjp = jax.vjp(lambda pp: staged.stage_hidden(pp, x), p)
+                return vjp(dy)[0]
+
+            bi_args = (p_spec, x_spec, x_spec)
+            bw_args = (p_spec, x_spec, x_spec)
+        bwd_i = _profile_compiled(bwd_input_fn, bi_args, peak_flops, hbm_bw, method)
+        bwd_w = _profile_compiled(bwd_weight_fn, bw_args, peak_flops, hbm_bw, method)
+
+        profiles.append({"fwd": fwd, "bwd_input": bwd_i, "bwd_weight": bwd_w})
+        fwd_t.append(fwd.seconds)
+        bwd_i_t.append(bwd_i.seconds)
+        bwd_w_t.append(bwd_w.seconds)
+
+        param_bytes = _tree_bytes(p_spec)
+        layer_act = float(
+            (2 * d + getattr(cfg, "d_ff", d)) * _dtype_bytes(cfg.dtype)
+        )
+        specs.append(
+            StageMemorySpec(
+                param_bytes=param_bytes,
+                optimizer_bytes=optimizer_bytes_per_param_byte * param_bytes,
+                grad_bytes=param_bytes,
+                stage_input_bytes_per_token=float(d * _dtype_bytes(cfg.dtype)),
+                layer_act_bytes_per_token=layer_act,
+                num_layers=staged.layers_per_stage,
+            )
+        )
+
+    costs = StageCosts(
+        fwd_time=fwd_t,
+        bwd_time=[bi + bw for bi, bw in zip(bwd_i_t, bwd_w_t)],
+        fwd_bytes=[act_bytes] * S,
+        bwd_bytes=[act_bytes] * S,
+        bwd_input_time=bwd_i_t,
+        bwd_weight_time=bwd_w_t,
+    )
+    memory = MemoryModel(stages=specs, seq_len=seq_len)
+    return Calibration(costs=costs, memory=memory, profiles=profiles)

@@ -8,14 +8,25 @@ under-utilize device memory (point *A* of Fig 3) and points above it OOM
 (point *B*).  Only curve points (like *C*) are kept: for each (kind, k)
 from 1 upwards, greedily take the **largest** feasible ``b``.
 
-``zb_h2`` candidates add one more memory-priced axis: the extra-warmup
-depth ``w``.  Peak bytes are monotone non-decreasing in ``w`` (each unit
-raises the per-stage live cap by one until the group count clamps it), so
-the curve point is found by **binary-searching the largest ``w``** the
-:class:`MemoryModel` limit admits at the chosen ``b``; a (k, b) where not
-even ``w = 1`` fits — or where the group count leaves no warmup headroom,
-making H2 degenerate to H1 — yields no H2 candidate at all, which is how
-the tuner "refuses" H2 and falls back to H1 under a tight limit.
+The memory limit itself is a per-stage *curve* (``memory_limit_bytes``
+accepts a scalar or one entry per stage): real pipelines are
+heterogeneous — the first stage carries the embedding, the last the logits
+head — so admissibility is judged stage by stage.
+
+Warmup-capable kinds (``zb_h2``, and ``interleaved_zb`` composed with
+warmup) add one more memory-priced axis: the per-stage extra-warmup depth
+``w[s]``.  Peak bytes at a stage are monotone non-decreasing in its own
+``w[s]`` and independent of every other stage's (the builder cap is
+per-stage), so the curve point is found **greedily per stage**: each stage
+takes the largest ``w[s]`` its own limit admits (closed-form via
+:meth:`MemoryModel.bytes_at_live` — no plan needs building per probe).
+This replaces the old global binary search, whose single scalar ``w`` was
+pinned by the tightest stage; on a memory-skewed pipeline the vector
+squeezes warmup depth out of every stage with headroom.  A (k, b) where no
+stage admits even ``w[s] = 1`` — or where the group count leaves no warmup
+headroom, making H2 degenerate to H1 — yields no H2 candidate at all,
+which is how the tuner "refuses" H2 and falls back to H1 under a tight
+limit.
 
 Duplicated (kind, k, b) never arise (b is a function of (kind, k) on the
 curve), but two k values can map to the same b when memory is
@@ -31,7 +42,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
-from repro.core.memory_model import MemoryModel
+from repro.core.memory_model import MemoryModel, limit_curve
 from repro.core.schedule import (
     INTERLEAVED_KINDS,
     PLAN_KINDS,
@@ -40,7 +51,7 @@ from repro.core.schedule import (
     make_plan,
 )
 
-__all__ = ["Candidate", "enumerate_candidates", "divisors"]
+__all__ = ["Candidate", "enumerate_candidates", "divisors", "largest_admissible_warmup"]
 
 
 @dataclasses.dataclass
@@ -64,7 +75,7 @@ class Candidate:
         return self.plan.num_virtual
 
     @property
-    def extra_warmup(self) -> int:
+    def extra_warmup(self) -> tuple[int, ...]:
         return self.plan.extra_warmup
 
     @property
@@ -88,58 +99,66 @@ def _build(
     b: int,
     kind: str,
     num_virtual: int,
-    extra_warmup: int = 0,
+    extra_warmup: int | Sequence[int] = 0,
 ) -> SchedulePlan:
     if kind == "kfkb" and num_virtual == 1:
         # the paper's original search path — keep legacy factories working
         return plan_factory(num_stages, M, k, micro_batch_size=b)
     kw = dict(kind=kind, num_virtual=num_virtual)
-    if extra_warmup:
+    if (max(extra_warmup) if isinstance(extra_warmup, (tuple, list)) else extra_warmup):
         kw["extra_warmup"] = extra_warmup
     return plan_factory(num_stages, M, k, micro_batch_size=b, **kw)
 
 
-def _largest_feasible_warmup(
-    plan_factory: Callable[..., SchedulePlan],
+def largest_admissible_warmup(
     num_stages: int,
     M: int,
     k: int,
     b: int,
+    num_virtual: int,
+    zb: bool,
     memory_model: MemoryModel,
-    memory_limit_bytes: float,
+    limits: Sequence[float],
     max_extra_warmup: int,
-) -> tuple[SchedulePlan, float] | None:
-    """Binary-search the largest ``w`` in [1, max_extra_warmup] whose ZB-H2
-    plan the memory limit admits (peak bytes are monotone non-decreasing in
-    ``w``); returns ``(plan, peak_bytes)``, or ``None`` when even ``w = 1``
-    does not fit or cannot grow the live set beyond H1's (no warmup headroom
-    — H2 would just be H1)."""
-    if (M + k - 1) // k < 2:
-        # a single group clamps the live cap at every stage (min(base + w, G)
-        # == base for all s iff G == 1): H2 degenerates to H1 exactly
-        return None
-    probe = _build(plan_factory, num_stages, M, k, b, "zb_h2", 1, extra_warmup=1)
-    peak = memory_model.peak_bytes(probe)
-    if peak > memory_limit_bytes:
-        return None
-    lo, best = 1, (probe, peak)
-    hi = max_extra_warmup
-    while lo < hi:
-        mid = (lo + hi + 1) // 2
-        plan = _build(plan_factory, num_stages, M, k, b, "zb_h2", 1, extra_warmup=mid)
-        peak = memory_model.peak_bytes(plan)
-        if peak <= memory_limit_bytes:
-            lo, best = mid, (plan, peak)
+) -> tuple[int, ...]:
+    """Greedy per-stage warmup vector on the memory-limit curve.
+
+    For each stage independently, find the largest ``w[s]`` in
+    ``[0, max_extra_warmup]`` whose predicted peak live slot count
+    (base-depth + ``w[s]``, clamped at the stage's total group budget)
+    still fits ``limits[s]``, using the closed-form stage byte curve.
+    Stages are independent because the builders cap issuance per stage, so
+    no joint search is needed — this is the greedy that replaces the old
+    global scalar binary search.
+    """
+    S, v = num_stages, num_virtual
+    G = (M + k - 1) // k
+    out = []
+    for s in range(S):
+        if v > 1:
+            base_groups = min(2 * (S - s - 1) + (v - 1) * S + 1, G * v)
+            group_budget = G * v
         else:
-            hi = mid - 1
-    return best
+            base_groups = min(S - s, G)
+            group_budget = G
+        w_s = 0
+        for w in range(1, max_extra_warmup + 1):
+            groups = min(base_groups + w, group_budget)
+            if groups == min(base_groups + w_s, group_budget):
+                break  # clamped: deeper w buys nothing at this stage
+            live = min(groups * k, M * v)
+            if memory_model.bytes_at_live(s, b, live, zb) > limits[s]:
+                break
+            w_s = w
+        out.append(w_s)
+    return tuple(out)
 
 
 def enumerate_candidates(
     num_stages: int,
     global_batch: int,
     memory_model: MemoryModel,
-    memory_limit_bytes: float,
+    memory_limit_bytes: float | Sequence[float],
     max_k: int | None = None,
     min_microbatches: int | None = None,
     plan_factory: Callable[..., SchedulePlan] = make_plan,
@@ -155,11 +174,15 @@ def enumerate_candidates(
     (one curve point per (kind, k), plus one per (k, v) for interleaved
     kinds, with ``virtual_degrees`` listing the chunk counts tried);
     infeasible combinations (e.g. interleaved divisibility) are skipped
-    silently.  For ``zb_h2`` the extra-warmup depth ``w`` is itself
-    memory-priced: the largest ``w <= max_extra_warmup`` (default ``S - 1``,
-    the full warmup-bubble depth) under the limit is binary-searched per
-    (k, b); when not even ``w = 1`` fits, the kind contributes no candidate
-    at that k — the tuner then falls back to the H1 plans in the set.
+    silently.  ``memory_limit_bytes`` may be a scalar or a per-stage curve.
+
+    For the warmup-capable kinds the per-stage extra-warmup depth ``w[s]``
+    is itself memory-priced: each stage greedily takes the largest
+    ``w[s] <= max_extra_warmup`` (default ``S - 1``, the full warmup-bubble
+    depth) its own limit admits (see :func:`largest_admissible_warmup`).
+    When no stage admits ``w[s] = 1``, ``zb_h2`` contributes no candidate
+    at that k — the tuner then falls back to the H1 plans in the set —
+    while ``interleaved_zb`` falls back to its plain (w = 0) form.
     """
     if min_microbatches is None:
         min_microbatches = num_stages
@@ -170,6 +193,7 @@ def enumerate_candidates(
         if kind not in known:  # fail loudly — the except below is only for
             # per-(k, b) infeasibility, not misconfiguration
             raise ValueError(f"unknown schedule kind {kind!r}; expected one of {known}")
+    limits = limit_curve(memory_limit_bytes, num_stages)
     out: list[Candidate] = []
     ks = range(1, (max_k or global_batch) + 1)
     for kind in kinds:
@@ -183,21 +207,24 @@ def enumerate_candidates(
                     if M % k != 0 or M < min_microbatches:
                         continue
                     try:
-                        if kind == "zb_h2":
-                            found = _largest_feasible_warmup(
-                                plan_factory, num_stages, M, k, b,
-                                memory_model, memory_limit_bytes, max_extra_warmup,
+                        if kind in ("zb_h2", "interleaved_zb"):
+                            w_vec = largest_admissible_warmup(
+                                num_stages, M, k, b, v, True,
+                                memory_model, limits, max_extra_warmup,
                             )
-                            if found is None:
-                                continue  # no w >= 1 admitted at this b
-                            plan, peak = found
+                            if kind == "zb_h2" and max(w_vec) < 1:
+                                continue  # no stage admits any warmup: refuse H2
+                            plan = _build(
+                                plan_factory, num_stages, M, k, b, kind, v,
+                                extra_warmup=w_vec,
+                            )
                         else:
                             plan = _build(plan_factory, num_stages, M, k, b, kind, v)
-                            peak = memory_model.peak_bytes(plan)
                     except ValueError:
                         continue  # e.g. interleaved group-divisibility
-                    if peak <= memory_limit_bytes:
-                        best = Candidate(k, b, M, plan, peak)
+                    peaks = memory_model.peak_bytes_per_stage(plan)
+                    if all(p <= lim for p, lim in zip(peaks, limits)):
+                        best = Candidate(k, b, M, plan, max(peaks))
                         break  # first (largest) feasible b — the curve point
                 if best is not None:
                     out.append(best)

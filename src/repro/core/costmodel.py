@@ -3,7 +3,11 @@
 The paper's "simple cost model" consumes (a) the stable per-stage compute
 profile and (b) the windowed end-to-end transfer-time measurements, and
 estimates the pipeline length of each candidate — any schedule kind, since
-the estimator is plan-agnostic.  We implement it as a deterministic run of
+the estimator is plan-agnostic.  The compute profile is a full per-stage
+:class:`~repro.core.taskgraph.StageCosts` (including the ``BWD_INPUT`` /
+``BWD_WEIGHT`` split), so calibrated heterogeneous stages
+(:mod:`repro.core.calibrate`) price through the estimator unchanged — no
+uniformity is assumed anywhere below this line.  We implement it as a deterministic run of
 the discrete-event simulator with each link frozen at its *measured
 effective bandwidth* (bytes / measured transfer time) — i.e.
 the model assumes the recently-observed network state persists, which is

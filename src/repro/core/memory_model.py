@@ -27,14 +27,23 @@ recompute).
 
 :func:`predicted_peak_live` is the closed-form companion of the exact walk:
 the per-stage peak every builder is contractually bound to (exact for the
-non-zb and zb kinds when ``k | M``; an upper bound for ``interleaved_zb``,
+non-zb kinds when ``k | M`` and for zb kinds at uniform ``w``; an upper
+bound for non-uniform warmup vectors — a stage's real depth is also limited
+by what its upstream neighbours can feed it — and for ``interleaved_zb``,
 whose greedy W placement may retire slots early).  The conformance suite
 holds every builder to it.
+
+Memory limits are a per-stage *curve*, not one number: real pipelines skew
+(the first stage carries the embedding, the last the logits head, optimizer
+sharding differs), which is exactly why a heterogeneous warmup vector
+``w[s]`` can exist.  Every ``limit_bytes`` argument below accepts either a
+scalar (uniform limit) or one entry per stage.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core.schedule import (
     INTERLEAVED_KINDS,
@@ -43,7 +52,20 @@ from repro.core.schedule import (
     peak_live_activations,
 )
 
-__all__ = ["StageMemorySpec", "MemoryModel", "predicted_peak_live"]
+__all__ = ["StageMemorySpec", "MemoryModel", "predicted_peak_live", "limit_curve"]
+
+
+def limit_curve(limit_bytes: float | Sequence[float], num_stages: int) -> list[float]:
+    """Normalize a memory limit to the per-stage curve (scalars broadcast)."""
+    if isinstance(limit_bytes, (int, float)):
+        return [float(limit_bytes)] * num_stages
+    curve = [float(x) for x in limit_bytes]
+    if len(curve) != num_stages:
+        raise ValueError(
+            f"memory limit curve needs one entry per stage "
+            f"(got {len(curve)}, num_stages={num_stages})"
+        )
+    return curve
 
 
 def predicted_peak_live(plan: SchedulePlan) -> list[int]:
@@ -53,13 +75,15 @@ def predicted_peak_live(plan: SchedulePlan) -> list[int]:
     partial trailing groups can only shrink the expanded peak):
 
     * ``kfkb`` / ``zb_h1``: the 1F1B depth bound ``min(S - s, G)``,
-    * ``zb_h2``: ``min(min(S - s, G) + w, G)`` — exactly ``w`` more than
-      H1 wherever the group count leaves room,
+    * ``zb_h2``: ``min(min(S - s, G) + w[s], G)`` — exactly ``w[s]`` more
+      than H1 wherever the group count leaves room.  Exact for uniform
+      ``w``; an upper bound for non-uniform vectors (a stage can only go as
+      deep as its upstream stages actually feed it),
     * ``interleaved``: Megatron's warmup depth plus the steady-state
       in-flight forward, ``min(2*(S - s - 1) + (v - 1)*S + 1, G*v)``,
     * ``interleaved_zb``: capped by construction at the plain interleaved
-      plan's peak (the builder's memory guarantee), so the same formula is
-      an upper bound.
+      plan's peak plus ``w[s]`` (the builder's memory guarantee), so the
+      same formula plus ``w[s]`` is an upper bound.
 
     Expanded to micro-batches, each group holds ``k`` members.
     """
@@ -71,9 +95,9 @@ def predicted_peak_live(plan: SchedulePlan) -> list[int]:
         if plan.kind in ("kfkb", "zb_h1"):
             groups = min(S - s, G)
         elif plan.kind == "zb_h2":
-            groups = min(min(S - s, G) + w, G)
+            groups = min(min(S - s, G) + w[s], G)
         elif plan.kind in INTERLEAVED_KINDS:
-            groups = min(2 * (S - s - 1) + (v - 1) * S + 1, G * v)
+            groups = min(2 * (S - s - 1) + (v - 1) * S + 1 + w[s], G * v)
         else:  # fail closed: a new kind must bring its own peak contract
             raise ValueError(
                 f"no peak-live prediction for plan kind {plan.kind!r}; "
@@ -127,25 +151,53 @@ class MemoryModel:
             return per_layer * spec.num_layers + ws
         return ws
 
+    def static_bytes(self, stage: int) -> float:
+        """Schedule-independent residents: params + optimizer state + grads."""
+        spec = self.stages[stage]
+        return spec.param_bytes + spec.optimizer_bytes + spec.grad_bytes
+
+    def slot_bytes(self, stage: int, micro_batch_size: int, zb: bool) -> float:
+        """Bytes ONE live activation slot costs at a stage.
+
+        Zero-bubble slots carry the engine's wctx surcharge: a hidden-sized
+        ``dy`` is stashed alongside the saved stage input between
+        ``BWD_INPUT`` and ``BWD_WEIGHT``.
+        """
+        per_slot = self.activation_bytes_per_mb(stage, micro_batch_size)
+        if zb:
+            spec = self.stages[stage]
+            per_slot += spec.stage_input_bytes_per_token * micro_batch_size * self.seq_len
+        return per_slot
+
+    def bytes_at_live(
+        self, stage: int, micro_batch_size: int, live: int, zb: bool
+    ) -> float:
+        """Predicted peak bytes at one stage holding ``live`` activation
+        slots — the closed-form stage curve the warmup greedy walks."""
+        return (
+            self.static_bytes(stage)
+            + self.slot_bytes(stage, micro_batch_size, zb) * live
+            + self.transient_bytes(stage, micro_batch_size)
+        )
+
     def peak_bytes_per_stage(self, plan: SchedulePlan) -> list[float]:
         b = plan.micro_batch_size
         peaks_live = peak_live_activations(plan)
-        out = []
-        for s, spec in enumerate(self.stages):
-            static = spec.param_bytes + spec.optimizer_bytes + spec.grad_bytes
-            act = self.activation_bytes_per_mb(s, b) * peaks_live[s]
-            if plan.kind in ZB_KINDS:
-                # the engine's wctx ring: one stashed hidden-sized dy per slot
-                tokens = b * self.seq_len
-                act += spec.stage_input_bytes_per_token * tokens * peaks_live[s]
-            out.append(static + act + self.transient_bytes(s, b))
-        return out
+        zb = plan.kind in ZB_KINDS
+        return [
+            self.bytes_at_live(s, b, peaks_live[s], zb)
+            for s in range(len(self.stages))
+        ]
 
     def peak_bytes(self, plan: SchedulePlan) -> float:
         return max(self.peak_bytes_per_stage(plan))
 
-    def fits(self, plan: SchedulePlan, limit_bytes: float) -> bool:
-        return self.peak_bytes(plan) <= limit_bytes
+    def fits(self, plan: SchedulePlan, limit_bytes: float | Sequence[float]) -> bool:
+        """Per-stage comparison against a (possibly per-stage) limit curve."""
+        limits = limit_curve(limit_bytes, len(self.stages))
+        return all(
+            peak <= lim for peak, lim in zip(self.peak_bytes_per_stage(plan), limits)
+        )
 
     @classmethod
     def uniform(
@@ -170,4 +222,6 @@ class MemoryModel:
             num_layers=num_layers_per_stage,
             workspace_bytes_per_token=workspace_bytes_per_token,
         )
-        return cls([dataclasses.replace(spec) for _ in range(num_stages)], seq_len, checkpoint_policy)
+        return cls(
+            [dataclasses.replace(spec) for _ in range(num_stages)], seq_len, checkpoint_policy
+        )

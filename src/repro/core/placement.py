@@ -1,0 +1,165 @@
+"""Cost-aware ``BWD_WEIGHT`` placement: beat the FIFO filler on skewed costs.
+
+The zero-bubble builders (``zb_orders`` / ``interleaved_zb_orders``)
+schedule weight-gradient work with a unit-cost lock-step walk: ``W`` runs
+whenever the device would otherwise bubble, in FIFO order.  That is optimal
+when every task costs one tick, but with *calibrated* heterogeneous costs a
+long ``W`` issued right before a critical ``BWD_INPUT`` was about to become
+ready delays the whole upstream chain — the filler should have waited for a
+real bubble.
+
+:func:`optimize_weight_placement` fixes the placement per device with a
+small greedy search over the per-device ILP's move neighbourhood: every
+``BWD_WEIGHT`` may be re-inserted at any position in its legal window
+(best-improvement steepest descent), where a move is legal iff it preserves
+
+* intra-device semantics — ``W`` stays after its own ``BWD_INPUT`` and the
+  per-chunk ``W`` stream stays FIFO (what the engine's slot ring requires),
+* the memory contract — delaying ``W`` past a ``FWD`` raises liveness, so a
+  move is admitted only while the device's peak live count stays within its
+  original peak (the plan's published memory price),
+
+and a move is *kept* iff the discrete-event simulation of the whole plan
+under the given costs/network strictly shortens.  The device F/B sequences
+are untouched, so every cross-device send/recv keeps its order and the
+link-FIFO invariants survive by construction.
+
+This is deliberately a refinement pass over a built plan (not a new
+builder): any zero-bubble family member — scalar or vector warmup,
+grouped, interleaved — can be post-optimized once per-stage costs are
+known, e.g. from :mod:`repro.core.calibrate`.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.network import Network, StableTrace
+from repro.core.schedule import ZB_KINDS, Op, SchedulePlan, assign_slots
+from repro.core.simulator import simulate_plan
+from repro.core.taskgraph import StageCosts
+
+__all__ = ["optimize_weight_placement"]
+
+
+def _device_peak(order) -> int:
+    live = peak = 0
+    for t in order:
+        if t.op == Op.FWD:
+            live += 1
+            peak = max(peak, live)
+        elif t.op == Op.BWD_WEIGHT:
+            live -= 1
+    return peak
+
+
+def _move_window(order, i: int) -> tuple[int, int]:
+    """Legal insertion positions ``[lo, hi]`` for the W at position ``i``:
+    bounded below by its own ``BWD_INPUT`` and the previous same-chunk ``W``
+    (stream FIFO), above by the next same-chunk ``W``."""
+    w = order[i]
+    lo = 0
+    for j in range(i - 1, -1, -1):
+        t = order[j]
+        own_b = t.op == Op.BWD_INPUT and (t.mb, t.chunk) == (w.mb, w.chunk)
+        if own_b or (t.op == Op.BWD_WEIGHT and t.chunk == w.chunk):
+            lo = j + 1
+            break
+    hi = len(order) - 1
+    for j in range(i + 1, len(order)):
+        t = order[j]
+        if t.op == Op.BWD_WEIGHT and t.chunk == w.chunk:
+            hi = j - 1
+            break
+    return lo, hi
+
+
+def _with_move(order, i: int, j: int) -> list:
+    trial = list(order)
+    w = trial.pop(i)
+    trial.insert(j, w)
+    return trial
+
+
+def _frozen_network(effective_bw) -> Network:
+    if effective_bw is None:
+        return Network(default=StableTrace(math.inf))
+    return Network(
+        default=StableTrace(math.inf),
+        links={k: StableTrace(bw) for k, bw in effective_bw.items()},
+    )
+
+
+def _rebuild(plan: SchedulePlan, orders) -> SchedulePlan:
+    new = SchedulePlan(
+        num_stages=plan.num_stages,
+        num_microbatches=plan.num_microbatches,
+        k=plan.k,
+        micro_batch_size=plan.micro_batch_size,
+        orders=[list(o) for o in orders],
+        name=plan.name,
+        kind=plan.kind,
+        num_virtual=plan.num_virtual,
+        extra_warmup=plan.extra_warmup,
+    )
+    new.validate()
+    assign_slots(new)
+    return new
+
+
+def optimize_weight_placement(
+    plan: SchedulePlan,
+    costs: StageCosts,
+    effective_bw: dict[tuple[int, int], float] | None = None,
+    max_passes: int = 8,
+) -> SchedulePlan:
+    """Greedy swap search over per-device ``BWD_WEIGHT`` positions.
+
+    Returns a new validated plan (named ``...+Wopt``) whose simulated
+    pipeline length under ``costs`` and the frozen ``effective_bw`` network
+    is <= the input plan's, with per-device peak liveness never above the
+    input plan's.  Non-zero-bubble plans are returned unchanged (they have
+    no ``W`` tasks to place).
+    """
+    if plan.kind not in ZB_KINDS:
+        return plan
+    net = _frozen_network(effective_bw)
+    orders = [list(o) for o in plan.orders]
+    caps = [_device_peak(o) for o in orders]
+    best_len = simulate_plan(_rebuild(plan, orders), costs, net).pipeline_length
+    for _ in range(max_passes):
+        improved = False
+        for s in range(len(orders)):
+            order = orders[s]
+            i = 0
+            while i < len(order):
+                if order[i].op != Op.BWD_WEIGHT:
+                    i += 1
+                    continue
+                lo, hi = _move_window(order, i)
+                best_move: tuple[float, list] | None = None
+                for j in range(lo, hi + 1):
+                    if j == i:
+                        continue
+                    trial_order = _with_move(order, i, j)
+                    if j > i and _device_peak(trial_order) > caps[s]:
+                        break  # delaying further only raises liveness more
+                    trial_orders = list(orders)
+                    trial_orders[s] = trial_order
+                    length = simulate_plan(
+                        _rebuild(plan, trial_orders), costs, net
+                    ).pipeline_length
+                    if length < best_len - 1e-12 and (
+                        best_move is None or length < best_move[0]
+                    ):
+                        best_move = (length, trial_order)
+                if best_move is not None:
+                    best_len, orders[s] = best_move
+                    order = orders[s]
+                    improved = True
+                i += 1
+        if not improved:
+            break
+    out = _rebuild(plan, orders)
+    out.name = plan.name + "+Wopt"
+    return out

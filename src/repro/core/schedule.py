@@ -9,47 +9,77 @@ cross-stage transfer of member *i* is in flight, the stage can compute
 member *i+1* (overlap), at the price of keeping up to ``k`` times more
 forward activations live.
 
-Schedule-family matrix (``make_plan(..., kind=...)``):
+Schedule-family matrix (``make_plan(..., kind=...)``).  ``w[s]`` is the
+per-stage extra-warmup vector (``extra_warmup``: a scalar broadcasts, a
+sequence gives each stage its own depth — sized to ITS memory headroom on
+the per-stage limit curve):
 
-====================  =========  ==========  =======================================
-kind                  k          v (chunks)  trade-off
-====================  =========  ==========  =======================================
-``kfkb`` (k=1)        1          1           1F1B: min activation memory (min(S-s,M)
-                                             live per stage), bubble 2(S-1) ticks.
-``kfkb``              1 < k < M  1           paper's grouping: k-deep transfer
-                                             overlap under preemption, k x 1F1B
-                                             activation memory.
-``kfkb`` (k=M)        M          1           GPipe: max overlap depth, M live
-                                             activations everywhere.
-``zb_h1``             >= 1       1           zero-bubble H1 (Qi et al. 2024): BWD is
-                                             split into BWD_INPUT (critical path) +
-                                             BWD_WEIGHT (bubble filler); same peak
-                                             activation memory as the kFkB plan of
-                                             equal k, strictly shorter pipeline on
-                                             uniform stages.  Composes with k.
-``zb_h2``             >= 1       1           zero-bubble H2 (Qi et al. 2024): same
-                                             B/W split, but the per-stage warmup cap
-                                             is raised by ``extra_warmup`` (``w``)
-                                             forwards beyond the 1F1B bound — the
-                                             warmup bubble is filled with real F
-                                             work at the price of exactly ``w``
-                                             extra live activation slots per stage
-                                             (clamped at G).  Composes with k.
-``interleaved``       >= 1       v > 1       Megatron-style virtual stages: device s
-                                             hosts chunks {c*S+s}; fill/drain bubble
-                                             shrinks ~1/v, at v x more full-size
-                                             cross-stage messages (v x total wire
-                                             bytes) and v chunk contexts per
-                                             device.  Composes with k.
-``interleaved_zb``    >= 1       v > 1       joint interleaved x zero-bubble: the
-                                             virtual-stage chunk walk of
-                                             ``interleaved`` with the critical
-                                             backward narrowed to ``BWD_INPUT`` and
-                                             ``BWD_WEIGHT`` greedily filling the
-                                             remaining bubbles; peak live
-                                             activations never exceed the plain
-                                             interleaved plan's.  Composes with k.
-====================  =========  ==========  =======================================
+====================  =========  ==========  ========  =========================
+kind                  k          v (chunks)  w[s]      trade-off
+====================  =========  ==========  ========  =========================
+``kfkb`` (k=1)        1          1           0         1F1B: min activation
+                                                       memory (min(S-s,M) live
+                                                       per stage), bubble
+                                                       2(S-1) ticks.
+``kfkb``              1 < k < M  1           0         paper's grouping: k-deep
+                                                       transfer overlap under
+                                                       preemption, k x 1F1B
+                                                       activation memory.
+``kfkb`` (k=M)        M          1           0         GPipe: max overlap
+                                                       depth, M live
+                                                       activations everywhere.
+``zb_h1``             >= 1       1           0         zero-bubble H1 (Qi et
+                                                       al. 2024): BWD is split
+                                                       into BWD_INPUT (critical
+                                                       path) + BWD_WEIGHT
+                                                       (bubble filler); same
+                                                       peak activation memory
+                                                       as the kFkB plan of
+                                                       equal k, strictly
+                                                       shorter pipeline on
+                                                       uniform stages.
+                                                       Composes with k.
+``zb_h2``             >= 1       1           some > 0  zero-bubble H2: same B/W
+                                                       split, per-stage warmup
+                                                       cap raised to
+                                                       min(min(S-s,G)+w[s], G)
+                                                       — the warmup bubble is
+                                                       filled with real F work
+                                                       at exactly w[s] extra
+                                                       live slots at stage s.
+                                                       A memory-skewed limit
+                                                       curve admits different
+                                                       depths per stage, which
+                                                       is where the vector
+                                                       beats the best scalar.
+                                                       Composes with k.
+``interleaved``       >= 1       v > 1       0         Megatron-style virtual
+                                                       stages: device s hosts
+                                                       chunks {c*S+s};
+                                                       fill/drain bubble
+                                                       shrinks ~1/v, at v x
+                                                       more full-size
+                                                       cross-stage messages and
+                                                       v chunk contexts per
+                                                       device.  Composes
+                                                       with k.
+``interleaved_zb``    >= 1       v > 1       >= 0      joint interleaved x
+                                                       zero-bubble: the chunk
+                                                       walk of ``interleaved``
+                                                       with the backward
+                                                       narrowed to BWD_INPUT
+                                                       and BWD_WEIGHT greedily
+                                                       filling bubbles; peak
+                                                       live activations never
+                                                       exceed the plain
+                                                       interleaved plan's plus
+                                                       w[s] (w > 0 is the
+                                                       "interleaved H2" — one
+                                                       more forward ahead per
+                                                       unit while the critical
+                                                       walk blocks).  Composes
+                                                       with k.
+====================  =========  ==========  ========  =========================
 
 kFkB construction follows the paper's §5.4: "generate k copies of the 1F1B
 plan [and] cross-merge [them]" — build the base order over ``G = M/k``
@@ -70,11 +100,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
 __all__ = [
+    "normalize_warmup",
     "Op",
     "Task",
     "SchedulePlan",
@@ -83,6 +114,7 @@ __all__ = [
     "PLAN_KINDS",
     "ZB_KINDS",
     "INTERLEAVED_KINDS",
+    "WARMUP_KINDS",
     "one_f_one_b_order",
     "gpipe_order",
     "kfkb_order",
@@ -121,6 +153,29 @@ ZB_KINDS = ("zb_h1", "zb_h2", "interleaved_zb")
 #: kinds whose devices host ``num_virtual`` chunks in looped placement
 INTERLEAVED_KINDS = ("interleaved", "interleaved_zb")
 
+#: kinds whose per-stage warmup cap accepts ``extra_warmup`` (the H2 axis)
+WARMUP_KINDS = ("zb_h2", "interleaved_zb")
+
+
+def normalize_warmup(extra_warmup: int | Sequence[int], num_stages: int) -> tuple[int, ...]:
+    """Normalize ``extra_warmup`` to the per-stage vector ``w[s]``.
+
+    A scalar broadcasts to every stage (the uniform "scalar-w" H2 of Qi et
+    al.); a sequence must have exactly ``num_stages`` entries, all >= 0.
+    """
+    if isinstance(extra_warmup, (int, np.integer)):
+        w = (int(extra_warmup),) * num_stages
+    else:
+        w = tuple(int(x) for x in extra_warmup)
+        if len(w) != num_stages:
+            raise ValueError(
+                f"extra_warmup vector needs one entry per stage "
+                f"(got {len(w)}, num_stages={num_stages})"
+            )
+    if any(x < 0 for x in w):
+        raise ValueError(f"extra_warmup must be >= 0, got {w}")
+    return w
+
 
 @dataclasses.dataclass(frozen=True)
 class Task:
@@ -153,7 +208,9 @@ class SchedulePlan:
     name: str = ""
     kind: str = "kfkb"
     num_virtual: int = 1  # chunks per device (1 = non-interleaved)
-    extra_warmup: int = 0  # zb_h2: forwards beyond the 1F1B cap per stage
+    # warmup kinds: forwards beyond the 1F1B cap, per stage.  Normalized in
+    # __post_init__ to the per-stage vector w[s] (a scalar broadcasts).
+    extra_warmup: int | tuple[int, ...] = 0
     # lazily-populated lowering cache: plans are static once built, so the
     # TabularPlan is computed at most once (the tuner re-evaluates candidates
     # every interval and must not re-lower them)
@@ -162,17 +219,31 @@ class SchedulePlan:
     )
 
     def __post_init__(self) -> None:
+        self.extra_warmup = normalize_warmup(self.extra_warmup, self.num_stages)
         if not self.name:
             base = f"{self.k}F{self.k}B(b={self.micro_batch_size})"
+            wtag = self._warmup_tag()
             if self.kind == "zb_h1":
                 base = f"ZB-H1[{base}]"
             elif self.kind == "zb_h2":
-                base = f"ZB-H2+{self.extra_warmup}[{base}]"
+                base = f"ZB-H2+{wtag}[{base}]"
             elif self.kind == "interleaved":
                 base = f"I{self.num_virtual}[{base}]"
             elif self.kind == "interleaved_zb":
-                base = f"I{self.num_virtual}ZB[{base}]"
+                tag = f"+{wtag}" if self.max_extra_warmup else ""
+                base = f"I{self.num_virtual}ZB{tag}[{base}]"
             self.name = base
+
+    def _warmup_tag(self) -> str:
+        w = self.extra_warmup
+        if len(set(w)) == 1:  # uniform (scalar-w) vectors keep the legacy name
+            return str(w[0])
+        return "w(" + ",".join(str(x) for x in w) + ")"
+
+    @property
+    def max_extra_warmup(self) -> int:
+        """Deepest per-stage warmup extension (0 for non-warmup kinds)."""
+        return max(self.extra_warmup)
 
     @property
     def num_groups(self) -> int:
@@ -303,11 +374,16 @@ def kfkb_order(
 
 
 def zb_orders(
-    num_stages: int, num_microbatches: int, k: int = 1, extra_warmup: int = 0
+    num_stages: int,
+    num_microbatches: int,
+    k: int = 1,
+    extra_warmup: int | Sequence[int] = 0,
 ) -> list[list[tuple[Op, int]]]:
     """Zero-bubble orders for ALL stages (they are built jointly): the
     handcrafted schedules of Qi et al. 2024, composed with kFkB grouping.
-    ``extra_warmup == 0`` is ZB-H1; ``extra_warmup == w > 0`` is ZB-H2.
+    ``extra_warmup == 0`` is ZB-H1; a positive scalar is the uniform ZB-H2;
+    a per-stage vector ``w[s]`` is the heterogeneous H2 — each stage gets
+    its own warmup extension, sized to ITS memory headroom.
 
     Backward is split into ``BWD_INPUT`` (``B``: input gradient, consumed by
     the upstream stage — critical path) and ``BWD_WEIGHT`` (``W``: weight
@@ -315,31 +391,30 @@ def zb_orders(
     greedy lock-step walk with priority ``B > F > W`` where
 
     * ``F`` issuance is capped so that live activations (allocated at F,
-      freed at the matching W) never exceed ``min(min(S - s, G) + w, G)``:
+      freed at the matching W) never exceed ``min(min(S - s, G) + w[s], G)``:
       at ``w == 0`` this is 1F1B's bound — the "H1" memory guarantee (same
       peak as 1F1B) — and every extra warmup forward of H2 buys one more
-      live slot to fill the warmup bubble with real F work (the same
-      memory-for-stall trade Ada-Grouper makes with ``k``), and
+      live slot at that stage to fill the warmup bubble with real F work
+      (the same memory-for-stall trade Ada-Grouper makes with ``k``), and
     * ``W`` runs exactly when the device would otherwise bubble, so weight
       gradient work fills the fill/drain and preemption stalls.
 
     Grouping expands every group-level F/B/W into its ``k`` FIFO members
     (the kFkB-ZB hybrid).  Returns one order per stage.
     """
-    S, M, w = num_stages, num_microbatches, extra_warmup
-    if w < 0:
-        raise ValueError(f"extra_warmup must be >= 0, got {w}")
+    S, M = num_stages, num_microbatches
+    w = normalize_warmup(extra_warmup, S)
     G = (M + k - 1) // k
     next_f = [0] * S
     next_b = [0] * S
     next_w = [0] * S
     done: dict[tuple[int, int, int], int] = {}  # (op, stage, g) -> tick
     orders: list[list[tuple[Op, int]]] = [[] for _ in range(S)]
-    cap = [min(min(S - s, G) + w, G) for s in range(S)]
+    cap = [min(min(S - s, G) + w[s], G) for s in range(S)]
     total = 3 * G * S
     executed = 0
     t = 0
-    max_ticks = 6 * G * S + 12 * S + 4 * w * S + 16
+    max_ticks = 6 * G * S + 12 * S + 4 * max(w) * S + 16
     while executed < total:
         if t > max_ticks:  # pragma: no cover - defensive
             raise RuntimeError("zb_orders failed to converge")
@@ -481,7 +556,11 @@ def interleaved_kfkb_order(
 
 
 def interleaved_zb_orders(
-    num_stages: int, num_microbatches: int, k: int, num_virtual: int
+    num_stages: int,
+    num_microbatches: int,
+    k: int,
+    num_virtual: int,
+    extra_warmup: int | Sequence[int] = 0,
 ) -> list[list[tuple[Op, int, int]]]:
     """Joint interleaved x zero-bubble orders for ALL devices: ``(op, mb, chunk)``.
 
@@ -492,24 +571,30 @@ def interleaved_zb_orders(
     — the next critical task is blocked on a cross-device input that has not
     arrived, or its forward is blocked by the memory cap.  The cap per
     device is the PLAIN interleaved plan's peak live count (an activation is
-    allocated at F and freed at its W), so the composition inherits the H1
-    memory guarantee: peak live activations never exceed the equal-(k, v)
-    interleaved plan's.
+    allocated at F and freed at its W) plus the per-stage warmup extension
+    ``w[s]`` — the "interleaved H2" composition: at ``w == 0`` the plan
+    inherits the H1 memory guarantee (peak live never exceeds the equal-
+    (k, v) interleaved plan's), and each extra unit lets device ``s`` defer
+    one more ``BWD_WEIGHT`` in favour of a forward while its critical chunk
+    walk is blocked (the per-device F/B sequence is untouched, so link FIFO
+    is preserved by construction).
 
     Returns one order per device.  Requires ``k | M`` and ``S | (M/k)``.
     """
     S, M, v = num_stages, num_microbatches, num_virtual
+    w = normalize_warmup(extra_warmup, S)
     G = _interleaved_groups(S, M, k, v)
     V = S * v
     base = [_interleaved_virtual_order(S, G, v, s) for s in range(S)]
-    # memory cap = the plain interleaved plan's peak live groups per device
+    # memory cap = the plain interleaved plan's peak live groups per device,
+    # raised by w[s] (clamped at the device's total group count)
     cap = []
-    for seq in base:
+    for s, seq in enumerate(base):
         live = peak = 0
         for op, _, _ in seq:
             live += 1 if op == Op.FWD else -1
             peak = max(peak, live)
-        cap.append(peak)
+        cap.append(min(peak + w[s], G * v))
     ptr = [0] * S
     live = [0] * S
     wq: list[list[tuple[int, int]]] = [[] for _ in range(S)]  # FIFO of (g, c)
@@ -574,15 +659,17 @@ def make_plan(
     name: str = "",
     kind: str = "kfkb",
     num_virtual: int = 1,
-    extra_warmup: int = 0,
+    extra_warmup: int | Sequence[int] = 0,
 ) -> SchedulePlan:
     """Build a validated :class:`SchedulePlan` of any family member.
 
     ``kind`` is one of ``"kfkb"`` (k=1 → 1F1B, k=M → GPipe), ``"zb_h1"`` /
-    ``"zb_h2"`` (zero-bubble, B/W split — H2 takes ``extra_warmup >= 1``
-    forwards beyond the 1F1B cap), ``"interleaved"`` / ``"interleaved_zb"``
-    (``num_virtual`` chunks per device).  ``"1f1b"`` and ``"gpipe"`` are
-    accepted as aliases that force ``k``.
+    ``"zb_h2"`` (zero-bubble, B/W split — H2 takes ``extra_warmup``
+    forwards beyond the 1F1B cap, either a scalar or the per-stage vector
+    ``w[s]``, with at least one stage >= 1), ``"interleaved"`` /
+    ``"interleaved_zb"`` (``num_virtual`` chunks per device; the latter
+    also composes with ``extra_warmup`` — the "interleaved H2").  ``"1f1b"``
+    and ``"gpipe"`` are accepted as aliases that force ``k``.
     """
     if kind == "1f1b":
         kind, k = "kfkb", 1
@@ -592,21 +679,24 @@ def make_plan(
         raise ValueError(f"unknown plan kind {kind!r}; expected one of {PLAN_KINDS}")
     if kind not in INTERLEAVED_KINDS and num_virtual != 1:
         raise ValueError(f"num_virtual > 1 requires an interleaved kind, got {kind!r}")
+    w_vec = normalize_warmup(extra_warmup, num_stages)
     if kind == "zb_h2":
-        if extra_warmup < 1:
+        if max(w_vec) < 1:
             raise ValueError(
-                f"kind='zb_h2' needs extra_warmup >= 1 (got {extra_warmup}); "
+                f"kind='zb_h2' needs extra_warmup >= 1 at some stage (got {extra_warmup}); "
                 "extra_warmup == 0 is exactly zb_h1"
             )
-    elif extra_warmup != 0:
-        raise ValueError(f"extra_warmup > 0 requires kind='zb_h2', got {kind!r}")
+    elif kind != "interleaved_zb" and max(w_vec) != 0:
+        raise ValueError(
+            f"extra_warmup > 0 requires kind='zb_h2' or 'interleaved_zb', got {kind!r}"
+        )
     orders: list[list[Task]] = []
     if kind == "kfkb":
         for s in range(num_stages):
             raw = kfkb_order(num_stages, num_microbatches, k, s)
             orders.append([Task(op, s, mb) for op, mb in raw])
     elif kind in ("zb_h1", "zb_h2"):
-        raws = zb_orders(num_stages, num_microbatches, k, extra_warmup=extra_warmup)
+        raws = zb_orders(num_stages, num_microbatches, k, extra_warmup=w_vec)
         for s, raw in enumerate(raws):
             orders.append([Task(op, s, mb) for op, mb in raw])
     elif kind == "interleaved":
@@ -614,7 +704,9 @@ def make_plan(
             raw3 = interleaved_kfkb_order(num_stages, num_microbatches, k, num_virtual, s)
             orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
     else:  # interleaved_zb
-        raws3 = interleaved_zb_orders(num_stages, num_microbatches, k, num_virtual)
+        raws3 = interleaved_zb_orders(
+            num_stages, num_microbatches, k, num_virtual, extra_warmup=w_vec
+        )
         for s, raw3 in enumerate(raws3):
             orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
     plan = SchedulePlan(
@@ -626,7 +718,7 @@ def make_plan(
         name,
         kind=kind,
         num_virtual=num_virtual,
-        extra_warmup=extra_warmup,
+        extra_warmup=w_vec,
     )
     plan.validate()
     assign_slots(plan)

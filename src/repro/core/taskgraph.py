@@ -40,7 +40,11 @@ class StageCosts:
     * ``optimizer_time[s]`` — per-stage epilogue (grad-accum finalize + apply).
     * ``bwd_input_time[s]`` / ``bwd_weight_time[s]`` — the zero-bubble split
       of ``bwd_time``; defaults to an even split (the ZB paper's F = B = W
-      working assumption when ``bwd = 2 * fwd``).
+      working assumption when ``bwd = 2 * fwd``).  Real stages skew — the
+      last stage's B carries the vocab-projection backward, attention-heavy
+      stages skew toward W — so production profiles should come from
+      :func:`repro.core.calibrate.calibrate_stage_costs`, which fills the
+      split from the compiled stage bodies instead of this default.
     """
 
     fwd_time: list[float]

@@ -15,15 +15,21 @@ interleaved, interleaved-ZB — see
 switches the schedule kind too: under heavy preemption the grouped and
 deep-warmup (ZB-H2) plans win, while on a quiet network the zero-bubble
 plans' shorter fill/drain takes over.  ZB-H2 appears in the set only when
-the memory limit admits ``extra_warmup >= 1`` (the enumeration refuses it
-otherwise), so picking it is always memory-safe.  Interleaved candidates
-additionally probe the virtual-stage wrap link (``S-1 -> 0``) their ring
-actually uses.
+the memory-limit curve admits ``w[s] >= 1`` somewhere (the enumeration
+refuses it otherwise), so picking it is always memory-safe — and its
+warmup vector is per-stage, so the record carries the whole ``w[s]``.
+Interleaved candidates additionally probe the virtual-stage wrap link
+(``S-1 -> 0``) their ring actually uses.
 
 Candidates are static, so each one's lowered
 :class:`~repro.core.schedule.TabularPlan` is computed at most once (cached
 on the plan): re-evaluating every interval and dispatching the winner to
-the engines never re-lowers.
+the engines never re-lowers.  With ``refine_weight_placement=True`` a
+chosen zero-bubble winner is additionally post-processed by
+:func:`repro.core.placement.optimize_weight_placement` under the
+just-measured bandwidths (heterogeneous costs make the unit-tick FIFO
+``W`` filler suboptimal); the refined table is what gets dispatched, and
+it is re-derived only when the choice or the measured network changes.
 """
 
 from __future__ import annotations
@@ -33,7 +39,9 @@ from typing import Callable
 
 from repro.core.candidates import Candidate
 from repro.core.costmodel import CostModel
+from repro.core.placement import optimize_weight_placement
 from repro.core.profiler import NetworkProfiler
+from repro.core.schedule import ZB_KINDS
 from repro.core.taskgraph import StageCosts
 
 __all__ = ["TuningRecord", "AutoTuner"]
@@ -48,7 +56,9 @@ class TuningRecord:
     switched: bool
     chosen_kind: str = "kfkb"
     chosen_num_virtual: int = 1
-    chosen_extra_warmup: int = 0  # > 0 only for zb_h2 winners
+    # the winner's per-stage warmup vector w[s]; all-zero unless a warmup
+    # kind (zb_h2 / warmed interleaved_zb) won
+    chosen_extra_warmup: tuple[int, ...] = ()
 
 
 class AutoTuner:
@@ -59,6 +69,7 @@ class AutoTuner:
         network_profiler: NetworkProfiler,
         cost_model: CostModel | None = None,
         probes: int = 3,
+        refine_weight_placement: bool = False,
     ) -> None:
         if not candidates:
             raise ValueError("no candidates to tune over")
@@ -67,8 +78,11 @@ class AutoTuner:
         self.net_profiler = network_profiler
         self.cost_model = cost_model or CostModel()
         self.probes = probes
+        self.refine_weight_placement = refine_weight_placement
         self.current: Candidate = candidates[0]
         self.current_table = self.current.table  # dispatched to the engines
+        self._refine_key: tuple | None = None  # (name, bw signature) of last refine
+        self._last_bw: dict[str, dict[tuple[int, int], float]] = {}
         self.history: list[TuningRecord] = []
 
     # -- one tuning round -----------------------------------------------------
@@ -94,11 +108,20 @@ class AutoTuner:
         return bw
 
     def evaluate(self, now: float) -> dict[str, float]:
-        """Estimated pipeline length per candidate at simulated time ``now``."""
+        """Estimated pipeline length per candidate at simulated time ``now``.
+
+        The per-candidate bandwidth measurements are kept on
+        ``self._last_bw`` so the refinement path can reuse the winner's
+        instead of re-probing (a second probe round would both double the
+        modeled suspension cost and double-fill the winner's moving-average
+        window relative to every other candidate's).
+        """
         out: dict[str, float] = {}
+        self._last_bw: dict[str, dict[tuple[int, int], float]] = {}
         for cand in self.candidates:
             costs = self.stage_costs_for(cand)
             bw = self._profile_links(cand, now)
+            self._last_bw[cand.name] = bw
             out[cand.name] = self.cost_model.estimate(cand.plan, costs, bw)
         return out
 
@@ -111,6 +134,15 @@ class AutoTuner:
         # dispatch artifact for the engines: lowered once per candidate ever
         # (Candidate.table caches on the static plan)
         self.current_table = best.table
+        if self.refine_weight_placement and best.plan.kind in ZB_KINDS:
+            costs = self.stage_costs_for(best)
+            bw = self._last_bw[best.name]  # measured during evaluate()
+            key = (best.name, tuple(sorted(bw.items())))
+            if key != self._refine_key:
+                refined = optimize_weight_placement(best.plan, costs, bw)
+                self._refine_key = key
+                self._refined_table = refined.lower()
+            self.current_table = self._refined_table
         rec = TuningRecord(
             time=now,
             estimates=estimates,

@@ -21,8 +21,8 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
 
 __all__ = [
     "replicated",

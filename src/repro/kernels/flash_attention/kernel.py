@@ -18,9 +18,9 @@ import functools
 import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 __all__ = ["flash_attention_pallas"]
 

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.ssd_scan.kernel import ssd_chunked_pallas
 from repro.kernels.ssd_scan import ref as _ref
+from repro.kernels.ssd_scan.kernel import ssd_chunked_pallas
 
 __all__ = ["ssd_chunked"]
 

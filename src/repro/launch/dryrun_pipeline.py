@@ -17,9 +17,17 @@ to the engine — the per-tick ppermute schedule (count == 2 ticks·permutes,
 wire bytes == the activation/gradient stream the paper's Send/Recv nodes
 carry).
 
+``--calibrate`` additionally runs :mod:`repro.core.calibrate` against the
+config's real stage bodies: per-stage fwd / BWD_INPUT / BWD_WEIGHT roofline
+times and activation bytes (the heterogeneous ``StageCosts`` the scheduler
+stack consumes instead of ``StageCosts.uniform``), the matching per-stage
+``MemoryModel``, and the per-stage warmup vector ``w[s]`` the candidate
+enumeration admits under a per-stage memory-limit curve derived from the
+calibrated profile.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun_pipeline --config qwen2.5-14b \
-      --k 2 --microbatches 32
+      --k 2 --microbatches 32 [--calibrate]
 """
 
 import argparse
@@ -41,13 +49,64 @@ ARTIFACT_DIR = os.path.join(
 
 
 def _config(name: str):
-    if name == "GPT-2.7B":
-        from repro.configs.gpt import GPT_CONFIGS
+    from repro.configs.gpt import GPT_CONFIGS
 
-        return GPT_CONFIGS["GPT-2.7B"]
+    if name in GPT_CONFIGS:  # the paper's Table-1 ladder (GPT-Medium .. 2.7B)
+        return GPT_CONFIGS[name]
     from repro.configs import get_arch
 
     return get_arch(name).model
+
+
+def calibrate(config: str, S: int, b_mb: int, seq: int, out_dir: str) -> dict:
+    """Calibrated per-stage profile of the config's REAL stage bodies.
+
+    Reports the heterogeneous StageCosts (per-stage fwd/B/W roofline times,
+    activation wire bytes), the per-stage memory footprint, and the warmup
+    vector ``w[s]`` a per-stage limit curve with 25% activation headroom
+    admits — the end-to-end input of the vector-w scheduling stack.
+    """
+    from repro.core.calibrate import calibrate_stage_costs
+    from repro.core.candidates import largest_admissible_warmup
+
+    cfg = _config(config)
+    staged = StagedModel.build(cfg, S)
+    cal = calibrate_stage_costs(staged, micro_batch_size=b_mb, seq_len=seq)
+    costs, mm = cal.costs, cal.memory
+    print(f"{config}: calibrated {S} stages at b={b_mb}, seq={seq}")
+    print("stage |  fwd ms |  B ms |  W ms | wire MB")
+    for row in cal.summary_rows():
+        print("  ".join(f"{c:>7s}" for c in row))
+    # a per-stage limit curve: each stage's H1 peak plus 25% of its own
+    # activation working set — heterogeneity makes the admitted w[s] differ
+    M = max(4 * S, 8)
+    h1 = make_plan(S, M, 1, kind="zb_h1")
+    base = mm.peak_bytes_per_stage(h1)
+    limits = [
+        p + 0.25 * mm.slot_bytes(s, b_mb, True) * S for s, p in enumerate(base)
+    ]
+    w_vec = largest_admissible_warmup(S, M, 1, b_mb, 1, True, mm, limits, S - 1)
+    print(f"admitted warmup vector w[s] under the +25%-headroom curve: {w_vec}")
+    record = {
+        "config": config,
+        "stages": S,
+        "micro_batch_size": b_mb,
+        "seq": seq,
+        "fwd_time": costs.fwd_time,
+        "bwd_input_time": costs.bwd_input_time,
+        "bwd_weight_time": costs.bwd_weight_time,
+        "fwd_bytes": costs.fwd_bytes,
+        "param_bytes_per_stage": [sp.param_bytes for sp in mm.stages],
+        "peak_bytes_h1": base,
+        "limit_curve": limits,
+        "admitted_warmup_vector": list(w_vec),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{config}__S{S}_calibration.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    print(f"[ok] calibration written to {path}")
+    return record
 
 
 def run(config: str, S: int, M: int, k: int, batch: int, seq: int, out_dir: str):
@@ -118,7 +177,16 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    ap.add_argument(
+        "--calibrate", action="store_true",
+        help="profile the config's real stage bodies into heterogeneous "
+             "StageCosts + per-stage MemoryModel instead of the engine dry-run",
+    )
     args = ap.parse_args()
+    if args.calibrate:
+        calibrate(args.config, args.stages, args.batch // args.microbatches,
+                  args.seq, args.out)
+        return
     run(args.config, args.stages, args.microbatches, args.k, args.batch,
         args.seq, args.out)
 

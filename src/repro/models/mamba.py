@@ -86,7 +86,9 @@ def mamba_train(p, x, cfg: ModelConfig, use_kernel: bool = False):
     zxbcdt = x.astype(dt_f) @ p["in_proj"].astype(dt_f)
     z, xx, Bc, Cc, dtv = _split_proj(cfg, zxbcdt)
     conv_in = jnp.concatenate([xx, Bc, Cc], axis=-1)
-    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(dt_f), p["conv_b"].astype(dt_f)))
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"].astype(dt_f), p["conv_b"].astype(dt_f))
+    )
     xx, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
     dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,T,H]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]

@@ -77,7 +77,9 @@ def _sig(s: LayerSpec) -> tuple:
     return (s.kind, s.moe, s.window)
 
 
-def structure(cfg: ModelConfig, num_layers: int | None = None, prefix_len: int | None = None) -> Structure:
+def structure(
+    cfg: ModelConfig, num_layers: int | None = None, prefix_len: int | None = None
+) -> Structure:
     specs = layer_specs(cfg, num_layers)
     if prefix_len is None:
         prefix_len = getattr(cfg, "first_k_dense", 0) or 0
@@ -154,7 +156,9 @@ def apply_layer_train(
     return x + delta, aux
 
 
-def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, cross: bool = False):
+def init_layer_cache(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, cross: bool = False
+):
     if spec.kind == "attn":
         c = {"kv": attn.init_kv_cache(cfg, batch, max_len, window=spec.window)}
     else:

@@ -5,15 +5,15 @@ AdamW is the default; Adafactor (factored second moment) is selected for the
 512 × 16 GB production mesh.  See DESIGN.md §4.
 """
 
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.adafactor import AdafactorState, adafactor_init, adafactor_update
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.clipping import clip_by_global_norm, global_norm
+from repro.optim.optimizer import Optimizer, make_optimizer
 from repro.optim.schedules import (
     constant_schedule,
     cosine_schedule,
     linear_warmup_cosine,
 )
-from repro.optim.optimizer import Optimizer, make_optimizer
-from repro.optim.clipping import global_norm, clip_by_global_norm
 
 __all__ = [
     "AdamWState",

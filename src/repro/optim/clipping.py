@@ -19,4 +19,7 @@ def clip_by_global_norm(tree, max_norm: float):
     """Scale gradients so their global norm is at most ``max_norm``."""
     norm = global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+    clipped = jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree
+    )
+    return clipped, norm

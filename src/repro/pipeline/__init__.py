@@ -1,7 +1,7 @@
-from repro.pipeline.stage import StagedModel
 from repro.pipeline.engine import (
     make_pipeline_step,
     reference_pipeline_grads,
 )
+from repro.pipeline.stage import StagedModel
 
 __all__ = ["StagedModel", "make_pipeline_step", "reference_pipeline_grads"]

@@ -52,10 +52,10 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+import numpy as np
 
 from repro.core.schedule import Op, SchedulePlan
 from repro.pipeline.stage import StagedModel

@@ -1,0 +1,115 @@
+"""Coordinator / Network plumbing (repro.core.coordinator).
+
+Three behaviours the adaptive-tuning harness silently depends on:
+``tuning_overhead`` must be charged to the run's wall clock, the
+``_ShiftedTrace`` view must preserve the absolute phase of periodic
+preemption across iterations (a plan switch mid-regime sees the shifted
+world, not t=0), and ``RunSummary.throughput`` must survive the zero-time
+edge."""
+
+import pytest
+
+from repro.core import (
+    AutoTuner,
+    Candidate,
+    Coordinator,
+    NetworkProfiler,
+    PeriodicPreemptionTrace,
+    RunSummary,
+    StableTrace,
+    StageCosts,
+    make_plan,
+    simulate_plan,
+    uniform_network,
+)
+from repro.core import coordinator
+from repro.core.network import Network
+
+_ShiftedTrace = coordinator._ShiftedTrace
+_shifted_network = coordinator._shifted_network
+
+
+def _costs_for(S=4):
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    return lambda cand: costs
+
+
+def _cands(S=4, M=8):
+    return [Candidate(k, 1, M, make_plan(S, M, k), 0.0) for k in (1, 2)]
+
+
+def test_tuning_overhead_charged_to_total_time():
+    """Each tuner invocation suspends the pipeline for ``tuning_overhead``
+    seconds; total_time (and hence throughput) must include every one."""
+    S = 4
+    net = uniform_network(S, lambda: StableTrace(2.0))
+
+    def run_with(overhead):
+        tuner = AutoTuner(_cands(S), _costs_for(S), NetworkProfiler(net))
+        coord = Coordinator(
+            tuner, net, global_batch=8, tuning_interval=1e9, tuning_overhead=overhead
+        )
+        return coord.run(3)
+
+    free = run_with(0.0)
+    taxed = run_with(7.5)
+    # one tune happens (tune_first, interval never re-fires): exactly 7.5s
+    assert len(taxed.tuning) == len(free.tuning) == 1
+    assert taxed.total_time == pytest.approx(free.total_time + 7.5)
+    assert taxed.throughput < free.throughput
+
+
+def test_shifted_trace_preserves_periodic_phase():
+    """The _ShiftedTrace view at absolute time t0 must report exactly what
+    the base trace reports at t0 + t — bandwidth, segment boundary, and
+    integrated transfer finish times."""
+    base = PeriodicPreemptionTrace(high=10.0, low=1.0, period=2.0, duty=0.5)
+    for t0 in (0.0, 0.7, 1.0, 3.3):
+        shifted = _ShiftedTrace(base, t0)
+        for t in (0.0, 0.25, 0.5, 1.5, 2.0):
+            bw_s, until_s = shifted.bw_at(t)
+            bw_b, until_b = base.bw_at(t0 + t)
+            assert bw_s == bw_b
+            assert until_s == pytest.approx(until_b - t0)
+            assert shifted.finish_time(t, 6.0) == pytest.approx(
+                base.finish_time(t0 + t, 6.0) - t0
+            )
+        assert shifted.mean_bw(0.0, 2.0) == pytest.approx(base.mean_bw(t0, t0 + 2.0))
+
+
+def test_coordinator_iterations_see_the_shifted_world():
+    """Fig-10 correctness: iteration i starting mid-preemption must run
+    against the preempted window, not a fresh t=0 trace.  With a period-
+    aligned pipeline the simulated lengths at phase 0 and mid-phase differ,
+    and the coordinator's successive iterations reproduce exactly the
+    lengths of manually-shifted simulations."""
+    S, M = 2, 4
+    costs = StageCosts.uniform(S, 1.0, act_bytes=4.0)
+    trace = PeriodicPreemptionTrace(high=8.0, low=0.25, period=16.0, duty=0.5)
+    net = Network(default=StableTrace(1e15), links={(0, 1): trace, (1, 0): trace})
+    plan = make_plan(S, M, 1)
+
+    # the trace is genuinely phase-sensitive at this workload
+    l0 = simulate_plan(plan, costs, _shifted_network(net, 0.0)).pipeline_length
+    l_mid = simulate_plan(plan, costs, _shifted_network(net, 8.0)).pipeline_length
+    assert l0 != pytest.approx(l_mid)
+
+    cand = Candidate(1, 1, M, plan, 0.0)
+    tuner = AutoTuner([cand], lambda c: costs, NetworkProfiler(net))
+    coord = Coordinator(tuner, net, global_batch=4, tuning_interval=1e9)
+    summary = coord.run(3)
+    now = summary.iterations[0].start
+    for rec in summary.iterations:
+        assert rec.start == pytest.approx(now)
+        expected = simulate_plan(
+            plan, costs, _shifted_network(net, rec.start)
+        ).pipeline_length
+        assert rec.length == pytest.approx(expected)
+        now += rec.length
+
+
+def test_run_summary_throughput_zero_time_edge():
+    empty = RunSummary(iterations=[], tuning=[], total_time=0.0, total_samples=0)
+    assert empty.throughput == 0.0  # no division by zero
+    some = RunSummary(iterations=[], tuning=[], total_time=2.0, total_samples=8)
+    assert some.throughput == pytest.approx(4.0)

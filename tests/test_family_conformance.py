@@ -1,7 +1,8 @@
 """Differential conformance harness for the WHOLE schedule family.
 
 One oracle, every kind: for each (kind, k, num_virtual, extra_warmup, S, M)
-cell of the family matrix the same battery runs —
+cell of the family matrix — ``extra_warmup`` may be a scalar OR a per-stage
+vector ``w[s]`` — the same battery runs —
 
 * the plan validates and lowers to a dependency-valid :class:`TabularPlan`,
 * every directed link is FIFO-consistent (the i-th send is the i-th recv —
@@ -9,10 +10,15 @@ cell of the family matrix the same battery runs —
 * exact per-device liveness never exceeds the closed-form memory-model
   prediction (:func:`repro.core.predicted_peak_live`), with equality for
   the kinds whose builders carry a hard guarantee: kFkB and ZB-H1 hit the
-  1F1B bound, ZB-H2 hits 1F1B + w (clamped at the group count), plain
-  interleaved hits Megatron's warmup depth + 1,
+  1F1B bound, uniform-w ZB-H2 hits 1F1B + w (clamped at the group count;
+  non-uniform vectors are upstream-limited, so the prediction is a bound),
+  plain interleaved hits Megatron's warmup depth + 1,
 * total and per-op task counts conserve (F/B[/W] each exactly M per chunk),
-* slot assignment is liveness-exact (slots form a gap-free prefix).
+* slot assignment is liveness-exact (slots form a gap-free prefix),
+* the discrete-event simulator executes the cell to completion under
+  NON-UNIFORM per-stage costs (skewed F, B/W split and optimizer epilogue)
+  with exact per-stage busy-time conservation — heterogeneous pricing must
+  not depend on the schedule kind.
 
 This file replaces the per-kind ad-hoc structure checks that used to live
 in ``test_schedule_family.py`` (kind-specific *semantic* claims — memory
@@ -25,14 +31,18 @@ import pytest
 from _hyp import given, settings, st  # hypothesis optional: property tests skip cleanly
 
 from repro.core import predicted_peak_live
+from repro.core.network import StableTrace, uniform_network
 from repro.core.schedule import (
     INTERLEAVED_KINDS,
     PLAN_KINDS,
     ZB_KINDS,
     Op,
     make_plan,
+    normalize_warmup,
     peak_live_activations,
 )
+from repro.core.simulator import simulate_plan
+from repro.core.taskgraph import StageCosts
 
 # ---------------------------------------------------------------------------
 # The family grid: every kind x k x num_virtual x (S, M) cell that satisfies
@@ -44,6 +54,12 @@ _SHAPES = [(2, 4), (2, 8), (4, 8), (4, 16), (3, 12)]
 _KS = (1, 2, 4)
 _VS = (2, 3)
 _WS = (1, 2)
+#: heterogeneous warmup vectors per stage count — the vector-w cells
+_W_VECS = {
+    2: ((0, 1), (2, 1)),
+    3: ((1, 0, 2), (0, 2, 1)),
+    4: ((3, 2, 1, 0), (0, 1, 0, 2)),
+}
 
 #: builders whose peak-live contract is an equality, not just a bound
 _EXACT_PEAK_KINDS = ("kfkb", "zb_h1", "zb_h2", "interleaved")
@@ -62,11 +78,16 @@ def _family_cells():
                         continue
                     for v in _VS:
                         cells.append((kind, k, v, 0, S, M))
+                        if kind == "interleaved_zb":  # the interleaved-H2 cells
+                            cells.append((kind, k, v, 1, S, M))
+                            cells.append((kind, k, v, _W_VECS[S][0], S, M))
                 elif kind == "zb_h2":
                     if G < 2:
                         continue  # no warmup headroom: H2 degenerates to H1
                     for w in _WS:
                         cells.append((kind, k, 1, w, S, M))
+                    for w_vec in _W_VECS[S]:  # the vector-w cells
+                        cells.append((kind, k, 1, w_vec, S, M))
                 else:
                     cells.append((kind, k, 1, 0, S, M))
     return cells
@@ -77,7 +98,25 @@ CELLS = _family_cells()
 
 def _ids(cell):
     kind, k, v, w, S, M = cell
-    return f"{kind}-k{k}-v{v}-w{w}-S{S}-M{M}"
+    wtag = "x".join(map(str, w)) if isinstance(w, tuple) else str(w)
+    return f"{kind}-k{k}-v{v}-w{wtag}-S{S}-M{M}"
+
+
+def _skewed_costs(S):
+    """Deterministic non-uniform per-stage costs: F, an uneven B/W split and
+    a per-stage optimizer epilogue all vary across stages."""
+    fwd = [1.0 + 0.25 * s for s in range(S)]
+    bwd_i = [0.6 + 0.2 * ((s + 1) % S) for s in range(S)]
+    bwd_w = [1.4 + 0.3 * ((S - s) % S) for s in range(S)]
+    return StageCosts(
+        fwd_time=fwd,
+        bwd_time=[bi + bw for bi, bw in zip(bwd_i, bwd_w)],
+        fwd_bytes=[1.0 + 0.5 * s for s in range(S)],
+        bwd_bytes=[2.0 - 0.1 * s for s in range(S)],
+        optimizer_time=[0.1 * (s + 1) for s in range(S)],
+        bwd_input_time=bwd_i,
+        bwd_weight_time=bwd_w,
+    )
 
 
 def _conformance(kind, k, v, w, S, M):
@@ -86,6 +125,8 @@ def _conformance(kind, k, v, w, S, M):
     plan.validate()
     table = plan.lower()
     table.validate()  # dependency validity + per-link FIFO + stream order
+    w_vec = normalize_warmup(w, S)
+    uniform_w = len(set(w_vec)) == 1
 
     # -- FIFO send/recv order on every TabularPlan edge ---------------------
     links = {}
@@ -121,20 +162,52 @@ def _conformance(kind, k, v, w, S, M):
     peaks = peak_live_activations(plan)
     predicted = predicted_peak_live(plan)
     assert all(1 <= p <= pr for p, pr in zip(peaks, predicted)), (peaks, predicted)
-    if kind in _EXACT_PEAK_KINDS:
+    if kind in _EXACT_PEAK_KINDS and uniform_w:
         assert peaks == predicted, (kind, peaks, predicted)
     if kind == "zb_h2":
         h1 = predicted_peak_live(make_plan(S, M, k, kind="zb_h1"))
         G = M // k
-        assert peaks == [min(p + w * k, G * k) for p in h1]  # 1F1B + w, clamped
+        bound = [min(p + w_vec[s] * k, G * k) for s, p in enumerate(h1)]
+        if uniform_w:
+            assert peaks == bound  # 1F1B + w, clamped
+        else:
+            # a stage can only go as deep as upstream feeds it: bound, and
+            # never below H1 (the vector can only ADD warmup depth)
+            assert all(a <= b for a, b in zip(peaks, bound)), (peaks, bound)
+            assert all(a >= p for a, p in zip(peaks, h1)), (peaks, h1)
     if kind == "interleaved_zb":
         plain = peak_live_activations(make_plan(S, M, k, kind="interleaved", num_virtual=v))
-        assert all(p <= q for p, q in zip(peaks, plain))  # never above plain interleaved
+        bound = [p + w_vec[s] * k for s, p in enumerate(plain)]
+        assert all(p <= q for p, q in zip(peaks, bound))  # plain + w[s], at most
 
     # -- slots are a liveness-exact, gap-free prefix ------------------------
     for s, order in enumerate(plan.orders):
         slots_used = {t.slot for t in order if t.op == Op.FWD}
         assert slots_used == set(range(peaks[s]))
+
+    # -- heterogeneous-cost execution: the simulator completes the cell with
+    # exact per-stage busy-time conservation under skewed costs ------------
+    costs = _skewed_costs(S)
+    res = simulate_plan(plan, costs, uniform_network(S, lambda: StableTrace(4.0)))
+    assert len(res.task_finish) == sum(len(o) for o in plan.orders)
+    for s in range(S):
+        if zb:
+            expected = M * v * (
+                costs.fwd_time[s] + costs.bwd_input_time[s] + costs.bwd_weight_time[s]
+            ) / v
+        else:
+            expected = M * v * (costs.fwd_time[s] + costs.bwd_time[s]) / v
+        assert res.busy_time[s] == pytest.approx(expected, rel=1e-9)
+    last_finish = max(res.task_finish.values())
+    assert res.pipeline_length == pytest.approx(
+        max(
+            max(res.task_finish[t.key()] for t in plan.orders[s])
+            + costs.optimizer_time[s]
+            for s in range(S)
+        ),
+        rel=1e-12,
+    )
+    assert res.pipeline_length >= last_finish
 
 
 @pytest.mark.parametrize("cell", CELLS, ids=_ids)
@@ -147,25 +220,38 @@ def test_grid_covers_every_plan_kind():
     assert {c[0] for c in CELLS} == set(PLAN_KINDS)
 
 
+def test_grid_covers_vector_warmup():
+    """...and the heterogeneous (non-uniform w[s]) cells can't drop out
+    either — for both warmup-capable kinds."""
+    vec_kinds = {
+        c[0] for c in CELLS if isinstance(c[3], tuple) and len(set(c[3])) > 1
+    }
+    assert vec_kinds == {"zb_h2", "interleaved_zb"}
+
+
 @given(
     st.sampled_from(PLAN_KINDS),
     st.integers(0, 2).map(lambda e: 2**e),  # k
     st.integers(2, 3),  # v (interleaved kinds only)
-    st.integers(1, 3),  # w (zb_h2 only)
+    st.lists(st.integers(0, 3), min_size=5, max_size=5),  # w[s] (warmup kinds)
     st.integers(2, 5),  # S
     st.integers(1, 4),  # M = S * k * mult for divisibility
 )
 @settings(max_examples=40, deadline=None)
 def test_family_conformance_hypothesis(kind, k, v, w, S, mult):
-    """Random family cells through the same oracle (skips without hypothesis)."""
+    """Random family cells — including random per-stage warmup vectors —
+    through the same oracle (skips without hypothesis)."""
     M = S * k * mult  # guarantees k | M and S | (M / k)
     if kind == "zb_h2" and M // k < 2:
         M *= 2
+    w_vec = tuple(w[:S])
+    if kind == "zb_h2" and max(w_vec) == 0:
+        w_vec = w_vec[:-1] + (1,)
     _conformance(
         kind,
         k,
         v if kind in INTERLEAVED_KINDS else 1,
-        w if kind == "zb_h2" else 0,
+        w_vec if kind in ("zb_h2", "interleaved_zb") else 0,
         S,
         M,
     )

@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.launch.hlo_analysis import (
+    _parse_computations,
     analyze_hlo,
     roofline_terms,
-    _parse_computations,
 )
 
 

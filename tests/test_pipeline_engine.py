@@ -163,19 +163,28 @@ FAMILY_PARITY_CASES = [
     ("zb_h1", 2, 1, 0),
     ("zb_h2", 1, 1, 1),
     ("zb_h2", 2, 1, 2),
+    ("zb_h2", 1, 1, (2, 1)),  # heterogeneous per-stage warmup vector w[s]
     ("interleaved", 2, 2, 0),
     ("interleaved_zb", 1, 2, 0),
     ("interleaved_zb", 2, 2, 0),
+    ("interleaved_zb", 1, 2, (1, 2)),  # the "interleaved H2" composition
 ]
 
 
 def test_every_plan_kind_has_an_executor_proof():
     """Gate (runs in tier 1): the gradient-parity matrix below must cover
     every member of PLAN_KINDS — adding a schedule kind without an engine
-    proof fails here before it can ship."""
-    from repro.core.schedule import PLAN_KINDS
+    proof fails here before it can ship.  Every warmup-capable kind must
+    additionally prove a NON-UNIFORM w[s] cell (the vector-w execution
+    path cannot regress silently either)."""
+    from repro.core.schedule import PLAN_KINDS, WARMUP_KINDS
 
     assert {kind for kind, *_ in FAMILY_PARITY_CASES} == set(PLAN_KINDS)
+    vector_proofs = {
+        kind for kind, _, _, w in FAMILY_PARITY_CASES
+        if isinstance(w, tuple) and len(set(w)) > 1
+    }
+    assert vector_proofs == set(WARMUP_KINDS)
 
 
 @pytest.mark.slow
@@ -196,6 +205,36 @@ def test_reference_engine_family_matches_oracle(kind, k, v, w):
     oloss, ograds = jax.value_and_grad(oracle)(params)
     plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
     rloss, rgrads = reference_pipeline_grads(staged, params, tokens, labels, plan)
+    assert float(rloss) == pytest.approx(float(oloss), rel=1e-5)
+    for a, g in zip(jax.tree_util.tree_leaves(ograds), jax.tree_util.tree_leaves(rgrads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(g), atol=5e-6)
+
+
+@pytest.mark.slow
+def test_reference_engine_matches_oracle_after_weight_placement():
+    """A W-placement-optimized plan (the non-uniform-cost refinement of
+    repro.core.placement) reorders BWD_WEIGHT tasks only — the engines must
+    still reproduce the jax.grad oracle exactly."""
+    from repro.core import StageCosts, optimize_weight_placement
+
+    cfg = _cfg(num_layers=4, d_model=32, d_ff=64, vocab_size=64)
+    S, M, b, T = 2, 4, 2, 8
+    staged = StagedModel.build(cfg, S)
+    params = staged.init_all_stages(jax.random.PRNGKey(0))
+    tokens, labels = _data(M, b, T, cfg.vocab_size)
+
+    def oracle(p):
+        return sum(staged.full_loss(p, tokens[m], labels[m]) for m in range(M)) / M
+
+    oloss, ograds = jax.value_and_grad(oracle)(params)
+    plan = make_plan(S, M, 1, kind="zb_h2", extra_warmup=(2, 1))
+    skew = StageCosts(
+        fwd_time=[1.0, 0.8], bwd_time=[3.0, 2.0],
+        fwd_bytes=[1.0] * S, bwd_bytes=[1.0] * S,
+        bwd_input_time=[0.7, 1.1], bwd_weight_time=[2.3, 0.9],
+    )
+    opt = optimize_weight_placement(plan, skew, {(0, 1): 2.0, (1, 0): 2.0})
+    rloss, rgrads = reference_pipeline_grads(staged, params, tokens, labels, opt)
     assert float(rloss) == pytest.approx(float(oloss), rel=1e-5)
     for a, g in zip(jax.tree_util.tree_leaves(ograds), jax.tree_util.tree_leaves(rgrads)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(g), atol=5e-6)
@@ -248,6 +287,9 @@ _SPMD_SCRIPT = textwrap.dedent(
     # interleaved virtual stages (plain + joint interleaved-ZB)
     check(make_plan(S, M, 2, kind="zb_h1"), staged, params, oloss, ograds)
     check(make_plan(S, M, 1, kind="zb_h2", extra_warmup=1), staged, params, oloss, ograds)
+    # heterogeneous per-stage warmup vector w[s] through the REAL engine
+    check(make_plan(S, M, 1, kind="zb_h2", extra_warmup=(0, 1, 2, 1)),
+          staged, params, oloss, ograds)
     v = 2  # S*v = 8 virtual stages -> the 8-layer sibling config
     cfg_v = ModelConfig("tiny8", "dense", num_layers=8, d_model=48, num_heads=4,
                         num_kv_heads=2, d_ff=96, vocab_size=128,
@@ -260,6 +302,10 @@ _SPMD_SCRIPT = textwrap.dedent(
     check(make_plan(S, M, 1, kind="interleaved", num_virtual=v),
           staged_v, params_v, oloss_v, ograds_v)
     check(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v),
+          staged_v, params_v, oloss_v, ograds_v)
+    # the interleaved-H2 composition (per-stage warmup over the ring)
+    check(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v,
+                    extra_warmup=(1, 0, 2, 1)),
           staged_v, params_v, oloss_v, ograds_v)
     print("SPMD_ENGINE_ALL_OK")
     """

@@ -86,6 +86,57 @@ def test_zb_h2_buys_exactly_w_slots_per_stage():
         assert h2 == [min(p + w, M) for p in base], (w, h2, base)
 
 
+def test_zb_vector_warmup_uniform_equals_scalar():
+    """A uniform vector w[s] = (w, w, ..., w) IS the scalar-w H2 — same
+    orders, same name, same peaks."""
+    S, M = 4, 16
+    for w in (1, 2):
+        scalar = make_plan(S, M, 1, kind="zb_h2", extra_warmup=w)
+        vector = make_plan(S, M, 1, kind="zb_h2", extra_warmup=(w,) * S)
+        assert scalar.name == vector.name
+        assert [t.key() for o in scalar.orders for t in o] == [
+            t.key() for o in vector.orders for t in o
+        ]
+
+
+def test_zb_vector_warmup_per_stage_memory_price():
+    """Each stage pays for ITS OWN w[s] only: peaks sit between H1's and
+    H1 + w[s], and a stage with w[s] = 0 keeps exactly its H1 peak when its
+    upstream stages can feed the difference."""
+    S, M = 4, 16
+    h1 = peak_live_activations(make_plan(S, M, 1, kind="zb_h1"))
+    w = (2, 0, 1, 0)
+    peaks = peak_live_activations(make_plan(S, M, 1, kind="zb_h2", extra_warmup=w))
+    assert all(h1[s] <= peaks[s] <= h1[s] + w[s] for s in range(S)), (h1, peaks)
+    # stage 0 has no upstream: its extra warmup depth is realized exactly
+    assert peaks[0] == h1[0] + w[0]
+
+
+def test_zb_vector_warmup_length_and_guards():
+    """The vector must be one entry per stage, >= 0, with some stage >= 1."""
+    with pytest.raises(ValueError, match="one entry per stage"):
+        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=(1, 2))
+    with pytest.raises(ValueError, match=">= 0"):
+        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=(1, -1, 0, 0))
+    with pytest.raises(ValueError, match="extra_warmup >= 1"):
+        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=(0, 0, 0, 0))
+
+
+def test_interleaved_zb_composes_with_warmup():
+    """The "interleaved H2": extra_warmup raises the per-device cap above
+    the plain interleaved peak — more live slots bought at exactly the
+    stages that asked, never beyond plain + w[s]."""
+    S, M, v = 4, 8, 2
+    plain = peak_live_activations(make_plan(S, M, 1, kind="interleaved", num_virtual=v))
+    w = (2, 1, 0, 2)
+    plan = make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v, extra_warmup=w)
+    peaks = peak_live_activations(plan)
+    zb0 = peak_live_activations(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v))
+    assert all(peaks[s] <= plain[s] + w[s] for s in range(S)), (peaks, plain)
+    assert all(peaks[s] >= zb0[s] for s in range(S))
+    assert any(peaks[s] > zb0[s] for s in range(S) if w[s] > 0)  # warmup realized
+
+
 def test_zb_orders_w0_is_h1():
     """The cap-parameterized builder at w=0 IS the H1 schedule."""
     S, M = 4, 8

@@ -7,9 +7,9 @@ subprocess engine test.
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (
     _spec_for,

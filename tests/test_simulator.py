@@ -183,6 +183,31 @@ def test_zb_h2_golden_fills_warmup_at_exactly_w_slots():
         prev = len_h2
 
 
+def test_zb_h2_vector_golden_beats_best_scalar_under_preemption():
+    """Golden gate for the heterogeneous warmup vector: on a memory-skewed
+    pipeline (only stage 0 bound tightly) the vector w = (3, 3, 2, 1) is
+    strictly shorter than the best scalar the same skew admits (w = 1) and
+    than H1, and costs extra slots only where its w[s] bought them."""
+    from repro.core.schedule import peak_live_activations
+
+    S, M = 4, 32
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+    net = uniform_network(
+        S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+    )
+    w_vec = (3, 3, 2, 1)
+    vector = make_plan(S, M, 1, kind="zb_h2", extra_warmup=w_vec)
+    scalar = make_plan(S, M, 1, kind="zb_h2", extra_warmup=1)
+    h1 = make_plan(S, M, 1, kind="zb_h1")
+    len_v = simulate_plan(vector, costs, net).pipeline_length
+    len_s = simulate_plan(scalar, costs, net).pipeline_length
+    len_1 = simulate_plan(h1, costs, net).pipeline_length
+    assert len_v < len_s < len_1
+    peaks_v = peak_live_activations(vector)
+    peaks_1 = peak_live_activations(h1)
+    assert all(p <= q + w for p, q, w in zip(peaks_v, peaks_1, w_vec))
+
+
 def test_interleaved_zb_golden_beats_plain_interleaved():
     """Golden gate for the joint kind: same chunk walk, B/W-split backward —
     strictly shorter makespan than plain interleaved (fast net and under

@@ -173,36 +173,41 @@ def _preempted_network(S):
 
 def test_tuner_selects_zb_h2_when_memory_admits_extra_warmup():
     """Acceptance: with a generous memory limit the H2 candidate exists
-    (largest admissible w, binary-searched) and under a preempted network
-    the tuner picks it over H1 — its extra warmup forwards absorb the
-    stalls.  The record carries the chosen warmup depth."""
+    (largest admissible w[s] per stage, greedy on the limit curve) and
+    under a preempted network the tuner picks it over H1 — its extra warmup
+    forwards absorb the stalls.  The record carries the chosen warmup
+    vector."""
     S, B = 4, 32
     cands = enumerate_candidates(
         S, B, _mm(S), 1e8, max_k=1, min_microbatches=16, kinds=("zb_h1", "zb_h2"),
     )
     assert {c.kind for c in cands} == {"zb_h1", "zb_h2"}
     h2 = next(c for c in cands if c.kind == "zb_h2")
-    assert h2.extra_warmup >= 1 and h2.est_peak_bytes <= 1e8
+    assert max(h2.extra_warmup) >= 1 and h2.est_peak_bytes <= 1e8
 
     rec = AutoTuner(cands, _uniform_costs_for(S), NetworkProfiler(_preempted_network(S))).tune(0.0)
     assert rec.chosen_kind == "zb_h2"
-    assert rec.chosen_extra_warmup == h2.extra_warmup >= 1
+    assert rec.chosen_extra_warmup == h2.extra_warmup
+    assert max(rec.chosen_extra_warmup) >= 1
     assert rec.estimates[rec.chosen] == min(rec.estimates.values())
 
 
 def test_tuner_refuses_zb_h2_when_memory_forbids_it():
-    """Acceptance: a limit that admits ZB-H1 but not even w=1 of ZB-H2 (the
-    H2 surcharge is the extra live slots) must yield NO H2 candidate, so the
-    tuner falls back to H1 even under the preemption that favours H2."""
+    """Acceptance: a limit CURVE that admits ZB-H1 but not even w[s]=1 at
+    any stage (the H2 surcharge is the extra live slots) must yield NO H2
+    candidate, so the tuner falls back to H1 even under the preemption that
+    favours H2.  A scalar limit can never force this (some later stage
+    always has slot headroom under a uniform ceiling) — per-stage refusal
+    is exactly what the limit curve exists to express."""
     from repro.core import make_plan
 
     S, B = 4, 32
     mm = _mm(S)
-    # at the smallest feasible b (=1), H1 fits but H2's w=1 does not
-    t1 = mm.peak_bytes(make_plan(S, B, 1, micro_batch_size=1, kind="zb_h1"))
-    t2 = mm.peak_bytes(make_plan(S, B, 1, micro_batch_size=1, kind="zb_h2", extra_warmup=1))
-    assert t1 < t2
-    tight = (t1 + t2) / 2
+    # at the smallest feasible b (=1): each stage's limit sits between its
+    # own H1 peak and the cost of one extra zb slot — H1 fits everywhere,
+    # w[s]=1 fits nowhere
+    h1_peaks = mm.peak_bytes_per_stage(make_plan(S, B, 1, micro_batch_size=1, kind="zb_h1"))
+    tight = [p + 0.5 * mm.slot_bytes(s, 1, True) for s, p in enumerate(h1_peaks)]
     cands = enumerate_candidates(
         S, B, mm, tight, max_k=1, min_microbatches=B, kinds=("zb_h1", "zb_h2"),
     )
@@ -210,7 +215,68 @@ def test_tuner_refuses_zb_h2_when_memory_forbids_it():
 
     rec = AutoTuner(cands, _uniform_costs_for(S), NetworkProfiler(_preempted_network(S))).tune(0.0)
     assert rec.chosen_kind == "zb_h1"
-    assert rec.chosen_extra_warmup == 0
+    assert max(rec.chosen_extra_warmup) == 0
+
+
+def test_vector_warmup_beats_every_scalar_on_memory_skewed_pipeline():
+    """THE acceptance gate of the heterogeneity PR: on a memory-skewed
+    4-stage pipeline under ``PeriodicPreemptionTrace``, the per-stage
+    greedy recovers a vector w[s] candidate whose simulated pipeline length
+    is strictly shorter than EVERY scalar-w (uniform H2) candidate that is
+    admissible under the same per-stage limit curve — and the tuner picks
+    it."""
+    from repro.core import make_plan
+
+    S, B = 4, 32
+    M, b = 32, 1
+    mm = _mm(S)
+    # the skew: stage s's limit admits exactly target[s] extra slots — early
+    # stages are memory-rich, the last stage nearly full
+    target = (3, 3, 2, 1)
+    plan_v = make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2", extra_warmup=target)
+    limits = [p + 1.0 for p in mm.peak_bytes_per_stage(plan_v)]
+
+    cands = enumerate_candidates(
+        S, B, mm, limits, max_k=1, min_microbatches=B,
+        kinds=("zb_h1", "zb_h2"), max_extra_warmup=8,
+    )
+    h2 = next(c for c in cands if c.kind == "zb_h2")
+    assert h2.extra_warmup == target  # greedy recovers the full skew
+
+    # Fig-2-scale costs: fwd 1s, bwd 2s, transfer = F/50 when free — the
+    # preemption windows (period 20s, duty 0.3) bite mid-pipeline
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+
+    def costs_for(_cand):
+        return costs
+
+    net = _preempted_network(S)
+    len_vector = simulate_plan(h2.plan, costs, net).pipeline_length
+
+    # every scalar w admissible under the SAME curve (w=0 is H1)
+    scalar_lengths = {}
+    for w in range(0, max(target) + 2):
+        kind = "zb_h1" if w == 0 else "zb_h2"
+        plan_s = make_plan(S, M, 1, micro_batch_size=b, kind=kind, extra_warmup=w)
+        if mm.fits(plan_s, limits):
+            scalar_lengths[w] = simulate_plan(plan_s, costs, net).pipeline_length
+    assert set(scalar_lengths) == {0, 1}  # the tight stage pins scalars at w<=1
+    for w, length in scalar_lengths.items():
+        assert len_vector < length, (w, len_vector, length)
+
+    # and the tuner, handed vector + scalar candidates, picks the vector
+    from repro.core import Candidate
+
+    scalar_cands = [
+        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2",
+                                     extra_warmup=1), 0.0)
+    ]
+    tuner = AutoTuner(
+        cands + scalar_cands, costs_for, NetworkProfiler(_preempted_network(S))
+    )
+    rec = tuner.tune(0.0)
+    assert rec.chosen == h2.name
+    assert rec.chosen_extra_warmup == target
 
 
 def test_tuner_lowers_each_candidate_at_most_once():
