@@ -13,8 +13,13 @@ a PINNED, fully seeded subset of the paper benchmarks —
   best-scalar / vector length ratio (this PR's tentpole, now a tracked
   number),
 * **simulator events/sec** — wall-clock throughput of the discrete-event
-  core on a fixed workload (the only non-deterministic metric, so it gates
-  with a wider band than the deterministic 10%),
+  core on a fixed workload (wall-clock, so it gates with a wider band than
+  the deterministic 10%),
+* **live plan-switch runtime** — the seeded Fig-10 regime run through
+  ``PlanRuntime`` (real compiled steps, reference backend): kind-switch
+  count, precompile hit rate on the tuner's candidate stream, warm-cache
+  switch latency as a fraction of one iteration (wall-clock), and the
+  probe overhead passive telemetry saves vs suspend-and-probe,
 
 — and writes them as schema-versioned ``BENCH_<tag>.json`` at the repo
 root.  The CI ``bench`` job (main only) runs ``--check``: against the most
@@ -72,13 +77,18 @@ GATES = {
     "vector_w_gain": ("higher", REL_TOL),
     "tuner_preempted_hours_beat_1f1b": ("higher", REL_TOL),
     "sim_events_per_sec": ("higher", 0.5),
+    # live plan-switch runtime (PR 4): the adaptive loop on the real engine
+    "runtime_kind_switches": ("higher", 0.0),
+    "runtime_precompile_hit_rate": ("higher", REL_TOL),
+    "runtime_probe_overhead_saved_frac": ("higher", REL_TOL),
+    "runtime_warm_switch_frac": ("lower", 0.5),
 }
 
 #: wall-clock metrics only gate against a baseline recorded on a comparable
 #: machine — a BENCH committed from a dev laptop must not fail the CI
 #: runner (or vice versa) on hardware difference alone; on a fingerprint
 #: mismatch they are reported but not gated
-WALL_CLOCK_METRICS = {"sim_events_per_sec"}
+WALL_CLOCK_METRICS = {"sim_events_per_sec", "runtime_warm_switch_frac"}
 
 
 def machine_fingerprint() -> dict:
@@ -202,12 +212,54 @@ def simulator_throughput(repeats: int = 5) -> dict:
     }
 
 
-def collect() -> dict:
+def runtime_metrics(iterations: int = 14) -> dict:
+    """The live plan-switch runtime on the seeded Fig-10 scenario: real
+    compiled steps (reference backend), warm kind switches across the
+    interleaved re-stacking boundary, background precompilation, passive
+    telemetry.  Deterministic except the wall-clock latency fractions.
+
+    Metric definitions live in ``train_adaptive.summarize`` /
+    ``grad_parity_max_err`` (shared with the entry point's JSON and the
+    acceptance test); this function only renames them into the bench
+    namespace.  Imports are local: this is the only benchmark that pulls
+    in jax and compiles programs (~minutes), and ``--skip-runtime`` must
+    stay light.
+    """
+    from repro.launch.train_adaptive import (
+        build_fig10_scenario,
+        grad_parity_max_err,
+        summarize,
+    )
+
+    sc = build_fig10_scenario()
+    summary = sc.coordinator.run(iterations)
+    s = summarize(sc, summary)
+    grad_err = grad_parity_max_err(sc)
+    sc.runtime.cache.shutdown()
+    return {
+        "runtime_kind_switches": s["kind_switches"],
+        "runtime_chosen_kinds": [d["kind"] for d in s["decision_trail"]],
+        "runtime_precompile_hit_rate": s["precompile_hit_rate"],
+        "runtime_cold_misses": s["cache"]["cold_misses"],
+        "runtime_warm_switch_seconds": max(s["warm_switch_seconds"], default=0.0),
+        "runtime_cold_switch_seconds": s["cold_switch_seconds"],
+        "runtime_warm_switch_frac": s["warm_switch_latency_frac"] or 0.0,
+        "runtime_mean_iteration_seconds": s["mean_iteration_seconds"],
+        "runtime_probes_run": s["probe_rounds_run"],
+        "runtime_probes_total": s["probe_rounds_total"],
+        "runtime_probe_overhead_saved_frac": s["probe_overhead_saved_frac"],
+        "runtime_grad_parity_max_err": grad_err,
+    }
+
+
+def collect(skip_runtime: bool = False) -> dict:
     metrics = {}
     metrics.update(fig2_ratios())
     metrics.update(vector_w_gain())
     metrics.update(tuner_switch_trace())
     metrics.update(simulator_throughput())
+    if not skip_runtime:
+        metrics.update(runtime_metrics())
     return metrics
 
 
@@ -253,10 +305,13 @@ def main(argv=None) -> int:
                     help="write schema-versioned JSON here (e.g. BENCH_PR3.json)")
     ap.add_argument("--check", action="store_true",
                     help="fail on >10%% regression vs the previous committed BENCH_*.json")
+    ap.add_argument("--skip-runtime", action="store_true",
+                    help="skip the live plan-switch runtime suite (the only "
+                         "one that compiles real steps; ~minutes)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
-    metrics = collect()
+    metrics = collect(skip_runtime=args.skip_runtime)
     payload = {
         "schema_version": SCHEMA_VERSION,
         "source": "benchmarks/trajectory.py",

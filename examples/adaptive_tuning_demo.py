@@ -9,6 +9,11 @@ a fixed 1F1B run.
 Run:  PYTHONPATH=src python examples/adaptive_tuning_demo.py
 """
 
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 from benchmarks.common import efficiency
 from repro.configs.gpt import GPT_CONFIGS, gpt_stage_costs
 from repro.core import (

@@ -12,6 +12,7 @@ identical gradients for identical params — the switch is mathematically
 invisible.
 
 Run:  PYTHONPATH=src python examples/engine_plan_switch.py
+(Set REPRO_SMOKE=1 for the CI-sized run.)
 """
 
 import os
@@ -30,10 +31,14 @@ from repro.pipeline.engine import make_pipeline_step
 from repro.pipeline.stage import StagedModel
 from repro.training import TrainState, create_train_state
 
-S, M, B, T, STEPS = 4, 4, 8, 32, 60
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+S, M, B = 4, 4, 8
+T = 16 if SMOKE else 32
+STEPS = 12 if SMOKE else 60
 
-cfg = ModelConfig("switch-demo", "dense", num_layers=4, d_model=128, num_heads=4,
-                  num_kv_heads=2, d_ff=256, vocab_size=512,
+cfg = ModelConfig("switch-demo", "dense", num_layers=4,
+                  d_model=64 if SMOKE else 128, num_heads=4,
+                  num_kv_heads=2, d_ff=128 if SMOKE else 256, vocab_size=512,
                   dtype=jnp.float32, param_dtype=jnp.float32)
 staged = StagedModel.build(cfg, S)
 params = staged.init_all_stages(jax.random.PRNGKey(0))
@@ -95,7 +100,8 @@ with mesh:
 pre = losses[STEPS // 2 - 1]
 post = losses[STEPS // 2]
 assert abs(post - pre) < 0.5, "loss must be continuous across the switch"
-assert losses[-1] < losses[0] - 0.3
+if not SMOKE:  # the smoke run is too short to earn a meaningful loss drop
+    assert losses[-1] < losses[0] - 0.3
 print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f}; "
       f"switch discontinuity {abs(post - pre):.4f} (≈ one normal step delta). "
       "Plan switching is free — paper §5.4 reproduced on the real engine.")

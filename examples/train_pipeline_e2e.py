@@ -6,6 +6,7 @@ engine under a 2F2B plan, asserting the loss drops.  Pass ``--full`` for
 the paper's GPT-Medium (350M — slow on CPU, sized for a real slice).
 
 Run:  PYTHONPATH=src python examples/train_pipeline_e2e.py [--steps 200]
+(Set REPRO_SMOKE=1 for the CI-sized run.)
 """
 
 import os
@@ -38,9 +39,16 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper GPT-Medium (350M); default is a reduced variant")
     args = ap.parse_args()
+    smoke = bool(os.environ.get("REPRO_SMOKE"))
+    if smoke:
+        args.steps = min(args.steps, 20)
+        args.seq = min(args.seq, 32)
 
     cfg = GPT_CONFIGS["GPT-Medium"]
-    if not args.full:
+    if smoke:
+        cfg = cfg.replace(num_layers=4, d_model=64, d_ff=128, num_heads=4,
+                          num_kv_heads=4, head_dim=16, vocab_size=512)
+    elif not args.full:
         cfg = cfg.replace(num_layers=4, d_model=256, d_ff=1024, num_heads=8,
                           num_kv_heads=8, head_dim=32, vocab_size=1024)
     cfg = cfg.replace(dtype=jnp.float32, param_dtype=jnp.float32)
@@ -78,7 +86,10 @@ def main():
             if i % 20 == 0 or i == args.steps - 1:
                 tput = args.batch * args.seq * len(losses) / (time.time() - t0)
                 print(f"step {i:4d}  loss {losses[-1]:.4f}  {tput:,.0f} tok/s")
-    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+    if smoke:  # 20 steps: just prove the loop learns at all
+        assert losses[-1] < losses[0], (losses[0], losses[-1])
+    else:
+        assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
     print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps "
           f"under the {k}F{k}B engine — OK")
 

@@ -14,8 +14,9 @@ from repro.core.candidates import (
     largest_admissible_warmup,
 )
 from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
-from repro.core.costmodel import CostModel, closed_form_1f1b_length
+from repro.core.costmodel import CostModel, closed_form_1f1b_length, link_probe_specs
 from repro.core.memory_model import (
+    ZB_SLOT_POLICIES,
     MemoryModel,
     StageMemorySpec,
     limit_curve,
@@ -62,8 +63,10 @@ __all__ = [
     "RunSummary",
     "CostModel",
     "closed_form_1f1b_length",
+    "link_probe_specs",
     "MemoryModel",
     "StageMemorySpec",
+    "ZB_SLOT_POLICIES",
     "limit_curve",
     "predicted_peak_live",
     "optimize_weight_placement",

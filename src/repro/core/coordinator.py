@@ -7,7 +7,22 @@ task graph against the ground-truth network traces (whose state depends on
 wall-clock simulated time — phase matters under periodic preemption), and at
 the configured interval it invokes the auto-tuner, applying plan switches
 immediately.  A pluggable ``on_iteration`` hook lets the real JAX engine run
-the equivalent compiled step alongside (used by examples/).
+the equivalent compiled step alongside — that is where
+:class:`repro.runtime.harness.RealEngineHarness` attaches the live
+plan-switch runtime (compiled-step cache + warm kind switches), closing the
+adaptive loop on real gradients.
+
+Two telemetry refinements (both default-off, preserving the paper's
+behaviour):
+
+* ``telemetry`` — a :class:`repro.runtime.telemetry.TelemetryBus` (any
+  object with ``publish_iteration``); every simulated iteration's observed
+  length is published so passive subscribers can keep the
+  :class:`~repro.core.profiler.NetworkProfiler` windows fresh.
+* the charged ``tuning_overhead`` is scaled by each round's
+  ``TuningRecord.probe_fraction`` — with a passive tuner
+  (``passive_staleness``) and fresh windows, no link is actually probed and
+  the suspension cost goes to ~0 (§5.4's "minimal overhead", measured).
 
 This is also the harness the Fig-10 experiment uses.
 """
@@ -41,6 +56,9 @@ class RunSummary:
     tuning: list[TuningRecord]
     total_time: float
     total_samples: int
+    # wall-clock actually spent suspended in probe rounds (already included
+    # in total_time); ~0 when passive telemetry keeps the windows fresh
+    total_tuning_overhead: float = 0.0
 
     @property
     def throughput(self) -> float:
@@ -81,6 +99,7 @@ class Coordinator:
         tuning_interval: float,
         tuning_overhead: float = 0.0,
         on_iteration: Callable[[IterationRecord], None] | None = None,
+        telemetry=None,
     ) -> None:
         self.tuner = tuner
         self.network = network
@@ -88,15 +107,24 @@ class Coordinator:
         self.tuning_interval = tuning_interval
         self.tuning_overhead = tuning_overhead
         self.on_iteration = on_iteration
+        # duck-typed TelemetryBus (publish_iteration(**kw)); kept untyped so
+        # core never imports repro.runtime
+        self.telemetry = telemetry
 
     def run(self, num_iterations: int, tune_first: bool = True) -> RunSummary:
         now = 0.0
         iters: list[IterationRecord] = []
+        overhead_total = 0.0
         next_tune = 0.0 if tune_first else self.tuning_interval
         for i in range(num_iterations):
             if now >= next_tune:
-                self.tuner.tune(now)
-                now += self.tuning_overhead
+                rec_t = self.tuner.tune(now)
+                # suspension is only paid for the probes actually run: a
+                # passive tuner with fresh windows charges ~0 (§5.4)
+                frac = getattr(rec_t, "probe_fraction", 1.0)
+                charged = self.tuning_overhead * frac
+                now += charged
+                overhead_total += charged
                 next_tune = now + self.tuning_interval
             cand: Candidate = self.tuner.current
             costs = self.tuner.stage_costs_for(cand)
@@ -110,6 +138,15 @@ class Coordinator:
                 samples_per_s=self.global_batch / result.pipeline_length,
             )
             iters.append(rec)
+            if self.telemetry is not None:
+                self.telemetry.publish_iteration(
+                    index=i,
+                    plan=cand.plan,
+                    costs=costs,
+                    seconds=result.pipeline_length,
+                    end_time=now + result.pipeline_length,
+                    source="sim",
+                )
             if self.on_iteration:
                 self.on_iteration(rec)
             now += result.pipeline_length
@@ -118,4 +155,5 @@ class Coordinator:
             tuning=list(self.tuner.history),
             total_time=now,
             total_samples=self.global_batch * num_iterations,
+            total_tuning_overhead=overhead_total,
         )

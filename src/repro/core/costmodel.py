@@ -32,7 +32,30 @@ from repro.core.schedule import SchedulePlan
 from repro.core.simulator import simulate_plan
 from repro.core.taskgraph import StageCosts
 
-__all__ = ["CostModel", "closed_form_1f1b_length"]
+__all__ = ["CostModel", "closed_form_1f1b_length", "link_probe_specs"]
+
+
+def link_probe_specs(
+    plan: SchedulePlan, costs: StageCosts
+) -> list[tuple[int, int, float]]:
+    """The ``(src, dst, nbytes)`` set a plan's execution exercises: the
+    chain links both ways with the plan's actual transfer sizes, plus the
+    interleaved ring's wrap link.  The SINGLE source of truth shared by the
+    tuner's suspend-probe round and the runtime's passive telemetry feed —
+    the passive-skip contract (a fed link is never re-probed while fresh)
+    only holds because both walk exactly this list."""
+    S = plan.num_stages
+    specs = [(s, s + 1, costs.fwd_bytes[s]) for s in range(S - 1)]
+    specs += [(s + 1, s, costs.bwd_bytes[s + 1]) for s in range(S - 1)]
+    if plan.num_virtual > 1 and S > 2:
+        # the interleaved ring also crosses the wrap link in both roles;
+        # wrap transfers carry the same hidden state as any other hop, so
+        # probe with in-contract entries (bwd_bytes[0] is a placeholder)
+        specs += [
+            (S - 1, 0, costs.fwd_bytes[S - 2]),
+            (0, S - 1, costs.bwd_bytes[1]),
+        ]
+    return specs
 
 
 def closed_form_1f1b_length(

@@ -52,7 +52,26 @@ from repro.core.schedule import (
     peak_live_activations,
 )
 
-__all__ = ["StageMemorySpec", "MemoryModel", "predicted_peak_live", "limit_curve"]
+__all__ = [
+    "StageMemorySpec",
+    "MemoryModel",
+    "predicted_peak_live",
+    "limit_curve",
+    "ZB_SLOT_POLICIES",
+]
+
+#: how a zero-bubble slot bridges ``BWD_INPUT`` -> ``BWD_WEIGHT``:
+#:
+#: * ``"double_remat"`` — what the engine implements today: keep only the
+#:   stage input + the stashed ``dy``; ``W`` rematerializes the stage body a
+#:   second time.  Cheapest memory, one extra recompute per micro-batch.
+#: * ``"saved_residual"`` — the ROADMAP variant: ``B``'s ``jax.vjp`` closure
+#:   residuals (the per-layer activations the pullback reads, which subsume
+#:   the stage input) are kept live alongside ``dy`` until ``W`` consumes
+#:   them, trading the second rematerialization for ``num_layers`` layer
+#:   activations per live slot.  Priced here so ``enumerate_candidates``
+#:   can reject it under the limit curve BEFORE the engine change exists.
+ZB_SLOT_POLICIES = ("double_remat", "saved_residual")
 
 
 def limit_curve(limit_bytes: float | Sequence[float], num_stages: int) -> list[float]:
@@ -126,6 +145,15 @@ class MemoryModel:
     stages: list[StageMemorySpec]
     seq_len: int
     checkpoint_policy: str = "stage_input"  # or "full"
+    # zero-bubble slot pricing policy (see ZB_SLOT_POLICIES): how much a
+    # live slot costs between BWD_INPUT and BWD_WEIGHT
+    zb_policy: str = "double_remat"
+
+    def __post_init__(self) -> None:
+        if self.zb_policy not in ZB_SLOT_POLICIES:
+            raise ValueError(
+                f"unknown zb_policy {self.zb_policy!r}; expected one of {ZB_SLOT_POLICIES}"
+            )
 
     def activation_bytes_per_mb(self, stage: int, micro_batch_size: int) -> float:
         """Resident activation bytes held for ONE live micro-batch at a stage."""
@@ -161,12 +189,22 @@ class MemoryModel:
 
         Zero-bubble slots carry the engine's wctx surcharge: a hidden-sized
         ``dy`` is stashed alongside the saved stage input between
-        ``BWD_INPUT`` and ``BWD_WEIGHT``.
+        ``BWD_INPUT`` and ``BWD_WEIGHT``.  Under ``zb_policy ==
+        "saved_residual"`` the slot additionally keeps ``B``'s vjp
+        residuals — one layer-activation footprint per layer of the stage —
+        which is what buys away the second rematerialization (the residuals
+        only pay off where the limit curve still admits them; pricing them
+        here lets the candidate enumeration refuse the variant per stage).
         """
         per_slot = self.activation_bytes_per_mb(stage, micro_batch_size)
         if zb:
             spec = self.stages[stage]
-            per_slot += spec.stage_input_bytes_per_token * micro_batch_size * self.seq_len
+            tokens = micro_batch_size * self.seq_len
+            per_slot += spec.stage_input_bytes_per_token * tokens
+            if self.zb_policy == "saved_residual" and self.checkpoint_policy != "full":
+                # under "full" checkpointing the per-layer activations are
+                # already resident in the slot; nothing extra to keep
+                per_slot += spec.layer_act_bytes_per_token * spec.num_layers * tokens
         return per_slot
 
     def bytes_at_live(
@@ -212,6 +250,7 @@ class MemoryModel:
         num_layers_per_stage: int,
         checkpoint_policy: str = "stage_input",
         workspace_bytes_per_token: float = 0.0,
+        zb_policy: str = "double_remat",
     ) -> "MemoryModel":
         spec = StageMemorySpec(
             param_bytes=param_bytes,
@@ -223,5 +262,8 @@ class MemoryModel:
             workspace_bytes_per_token=workspace_bytes_per_token,
         )
         return cls(
-            [dataclasses.replace(spec) for _ in range(num_stages)], seq_len, checkpoint_policy
+            [dataclasses.replace(spec) for _ in range(num_stages)],
+            seq_len,
+            checkpoint_policy,
+            zb_policy=zb_policy,
         )

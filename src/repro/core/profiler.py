@@ -16,6 +16,15 @@ Two profilers, with very different lifetimes, exactly as in the paper:
   :class:`~repro.core.network.Network` trace the profiler probes at the
   current simulated time — the same way the paper suspends the schedule and
   probes the real wire.
+
+Windows accept two kinds of samples: *active* probes (``measure`` — the
+paper's suspend-and-probe, which costs pipeline time) and *passive* feeds
+(``record`` — per-link effective times inferred from whole-iteration
+timings by :mod:`repro.runtime.telemetry`, which cost nothing).  Every
+sample stamps its link with the feed time, so the tuner can ask
+``is_fresh(src, dst, now, max_age)`` and skip the suspension entirely
+while passive telemetry keeps the windows warm (see
+``AutoTuner(passive_staleness=...)``).
 """
 
 from __future__ import annotations
@@ -96,12 +105,21 @@ class NetworkProfiler:
         self.network = network
         self.window = window
         self._avg: dict[tuple[int, int, float], MovingAverage] = {}
+        # (src, dst) -> (last feed time, nbytes class of that feed): one
+        # stamp per link, because bandwidth extrapolates across byte
+        # classes while durations do not
+        self._link_stamp: dict[tuple[int, int], tuple[float, float]] = {}
 
     def _slot(self, src: int, dst: int, nbytes: float) -> MovingAverage:
         key = (src, dst, float(nbytes))
         if key not in self._avg:
             self._avg[key] = MovingAverage(self.window)
         return self._avg[key]
+
+    def _stamp(self, src: int, dst: int, nbytes: float, now: float) -> None:
+        prev = self._link_stamp.get((src, dst))
+        if prev is None or now >= prev[0]:
+            self._link_stamp[(src, dst)] = (float(now), float(nbytes))
 
     def measure(self, src: int, dst: int, nbytes: float, now: float,
                 probes: int = 3, spacing: float = 0.05) -> float:
@@ -116,7 +134,35 @@ class NetworkProfiler:
             t = fin + spacing
         mean = statistics.fmean(durations)
         slot.add(mean)
+        self._stamp(src, dst, nbytes, now)
         return mean
+
+    def record(self, src: int, dst: int, nbytes: float, duration: float,
+               now: float) -> None:
+        """Passive feed: push an *observed* effective transfer time into the
+        link's window without touching the wire (no suspension, no probe).
+        Used by the runtime telemetry bus with per-link times inferred from
+        real iteration timings."""
+        self._slot(src, dst, nbytes).add(duration)
+        self._stamp(src, dst, nbytes, now)
+
+    def last_update(self, src: int, dst: int) -> float | None:
+        """Time of the most recent sample (active or passive) on the link."""
+        stamp = self._link_stamp.get((src, dst))
+        return stamp[0] if stamp else None
+
+    def is_fresh(self, src: int, dst: int, now: float, max_age: float) -> bool:
+        last = self.last_update(src, dst)
+        return last is not None and (now - last) <= max_age
+
+    def link_bandwidth(self, src: int, dst: int) -> float:
+        """Effective bandwidth implied by the link's most recently fed byte
+        class (bandwidth extrapolates across classes; durations do not)."""
+        stamp = self._link_stamp.get((src, dst))
+        if stamp is None:
+            raise ValueError(f"no samples on link {(src, dst)}")
+        _, nbytes = stamp
+        return self.effective_bandwidth(src, dst, nbytes)
 
     def effective_time(self, src: int, dst: int, nbytes: float) -> float:
         return self._slot(src, dst, nbytes).value

@@ -21,6 +21,14 @@ warmup vector is per-stage, so the record carries the whole ``w[s]``.
 Interleaved candidates additionally probe the virtual-stage wrap link
 (``S-1 -> 0``) their ring actually uses.
 
+With ``passive_staleness`` set, step (a) becomes conditional per link: the
+runtime telemetry bus (:mod:`repro.runtime.telemetry`) feeds the profiler
+windows from observed iteration timings, and a link probed or fed within
+the staleness horizon is read from its window instead of suspending the
+pipeline — the paper's suspend-and-probe degrades into a fallback for
+stale links only, and the coordinator charges ``tuning_overhead`` scaled
+by the fraction of probes actually run.
+
 Candidates are static, so each one's lowered
 :class:`~repro.core.schedule.TabularPlan` is computed at most once (cached
 on the plan): re-evaluating every interval and dispatching the winner to
@@ -38,7 +46,7 @@ import dataclasses
 from typing import Callable
 
 from repro.core.candidates import Candidate
-from repro.core.costmodel import CostModel
+from repro.core.costmodel import CostModel, link_probe_specs
 from repro.core.placement import optimize_weight_placement
 from repro.core.profiler import NetworkProfiler
 from repro.core.schedule import ZB_KINDS
@@ -59,6 +67,19 @@ class TuningRecord:
     # the winner's per-stage warmup vector w[s]; all-zero unless a warmup
     # kind (zb_h2 / warmed interleaved_zb) won
     chosen_extra_warmup: tuple[int, ...] = ()
+    # suspend-and-probe accounting for this round: with passive telemetry
+    # keeping the profiler windows fresh, probes_run drops toward 0 and the
+    # coordinator scales the charged tuning_overhead accordingly
+    probes_run: int = 0
+    probes_skipped: int = 0
+
+    @property
+    def probe_fraction(self) -> float:
+        """Fraction of this round's link probes that actually suspended the
+        pipeline (1.0 when there were no links to probe — the degenerate
+        case keeps the legacy full charge)."""
+        total = self.probes_run + self.probes_skipped
+        return self.probes_run / total if total else 1.0
 
 
 class AutoTuner:
@@ -70,6 +91,7 @@ class AutoTuner:
         cost_model: CostModel | None = None,
         probes: int = 3,
         refine_weight_placement: bool = False,
+        passive_staleness: float | None = None,
     ) -> None:
         if not candidates:
             raise ValueError("no candidates to tune over")
@@ -79,6 +101,14 @@ class AutoTuner:
         self.cost_model = cost_model or CostModel()
         self.probes = probes
         self.refine_weight_placement = refine_weight_placement
+        # §5.4 closing-the-loop mode: when a link's profiler window was fed
+        # within the last `passive_staleness` seconds (by the runtime
+        # telemetry bus observing real iterations), skip the suspend-probe
+        # for it and read the window instead; None = always probe (paper
+        # default).  Suspension is only paid for links that went stale.
+        self.passive_staleness = passive_staleness
+        self._probes_run = 0
+        self._probes_skipped = 0
         self.current: Candidate = candidates[0]
         self.current_table = self.current.table  # dispatched to the engines
         self._refine_key: tuple | None = None  # (name, bw signature) of last refine
@@ -89,22 +119,23 @@ class AutoTuner:
 
     def _profile_links(self, cand: Candidate, now: float) -> dict[tuple[int, int], float]:
         costs = self.stage_costs_for(cand)
-        S = cand.plan.num_stages
-        # (src, dst, nbytes): the chain links with their actual transfer sizes
-        probes = [(s, s + 1, costs.fwd_bytes[s]) for s in range(S - 1)]
-        probes += [(s + 1, s, costs.bwd_bytes[s + 1]) for s in range(S - 1)]
-        if cand.plan.num_virtual > 1 and S > 2:
-            # the interleaved ring also crosses the wrap link in both roles;
-            # wrap transfers carry the same hidden state as any other hop, so
-            # probe with in-contract entries (bwd_bytes[0] is a placeholder)
-            probes += [
-                (S - 1, 0, costs.fwd_bytes[S - 2]),
-                (0, S - 1, costs.bwd_bytes[1]),
-            ]
+        # shared with the runtime's passive feed — the freshness skip below
+        # relies on both sides walking the same link list
+        probes = link_probe_specs(cand.plan, costs)
         bw: dict[tuple[int, int], float] = {}
         for src, dst, nbytes in probes:
+            if self.passive_staleness is not None and self.net_profiler.is_fresh(
+                src, dst, now, self.passive_staleness
+            ):
+                # passive telemetry kept this link warm: no suspension,
+                # extrapolate the candidate's transfer from the window's
+                # effective bandwidth
+                bw[(src, dst)] = self.net_profiler.link_bandwidth(src, dst)
+                self._probes_skipped += 1
+                continue
             self.net_profiler.measure(src, dst, nbytes, now, probes=self.probes)
             bw[(src, dst)] = self.net_profiler.effective_bandwidth(src, dst, nbytes)
+            self._probes_run += 1
         return bw
 
     def evaluate(self, now: float) -> dict[str, float]:
@@ -118,6 +149,8 @@ class AutoTuner:
         """
         out: dict[str, float] = {}
         self._last_bw: dict[str, dict[tuple[int, int], float]] = {}
+        self._probes_run = 0
+        self._probes_skipped = 0
         for cand in self.candidates:
             costs = self.stage_costs_for(cand)
             bw = self._profile_links(cand, now)
@@ -152,6 +185,8 @@ class AutoTuner:
             chosen_kind=best.plan.kind,
             chosen_num_virtual=best.plan.num_virtual,
             chosen_extra_warmup=best.plan.extra_warmup,
+            probes_run=self._probes_run,
+            probes_skipped=self._probes_skipped,
         )
         self.history.append(rec)
         return rec

@@ -1,0 +1,300 @@
+"""Fig-10 end-to-end on the REAL engine: the live plan-switch runtime.
+
+The paper's regime experiment — preemption appears, eases, returns; the
+tuner re-decides at intervals; the coordinator swaps plans with minimal
+overhead — previously ran simulation-only.  This entry point closes the
+loop with real gradients:
+
+* the network world stays a seeded :class:`RegimeTrace` (the one thing a
+  CPU container cannot make real) driving the discrete-event simulator and
+  the tuner's decisions;
+* every coordinator iteration is mirrored onto a live
+  :class:`~repro.runtime.executor.PlanRuntime` step — a real compiled
+  training iteration of the chosen plan, with warm kind switches (AOT
+  cache + background precompilation of the tuner's favourites) and bitwise
+  parameter re-stacking across the interleaved boundary;
+* iteration timings flow back through the telemetry bus into the
+  profiler's windows, so the tuner only suspends-and-probes links whose
+  windows went stale.
+
+The default scenario (4 stages, bursty -> exclusive -> bursty) flips the
+chosen schedule kind at least twice: ``zb_h2`` under contention,
+``interleaved_zb`` on the quiet network, back again — exercising the
+compile cache, the layout re-stacking, and the passive-telemetry path in
+one run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train_adaptive \
+      [--iterations 14] [--backend reference] [--out runtime_fig10.json]
+
+``REPRO_SMOKE=1`` shrinks iterations for CI smoke runs.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax.numpy as jnp
+
+from repro.core import (
+    AutoTuner,
+    BurstyTrace,
+    Candidate,
+    Coordinator,
+    Network,
+    NetworkProfiler,
+    RegimeTrace,
+    StableTrace,
+    StageCosts,
+    make_plan,
+)
+from repro.data import SyntheticTextDataset
+from repro.models.common import ModelConfig
+from repro.optim import make_optimizer
+from repro.runtime import PassiveLinkFeed, PlanRuntime, RealEngineHarness, TelemetryBus
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "train_adaptive"
+)
+
+
+@dataclasses.dataclass
+class Fig10Scenario:
+    """Everything a runtime Fig-10 run needs, wired together."""
+
+    cfg: ModelConfig
+    candidates: list[Candidate]
+    costs: StageCosts
+    network: Network
+    coordinator: Coordinator
+    tuner: AutoTuner
+    runtime: PlanRuntime
+    harness: RealEngineHarness
+    bus: TelemetryBus
+    dataset: SyntheticTextDataset
+    global_batch: int
+
+
+def build_fig10_scenario(
+    num_stages: int = 4,
+    hour: float = 120.0,
+    tuning_interval: float = 55.0,
+    tuning_overhead: float = 5.0,
+    passive_staleness: float | None = 40.0,
+    backend: str = "reference",
+    mesh=None,
+    d_model: int = 16,
+    seq_len: int = 64,
+    seed: int = 0,
+    precompile_top_n: int = 5,
+) -> Fig10Scenario:
+    """The seeded regime scenario shared by this entry point, the benchmark
+    trajectory, and the acceptance tests.
+
+    Candidate kinds: 1F1B, 2F2B, ZB-H1, ZB-H2(w=2) and interleaved-ZB
+    (v=2).  Under the bursty regimes the deep-warmup zero-bubble plan wins;
+    on the exclusive network the interleaved composition's shorter
+    fill/drain takes over — so the decision trail flips kinds at least
+    twice, crossing the parameter re-stacking boundary both ways.
+    """
+    S, M, b = num_stages, num_stages, 2
+    B = M * b
+    cfg = ModelConfig(
+        "runtime-tiny", "dense", num_layers=2 * S, d_model=d_model, num_heads=2,
+        num_kv_heads=2, d_ff=2 * d_model, vocab_size=64,
+        dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+    costs = StageCosts.uniform(S, 1.0, act_bytes=2.0)
+    cands = [
+        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b), 0.0),
+        Candidate(2, b, M, make_plan(S, M, 2, micro_batch_size=b), 0.0),
+        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b, kind="zb_h1"), 0.0),
+        Candidate(
+            1, b, M,
+            make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2", extra_warmup=2),
+            0.0,
+        ),
+        Candidate(
+            1, b, M,
+            make_plan(S, M, 1, micro_batch_size=b, kind="interleaved_zb", num_virtual=2),
+            0.0,
+        ),
+    ]
+
+    def link(a: int, c: int):
+        s = 17 * a + c + 100 * seed
+        bursty = lambda ss: BurstyTrace(
+            8.0, contended_frac=0.05, mean_free=0.5, mean_contended=2.0, seed=ss
+        )
+        return RegimeTrace([hour, 2 * hour], [bursty(s), StableTrace(50.0), bursty(s + 7)])
+
+    net = Network.build(S, link)
+    profiler = NetworkProfiler(net, window=4)
+    tuner = AutoTuner(
+        cands, lambda c: costs, profiler, passive_staleness=passive_staleness
+    )
+    bus = TelemetryBus()
+    bus.subscribe(PassiveLinkFeed(profiler))
+    opt = make_optimizer("adamw", schedule=lambda s: jnp.float32(1e-3))
+    runtime = PlanRuntime(
+        cfg, S, opt, global_batch=B, seq_len=seq_len, backend=backend, mesh=mesh,
+        telemetry=bus, init_key=seed,
+    )
+    dataset = SyntheticTextDataset(cfg.vocab_size, seq_len, B, seed=seed)
+
+    def batch_fn(i: int):
+        batch = dataset.batch_at(i)
+        return batch.tokens, batch.labels
+
+    harness = RealEngineHarness(
+        runtime, tuner, batch_fn, precompile_top_n=precompile_top_n
+    )
+    coord = Coordinator(
+        tuner, net, global_batch=B, tuning_interval=tuning_interval,
+        tuning_overhead=tuning_overhead, on_iteration=harness.on_iteration,
+        telemetry=bus,
+    )
+    return Fig10Scenario(
+        cfg=cfg, candidates=cands, costs=costs, network=net, coordinator=coord,
+        tuner=tuner, runtime=runtime, harness=harness, bus=bus, dataset=dataset,
+        global_batch=B,
+    )
+
+
+def summarize(sc: Fig10Scenario, summary) -> dict:
+    """Canonical metric aggregation for a runtime Fig-10 run.
+
+    The SINGLE definition consumed by this entry point's JSON, the
+    benchmark trajectory's ``runtime_*`` metrics, and the acceptance test —
+    so all three always report the same numbers for the same run."""
+    rt, stats = sc.runtime, sc.runtime.cache.stats
+    warm = [e for e in rt.switch_events if e.warm]
+    cold = [e for e in rt.switch_events if not e.warm]
+    mean_iter = rt.mean_iteration_seconds
+    probes_run = sum(r.probes_run for r in summary.tuning)
+    probes_total = sum(r.probes_run + r.probes_skipped for r in summary.tuning)
+    full_suspend = sc.coordinator.tuning_overhead * len(summary.tuning)
+    return {
+        "iterations": len(rt.iterations),
+        "losses": [round(r.loss, 4) for r in rt.iterations],
+        "decision_trail": [
+            {"t": round(r.time, 1), "chosen": r.chosen, "kind": r.chosen_kind}
+            for r in summary.tuning
+        ],
+        "kind_switches": sc.harness.kind_switches,
+        "switch_events": [dataclasses.asdict(e) for e in rt.switch_events],
+        "mean_iteration_seconds": mean_iter,
+        "warm_switch_seconds": [e.seconds for e in warm],
+        "warm_switch_latency_frac": (
+            max(e.seconds for e in warm) / mean_iter if warm and mean_iter else None
+        ),
+        "cold_switch_seconds": max(
+            (e.seconds + e.compile_seconds for e in cold), default=0.0
+        ),
+        "precompile_hit_rate": stats.hit_rate,
+        "cache": dataclasses.asdict(stats),
+        "probe_rounds_run": probes_run,
+        "probe_rounds_total": probes_total,
+        "tuning_overhead_charged": summary.total_tuning_overhead,
+        "probe_overhead_saved_frac": (
+            1.0 - summary.total_tuning_overhead / full_suspend if full_suspend else 0.0
+        ),
+        "sim_total_time": summary.total_time,
+    }
+
+
+def grad_parity_max_err(sc: Fig10Scenario, batch_index: int = 999) -> float:
+    """Max abs gradient difference vs the ``jax.grad`` oracle on the run's
+    CURRENT (switched-and-restacked) state — the acceptance's "matches the
+    unswitched reference gradients" observable, defined once for the entry
+    point, the benchmark, and the test."""
+    import jax
+    import numpy as np
+
+    from repro.pipeline.engine import reference_pipeline_grads
+
+    rt = sc.runtime
+    plan = rt.current_table.plan
+    staged = rt.staged_for(plan.num_virtual)
+    M = plan.num_microbatches
+    b = sc.global_batch // M
+    batch = sc.dataset.batch_at(batch_index)
+    tok = batch.tokens.reshape(M, b, rt.seq_len)
+    lab = batch.labels.reshape(M, b, rt.seq_len)
+
+    def oracle(p):
+        return sum(staged.full_loss(p, tok[m], lab[m]) for m in range(M)) / M
+
+    _, ograds = jax.value_and_grad(oracle)(rt.state.params)
+    _, rgrads = reference_pipeline_grads(staged, rt.state.params, tok, lab, plan)
+    return max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(g))))
+        for a, g in zip(
+            jax.tree_util.tree_leaves(ograds), jax.tree_util.tree_leaves(rgrads)
+        )
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iterations", type=int, default=14)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--backend", choices=("reference", "spmd"), default="reference")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write the run summary JSON here")
+    args = ap.parse_args(argv)
+    if os.environ.get("REPRO_SMOKE"):
+        args.iterations = min(args.iterations, 6)
+
+    mesh = None
+    if args.backend == "spmd":
+        import jax
+
+        mesh = jax.make_mesh((args.stages,), ("stage",))
+    sc = build_fig10_scenario(
+        num_stages=args.stages, backend=args.backend, mesh=mesh, seed=args.seed
+    )
+    t0 = time.time()
+    summary = sc.coordinator.run(args.iterations)
+    out = summarize(sc, summary)
+    out["wall_seconds"] = round(time.time() - t0, 2)
+
+    print("decision trail:")
+    for d in out["decision_trail"]:
+        print(f"  t={d['t']:7.1f}  {d['chosen']:30s} kind={d['kind']}")
+    print(f"kind switches: {out['kind_switches']}")
+    print(
+        f"precompile hit rate: {out['precompile_hit_rate']:.2f}  "
+        f"(cache: {out['cache']})"
+    )
+    if out["warm_switch_latency_frac"] is not None:
+        print(
+            f"warm switch latency: {max(out['warm_switch_seconds'])*1e3:.2f} ms "
+            f"= {100*out['warm_switch_latency_frac']:.2f}% of a "
+            f"{out['mean_iteration_seconds']*1e3:.0f} ms iteration"
+        )
+    print(
+        f"probes run/total: {out['probe_rounds_run']}/{out['probe_rounds_total']}  "
+        f"charged overhead {out['tuning_overhead_charged']:.2f}s (sim)"
+    )
+    print(f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+    path = args.out
+    if path is None:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        path = os.path.join(ARTIFACT_DIR, f"fig10_runtime_{args.backend}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(path)}")
+    sc.runtime.cache.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

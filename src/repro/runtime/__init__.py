@@ -1,0 +1,80 @@
+"""Live plan-switch runtime: the adaptive loop on the real JAX engine.
+
+Until this subsystem existed the repo had two disconnected halves: the
+*decision* stack (``core/`` — candidates, profiler, tuner, coordinator)
+closed the paper's Fig-10 loop against the discrete-event simulator, while
+the *execution* stack (``pipeline/engine``) compiled exactly one static
+plan per process.  ``repro.runtime`` is the missing layer between them —
+the paper's §5.4 coordinator-worker runtime ("dispatches the decided plan
+to all workers and swaps plans with minimal overhead"), realized as:
+
+========================  ===================================================
+module                    role (paper anchor)
+========================  ===================================================
+``compile_cache``         §5.4 "minimal overhead", compile half: AOT
+                          compiled-step cache keyed by lowered
+                          ``TabularPlan`` identity, with background
+                          precompilation of the tuner's top-N candidates so
+                          a switch dispatches an already-compiled step
+                          (Zero Bubble's observation that post-hoc schedule
+                          swaps only pay off with recompilation off the
+                          critical path).
+``executor``              §5.4 "no effect on model parameters", state half:
+                          :class:`PlanRuntime` owns params + optimizer
+                          state and performs warm switches at iteration
+                          boundaries across schedule *kinds* — including
+                          the bitwise parameter re-stacking between the
+                          flat stage layout and Megatron's looped
+                          virtual-stage layout that interleaved members
+                          need, optimizer moments carried bit-for-bit.
+``telemetry``             §5.2 probing made passive: a per-iteration timing
+                          bus; observed iteration lengths are inverted to
+                          effective link bandwidths and fed into
+                          ``NetworkProfiler``'s moving-average windows, so
+                          the tuner suspends-and-probes only links whose
+                          windows went stale (``tuning_overhead`` -> ~0).
+``harness``               Fig-10 end-to-end: ``RealEngineHarness`` rides
+                          ``Coordinator.on_iteration``, mirroring every
+                          tuner decision onto the live engine with real
+                          gradients (entry point:
+                          ``python -m repro.launch.train_adaptive``).
+========================  ===================================================
+
+The compiled-step programs run either the single-device reference executor
+or the real ``shard_map`` engine; both consume the same lowered
+``TabularPlan`` the tuner dispatches, so the decision and execution stacks
+finally share one artifact end-to-end.
+"""
+
+from repro.runtime.compile_cache import CacheStats, CompiledEntry, CompiledStepCache
+from repro.runtime.executor import (
+    IterationResult,
+    PlanRuntime,
+    SwitchEvent,
+    restack_train_state,
+)
+from repro.runtime.harness import HarnessRecord, RealEngineHarness
+from repro.runtime.telemetry import (
+    IterationTiming,
+    PassiveLinkFeed,
+    TelemetryBus,
+    invert_effective_bandwidth,
+    link_probe_specs,
+)
+
+__all__ = [
+    "CacheStats",
+    "CompiledEntry",
+    "CompiledStepCache",
+    "IterationResult",
+    "PlanRuntime",
+    "SwitchEvent",
+    "restack_train_state",
+    "HarnessRecord",
+    "RealEngineHarness",
+    "IterationTiming",
+    "PassiveLinkFeed",
+    "TelemetryBus",
+    "invert_effective_bandwidth",
+    "link_probe_specs",
+]

@@ -1,0 +1,191 @@
+"""AOT compiled-step cache: switch dispatch must never wait on XLA.
+
+§5.4's "swaps plans with minimal overhead" has two halves.  Parameter state
+is free by construction — (k, b) never touch the parameters — but on a JIT
+engine the *compiled executable* is not: tracing + XLA compilation of a
+pipeline step easily dwarfs an iteration.  This cache makes the compile
+cost invisible to the switch path:
+
+* entries are keyed by the **lowered plan identity**
+  (:meth:`CompiledStepCache.plan_key` — the schedule coordinates plus a
+  digest of the tabular grid, so a ``+Wopt``-refined lowering and its base
+  plan are distinct entries while re-lowering the same plan is a hit);
+* :meth:`precompile` AOT-compiles (``jit(...).lower(...).compile()``)
+  on a background worker thread, so the tuner's top-N candidates are
+  compiled while training continues under the current plan;
+* :meth:`get` — the switch path — returns a ready executable (warm hit),
+  waits for an in-flight background compile (precompile hit), or compiles
+  synchronously as the last resort (cold miss, counted against the hit
+  rate the benchmark trajectory tracks).
+
+The cache is engine-agnostic: it is constructed with a ``program_factory``
+returning ``(jittable_fn, example_args)`` for a given
+:class:`~repro.core.schedule.TabularPlan`, which is how the reference and
+``shard_map`` executors (and tests) plug in.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import Future, ThreadPoolExecutor
+import dataclasses
+import hashlib
+import threading
+import time
+from typing import Any, Callable, Iterable
+
+from repro.core.schedule import TabularPlan
+
+__all__ = ["CompiledEntry", "CacheStats", "CompiledStepCache"]
+
+
+@dataclasses.dataclass
+class CompiledEntry:
+    key: tuple
+    compiled: Any  # the AOT-compiled executable (callable)
+    compile_seconds: float
+    source: str  # "precompile" | "demand"
+
+
+@dataclasses.dataclass
+class CacheStats:
+    gets: int = 0
+    warm_hits: int = 0  # entry ready at get() time
+    inflight_hits: int = 0  # background compile already running; get() joined it
+    cold_misses: int = 0  # nothing in flight: compiled synchronously
+    precompile_requests: int = 0
+    precompiled: int = 0  # background compiles completed
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of dispatches served by the precompile pipeline (ready
+        or in flight) rather than a synchronous cold compile."""
+        return (self.warm_hits + self.inflight_hits) / self.gets if self.gets else 0.0
+
+
+class CompiledStepCache:
+    def __init__(
+        self,
+        program_factory: Callable[[TabularPlan], tuple[Callable, tuple]],
+        max_workers: int = 1,
+    ) -> None:
+        self._factory = program_factory
+        self._lock = threading.Lock()
+        self._entries: dict[tuple, CompiledEntry] = {}
+        self._inflight: dict[tuple, Future] = {}
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="plan-precompile"
+        )
+        self.stats = CacheStats()
+
+    # -- identity -------------------------------------------------------------
+
+    @staticmethod
+    def plan_key(table: TabularPlan) -> tuple:
+        """Lowered-plan identity: schedule coordinates + grid digest.
+
+        Two plans with the same coordinates but different lowerings (e.g. a
+        ``+Wopt`` refinement) must not share an executable — the engine's
+        unrolled tick program IS the grid."""
+        p = table.plan
+        digest = hashlib.sha1(table.grid.tobytes()).hexdigest()[:16]
+        return (
+            p.name,
+            p.kind,
+            p.num_stages,
+            p.num_microbatches,
+            p.k,
+            p.micro_batch_size,
+            p.num_virtual,
+            tuple(p.extra_warmup),
+            digest,
+        )
+
+    # -- compilation ----------------------------------------------------------
+
+    def _compile(self, table: TabularPlan, source: str) -> CompiledEntry:
+        key = self.plan_key(table)
+        t0 = time.perf_counter()
+        fn, example_args = self._factory(table)
+        compiled = fn.lower(*example_args).compile()
+        entry = CompiledEntry(
+            key=key,
+            compiled=compiled,
+            compile_seconds=time.perf_counter() - t0,
+            source=source,
+        )
+        with self._lock:
+            self._entries[key] = entry
+            self._inflight.pop(key, None)
+            if source == "precompile":
+                self.stats.precompiled += 1
+        return entry
+
+    def precompile(self, tables: Iterable[TabularPlan]) -> int:
+        """Submit background AOT compiles for every not-yet-known table;
+        returns how many were actually submitted."""
+        submitted = 0
+        for table in tables:
+            key = self.plan_key(table)
+            with self._lock:
+                if key in self._entries or key in self._inflight:
+                    continue
+                self.stats.precompile_requests += 1
+                fut = self._pool.submit(self._compile, table, "precompile")
+                self._inflight[key] = fut
+                submitted += 1
+        return submitted
+
+    def get(self, table: TabularPlan) -> CompiledEntry:
+        """The switch path: ready entry, else join the in-flight background
+        compile, else compile synchronously (cold)."""
+        key = self.plan_key(table)
+        with self._lock:
+            self.stats.gets += 1
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.warm_hits += 1
+                return entry
+            fut = self._inflight.get(key)
+            if fut is not None:
+                self.stats.inflight_hits += 1
+        if fut is not None:
+            return fut.result()
+        entry = self._compile(table, "demand")
+        with self._lock:
+            self.stats.cold_misses += 1
+        return entry
+
+    def contains(self, table: TabularPlan) -> bool:
+        """True iff a dispatch right now would be a warm hit."""
+        with self._lock:
+            return self.plan_key(table) in self._entries
+
+    def background(self, fn: Callable[[], Any]) -> Future:
+        """Run an arbitrary warmup job on the precompile worker (used by the
+        runtime to AOT-compile re-stacking programs alongside step
+        programs); tracked by :meth:`wait_idle` via its own future."""
+        fut = self._pool.submit(fn)
+        key = ("__background__", id(fut))
+        with self._lock:
+            self._inflight[key] = fut
+
+        def _done(_f: Future) -> None:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+        fut.add_done_callback(_done)
+        return fut
+
+    def wait_idle(self) -> None:
+        """Block until every background compile has finished (benchmarks use
+        this to measure genuinely warm switch latency)."""
+        while True:
+            with self._lock:
+                futs = list(self._inflight.values())
+            if not futs:
+                return
+            for f in futs:
+                f.result()
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)

@@ -79,3 +79,62 @@ def test_checkpoint_policy_ordering():
     full.checkpoint_policy = "full"
     plan = make_plan(4, 16, 2, micro_batch_size=4)
     assert full.peak_bytes(plan) > stage_input.peak_bytes(plan)
+
+
+# -- saved-residual zero-bubble pricing (ROADMAP open item: price the vjp
+# -- residual variant BEFORE anyone implements the engine change) ------------
+
+
+def _model_policy(zb_policy, S=4):
+    return MemoryModel.uniform(
+        num_stages=S, seq_len=128, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=256.0,
+        layer_act_bytes_per_token=128.0, num_layers_per_stage=2,
+        zb_policy=zb_policy,
+    )
+
+
+def test_saved_residual_surcharge_is_exactly_the_residual_bytes():
+    """Per live zb slot, saved_residual keeps B's vjp residuals (one layer
+    activation per stage layer) on top of the double-remat slot; non-zb
+    slots and "full" checkpointing are unaffected (residuals are already
+    resident there)."""
+    dr, sr = _model_policy("double_remat"), _model_policy("saved_residual")
+    b = 4
+    tokens = b * dr.seq_len
+    spec = dr.stages[0]
+    expected = spec.layer_act_bytes_per_token * spec.num_layers * tokens
+    assert sr.slot_bytes(0, b, zb=True) - dr.slot_bytes(0, b, zb=True) == expected
+    assert sr.slot_bytes(0, b, zb=False) == dr.slot_bytes(0, b, zb=False)
+    dr_full, sr_full = _model_policy("double_remat"), _model_policy("saved_residual")
+    dr_full.checkpoint_policy = sr_full.checkpoint_policy = "full"
+    assert sr_full.slot_bytes(0, b, zb=True) == dr_full.slot_bytes(0, b, zb=True)
+
+
+def test_saved_residual_rejected_under_limit_that_admits_double_remat():
+    """The whole point of pricing first: a limit curve sized to admit the
+    engine's double-remat H2 must shrink (or refuse) the saved-residual
+    variant's candidates — the enumeration rejects it before any engine
+    work happens."""
+    S, B = 4, 32
+    dr, sr = _model_policy("double_remat", S), _model_policy("saved_residual", S)
+    h1 = make_plan(S, B, 1, micro_batch_size=1, kind="zb_h1")
+    # one extra double-remat slot of headroom per stage: admits w=1 under
+    # double_remat, not under the residual-fattened slot
+    limits = [
+        p + 1.5 * dr.slot_bytes(s, 1, True)
+        for s, p in enumerate(dr.peak_bytes_per_stage(h1))
+    ]
+    dr_cands = enumerate_candidates(S, B, dr, limits, max_k=1, kinds=("zb_h2",))
+    sr_cands = enumerate_candidates(S, B, sr, limits, max_k=1, kinds=("zb_h2",))
+    assert dr_cands and max(dr_cands[0].extra_warmup) >= 1
+    sr_names = {c.name for c in sr_cands}
+    assert not (sr_names & {c.name for c in dr_cands}), (
+        "saved_residual admitted the same deep-warmup plan the limit only "
+        "affords under double_remat"
+    )
+
+
+def test_unknown_zb_policy_fails_closed():
+    with pytest.raises(ValueError, match="zb_policy"):
+        _model_policy("store_everything")

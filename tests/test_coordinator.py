@@ -113,3 +113,52 @@ def test_run_summary_throughput_zero_time_edge():
     assert empty.throughput == 0.0  # no division by zero
     some = RunSummary(iterations=[], tuning=[], total_time=2.0, total_samples=8)
     assert some.throughput == pytest.approx(4.0)
+
+
+def test_passive_telemetry_drives_tuning_overhead_to_zero():
+    """With the runtime telemetry bus feeding the profiler windows, a
+    passive tuner stops suspending the pipeline: after the first round
+    (cold windows), every probe is skipped and the charged tuning_overhead
+    of later rounds is exactly 0 — while the legacy (non-passive) run
+    keeps paying the full suspension at every interval."""
+    from repro.runtime import PassiveLinkFeed, TelemetryBus
+
+    S = 4
+    net = uniform_network(S, lambda: StableTrace(2.0))
+    overhead = 7.5
+
+    def run(passive):
+        prof = NetworkProfiler(net, window=4)
+        tuner = AutoTuner(
+            _cands(S), _costs_for(S), prof,
+            passive_staleness=1e9 if passive else None,
+        )
+        bus = None
+        if passive:
+            bus = TelemetryBus()
+            bus.subscribe(PassiveLinkFeed(prof))
+        coord = Coordinator(
+            tuner, net, global_batch=8, tuning_interval=0.0,  # tune every iter
+            tuning_overhead=overhead, telemetry=bus,
+        )
+        return coord.run(4)
+
+    legacy = run(passive=False)
+    passive = run(passive=True)
+    assert len(legacy.tuning) == len(passive.tuning) == 4
+
+    # legacy: every round probes every link and pays the full suspension
+    for rec in legacy.tuning:
+        assert rec.probes_skipped == 0 and rec.probe_fraction == 1.0
+    assert legacy.total_tuning_overhead == pytest.approx(overhead * 4)
+
+    # passive: the first round probes once per link (cold windows), then the
+    # per-iteration feed keeps every window fresh -> zero probes, zero charge
+    first, rest = passive.tuning[0], passive.tuning[1:]
+    assert first.probes_run > 0  # the fallback still works when stale
+    for rec in rest:
+        assert rec.probes_run == 0 and rec.probe_fraction == 0.0
+    assert passive.total_tuning_overhead == pytest.approx(
+        overhead * first.probe_fraction
+    )
+    assert passive.total_tuning_overhead < 0.2 * legacy.total_tuning_overhead

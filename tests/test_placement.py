@@ -95,6 +95,79 @@ def test_non_zb_plans_pass_through_unchanged():
     assert optimize_weight_placement(plan, SKEWED, _BW) is plan
 
 
+@pytest.mark.parametrize(
+    "kind,kw",
+    [
+        ("zb_h1", {}),
+        ("zb_h2", dict(extra_warmup=2)),
+        ("zb_h2", dict(extra_warmup=(3, 2, 1, 1))),
+        ("interleaved_zb", dict(num_virtual=2)),
+    ],
+)
+def test_incremental_makespan_equals_full_resimulation(kind, kw):
+    """The suffix-only evaluator must price every legal W move exactly like
+    a from-scratch rebuild + discrete-event re-simulation (the ROADMAP
+    incremental-makespan item's correctness contract)."""
+    from repro.core.network import Network
+    from repro.core.placement import (
+        IncrementalMakespan,
+        _move_window,
+        _rebuild,
+        _with_move,
+    )
+    from repro.core.schedule import Op
+
+    plan = make_plan(S, M, 1, kind=kind, **kw)
+    net = Network(
+        default=StableTrace(float("inf")),
+        links={k: StableTrace(bw) for k, bw in _BW.items()},
+    )
+    ev = IncrementalMakespan(plan, SKEWED, net)
+    orders = [list(o) for o in plan.orders]
+    base_full = simulate_plan(_rebuild(plan, orders), SKEWED, net).pipeline_length
+    assert ev.makespan == pytest.approx(base_full, rel=1e-12)
+    checked = 0
+    for s in range(S):
+        order = orders[s]
+        for i, t in enumerate(order):
+            if t.op != Op.BWD_WEIGHT or i % 3:
+                continue  # every 3rd W keeps the sweep fast but representative
+            lo, hi = _move_window(order, i)
+            for j in {lo, (lo + hi) // 2, hi}:
+                if j == i:
+                    continue
+                trial = list(orders)
+                trial[s] = _with_move(order, i, j)
+                want = simulate_plan(_rebuild(plan, trial), SKEWED, net).pipeline_length
+                got = ev.evaluate(trial, s, min(i, j))
+                assert got == pytest.approx(want, rel=1e-12), (kind, s, i, j)
+                checked += 1
+    assert checked >= 8  # the sweep actually exercised moves
+
+
+@pytest.mark.parametrize(
+    "kind,kw",
+    [
+        ("zb_h2", dict(extra_warmup=2)),
+        ("zb_h2", dict(extra_warmup=(3, 2, 1, 1))),
+        ("interleaved_zb", dict(num_virtual=2)),
+    ],
+)
+def test_incremental_search_matches_full_search(kind, kw):
+    """End to end: the greedy search driven by the incremental evaluator
+    lands on exactly the same placement (and simulated length) as the
+    full-resimulation search it replaced."""
+    plan = make_plan(S, M, 1, kind=kind, **kw)
+    inc = optimize_weight_placement(plan, SKEWED, _BW, evaluator="incremental")
+    full = optimize_weight_placement(plan, SKEWED, _BW, evaluator="full")
+    assert [[t.key() for t in o] for o in inc.orders] == [
+        [t.key() for t in o] for o in full.orders
+    ]
+    li = simulate_plan(inc, SKEWED, _net()).pipeline_length
+    lf = simulate_plan(full, SKEWED, _net()).pipeline_length
+    assert li == pytest.approx(lf, rel=1e-12)
+
+
 def test_tuner_dispatches_refined_table():
     """With refine_weight_placement=True the tuner's dispatched table is the
     W-optimized lowering of the chosen zb plan, not the candidate's own."""
