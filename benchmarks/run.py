@@ -51,16 +51,22 @@ def dry_run() -> int:
     S, M = 4, 8
     costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
     net = uniform_network(S, lambda: StableTrace(4.0))
-    for kind, k, v, w in [
-        ("kfkb", 1, 1, 0),
+    # one cell per REGISTERED kind (so a newly registered kind simulates in
+    # this smoke automatically), plus hand-picked composition extras
+    from repro.core.kinds import get_kind, registered_kinds
+
+    cells = []
+    for kind in registered_kinds():
+        spec = get_kind(kind)
+        cells.append(
+            (kind, 1, spec.virtual_axis((2,))[0], 1 if spec.requires_warmup else 0)
+        )
+    cells += [
         ("kfkb", 2, 1, 0),
-        ("zb_h1", 1, 1, 0),
-        ("zb_h2", 1, 1, 1),
         ("zb_h2", 1, 1, (0, 1, 2, 1)),  # heterogeneous warmup vector
-        ("interleaved", 1, 2, 0),
-        ("interleaved_zb", 1, 2, 0),
         ("interleaved_zb", 1, 2, (1, 0, 2, 1)),  # interleaved H2
-    ]:
+    ]
+    for kind, k, v, w in cells:
         plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
         res = simulate_plan(plan, costs, net)
         print(f"[dry-run] {plan.name:28s} length={res.pipeline_length:7.2f} "

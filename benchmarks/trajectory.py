@@ -76,6 +76,11 @@ GATES = {
     "fig2_gain_k4": ("higher", REL_TOL),
     "vector_w_gain": ("higher", REL_TOL),
     "tuner_preempted_hours_beat_1f1b": ("higher", REL_TOL),
+    # ZB-V (PR 5): the registry-only member's controllable-memory trade —
+    # makespan parity with 1F1B under preemption at ~half the plain
+    # interleaved peak-live count (both deterministic simulation)
+    "zbv_preempted_gain_vs_1f1b": ("higher", REL_TOL),
+    "zbv_peak_live_ratio_vs_interleaved": ("higher", REL_TOL),
     "sim_events_per_sec": ("higher", 0.5),
     # live plan-switch runtime (PR 4): the adaptive loop on the real engine
     "runtime_kind_switches": ("higher", 0.0),
@@ -131,6 +136,36 @@ def vector_w_gain() -> dict:
         "vector_w_len": len_v,
         "scalar_w_len": len_s,
         "vector_w_gain": len_s / len_v,
+    }
+
+
+def zbv_ratios() -> dict:
+    """ZB-V (the registry-only family member) on the pinned preemption
+    cell: simulated makespan vs 1F1B (>= 1.0 means the V is no worse
+    despite its capped memory) and worst-device peak live vs the
+    equal-(S, M, k) plain interleaved plan (> 1.0 means cheaper)."""
+    from repro.core.schedule import peak_live_activations
+
+    S, M = 4, 16
+    costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+
+    def trace():
+        return PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+
+    len_1f1b = simulate_plan(
+        make_plan(S, M, 1), costs, uniform_network(S, trace)
+    ).pipeline_length
+    zbv = make_plan(S, M, 1, kind="zbv")
+    len_zbv = simulate_plan(zbv, costs, uniform_network(S, trace)).pipeline_length
+    peak_zbv = max(peak_live_activations(zbv))
+    peak_il = max(
+        peak_live_activations(make_plan(S, M, 1, kind="interleaved", num_virtual=2))
+    )
+    return {
+        "zbv_preempted_len": len_zbv,
+        "zbv_preempted_gain_vs_1f1b": len_1f1b / len_zbv,
+        "zbv_peak_live": peak_zbv,
+        "zbv_peak_live_ratio_vs_interleaved": peak_il / peak_zbv,
     }
 
 
@@ -256,6 +291,7 @@ def collect(skip_runtime: bool = False) -> dict:
     metrics = {}
     metrics.update(fig2_ratios())
     metrics.update(vector_w_gain())
+    metrics.update(zbv_ratios())
     metrics.update(tuner_switch_trace())
     metrics.update(simulator_throughput())
     if not skip_runtime:

@@ -24,6 +24,7 @@ from repro.core import (
     Network,
     NetworkProfiler,
     RegimeTrace,
+    ScheduleSpec,
     make_plan,
 )
 
@@ -42,7 +43,8 @@ def main():
     cands = []
     for k in (1, 2, 3, 4, 6):
         b = max(6 // k, 1)
-        cands.append(Candidate(k, b, GB // b, make_plan(S, GB // b, k, micro_batch_size=b), 0.0))
+        spec = ScheduleSpec(kind="kfkb", k=k, micro_batch_size=b)
+        cands.append(Candidate(k, b, GB // b, make_plan(S, GB // b, spec=spec), 0.0))
 
     def link(a, b):
         seed = 31 * a + b

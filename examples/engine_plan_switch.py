@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ScheduleSpec
 from repro.core.schedule import make_plan
 from repro.data import SyntheticTextDataset
 from repro.models.common import ModelConfig
@@ -49,7 +50,8 @@ mesh = jax.make_mesh((S,), ("stage",))
 # ALL candidate plans compiled up front (the Ada-Grouper scheduler keeps
 # every task graph alive, §3.2.1)
 engines = {
-    k: make_pipeline_step(staged, make_plan(S, M, k), mesh) for k in (1, 2)
+    k: make_pipeline_step(staged, make_plan(S, M, spec=ScheduleSpec(k=k)), mesh)
+    for k in (1, 2)
 }
 
 

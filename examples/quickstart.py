@@ -1,9 +1,10 @@
 """Quickstart: the Ada-Grouper core in ~60 lines.
 
-Builds the candidate set on the §4.2 memory-limit curve, estimates every
-plan's pipeline length under a preempted network, and lets the online tuner
-pick — then shows the same 2F2B plan executing REAL gradients through the
-single-device reference pipeline engine.
+Builds the candidate set on the §4.2 memory-limit curve from a declarative
+:class:`SearchSpace`, estimates every plan's pipeline length under a
+preempted network, and lets the online tuner pick — then shows the same
+2F2B plan (addressed by its :class:`ScheduleSpec` coordinates) executing
+REAL gradients through the single-device reference pipeline engine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,6 +18,8 @@ from repro.core import (
     BurstyTrace,
     MemoryModel,
     NetworkProfiler,
+    ScheduleSpec,
+    SearchSpace,
     StageCosts,
     enumerate_candidates,
     simulate_plan,
@@ -25,13 +28,16 @@ from repro.core import (
 
 S, GLOBAL_BATCH = 4, 32
 
-# 1. candidate (k, b) pairs on the memory-limit curve -------------------------
+# 1. candidates on the memory-limit curve, from a declarative SearchSpace ----
 memory = MemoryModel.uniform(
     num_stages=S, seq_len=128, param_bytes=50e6, optimizer_bytes=100e6,
     grad_bytes=50e6, stage_input_bytes_per_token=2048.0,
     layer_act_bytes_per_token=512.0, num_layers_per_stage=4,
 )
-cands = enumerate_candidates(S, GLOBAL_BATCH, memory, memory_limit_bytes=2e9, max_k=4)
+cands = enumerate_candidates(
+    S, GLOBAL_BATCH, memory, memory_limit_bytes=2e9,
+    space=SearchSpace(kinds=("kfkb",), max_k=4),
+)
 print("candidates on the memory-limit curve:")
 for c in cands:
     print(f"  {c.name:16s} M={c.num_microbatches:3d}  peak={c.est_peak_bytes/1e9:.2f} GB")
@@ -65,8 +71,16 @@ M, b, T = 4, 2, 16
 rng = np.random.default_rng(0)
 tokens = jnp.asarray(rng.integers(0, 256, (M, b, T)), jnp.int32)
 labels = jnp.asarray(rng.integers(0, 256, (M, b, T)), jnp.int32)
-loss, grads = reference_pipeline_grads(staged, params, tokens, labels, make_plan(S, M, 2))
+plan = make_plan(S, M, spec=ScheduleSpec(kind="kfkb", k=2))
+loss, grads = reference_pipeline_grads(staged, params, tokens, labels, plan)
 oracle = sum(staged.full_loss(params, tokens[m], labels[m]) for m in range(M)) / M
 print(f"\n2F2B pipeline loss {float(loss):.6f} == direct loss {float(oracle):.6f}")
 assert abs(float(loss) - float(oracle)) < 1e-5
+
+# 4. a registered kind is a first-class citizen: ZB-V (V-shaped placement,
+# ~half the interleaved peak) addressed purely by its ScheduleSpec
+zbv = make_plan(S, M, spec=ScheduleSpec(kind="zbv"))
+sim_zbv = simulate_plan(zbv, costs_for(tuner.current), net)
+print(f"{zbv.name}: simulated length {sim_zbv.pipeline_length:.3f}s, "
+      f"peak live {max(t.slot for o in zbv.orders for t in o) + 1} slots")
 print("quickstart OK")

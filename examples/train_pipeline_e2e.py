@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.gpt import GPT_CONFIGS
+from repro.core import ScheduleSpec
 from repro.core.schedule import make_plan
 from repro.data import SyntheticTextDataset
 from repro.optim import linear_warmup_cosine, make_optimizer
@@ -64,7 +65,7 @@ def main():
     opt = make_optimizer("adamw", linear_warmup_cosine(3e-3, 20, args.steps))
     state = create_train_state(params, opt)
     mesh = jax.make_mesh((S,), ("stage",))
-    engine = make_pipeline_step(staged, make_plan(S, M, k), mesh)
+    engine = make_pipeline_step(staged, make_plan(S, M, spec=ScheduleSpec(k=k)), mesh)
 
     @jax.jit
     def step_fn(state, tokens, labels):

@@ -15,6 +15,15 @@ from repro.core.candidates import (
 )
 from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
 from repro.core.costmodel import CostModel, closed_form_1f1b_length, link_probe_specs
+from repro.core.kinds import (
+    KindSpec,
+    ScheduleSpec,
+    SearchSpace,
+    get_kind,
+    known_kinds,
+    register_kind,
+    registered_kinds,
+)
 from repro.core.memory_model import (
     ZB_SLOT_POLICIES,
     MemoryModel,
@@ -56,6 +65,13 @@ from repro.core.tuner import AutoTuner, TuningRecord
 
 __all__ = [
     "Candidate",
+    "KindSpec",
+    "ScheduleSpec",
+    "SearchSpace",
+    "get_kind",
+    "known_kinds",
+    "register_kind",
+    "registered_kinds",
     "enumerate_candidates",
     "largest_admissible_warmup",
     "Coordinator",

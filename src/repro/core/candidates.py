@@ -1,40 +1,37 @@
 """§4.2 candidate enumeration: the memory-limit (Pareto) curve over (kind, k, b).
 
-With a fixed global batch ``B``, a plan is identified by its schedule
-``kind`` (kFkB, zero-bubble, interleaved), the group count ``k`` and
-micro-batch size ``b`` (``M = B / b`` micro-batches, ``k | M``).  Feasible
-combinations lie under the memory-limit curve; interior points
-under-utilize device memory (point *A* of Fig 3) and points above it OOM
-(point *B*).  Only curve points (like *C*) are kept: for each (kind, k)
-from 1 upwards, greedily take the **largest** feasible ``b``.
+With a fixed global batch ``B``, a plan is identified by its
+:class:`~repro.core.kinds.ScheduleSpec` — schedule ``kind``, group count
+``k``, virtual degree, per-stage warmup vector and micro-batch size ``b``
+(``M = B / b`` micro-batches, ``k | M``).  Feasible combinations lie under
+the memory-limit curve; interior points under-utilize device memory (point
+*A* of Fig 3) and points above it OOM (point *B*).  Only curve points
+(like *C*) are kept: for each (kind, k) from 1 upwards, greedily take the
+**largest** feasible ``b``.
 
 The memory limit itself is a per-stage *curve* (``memory_limit_bytes``
 accepts a scalar or one entry per stage): real pipelines are
 heterogeneous — the first stage carries the embedding, the last the logits
 head — so admissibility is judged stage by stage.
 
-Warmup-capable kinds (``zb_h2``, and ``interleaved_zb`` composed with
-warmup) add one more memory-priced axis: the per-stage extra-warmup depth
-``w[s]``.  Peak bytes at a stage are monotone non-decreasing in its own
-``w[s]`` and independent of every other stage's (the builder cap is
-per-stage), so the curve point is found **greedily per stage**: each stage
-takes the largest ``w[s]`` its own limit admits (closed-form via
-:meth:`MemoryModel.bytes_at_live` — no plan needs building per probe).
-This replaces the old global binary search, whose single scalar ``w`` was
-pinned by the tightest stage; on a memory-skewed pipeline the vector
-squeezes warmup depth out of every stage with headroom.  A (k, b) where no
-stage admits even ``w[s] = 1`` — or where the group count leaves no warmup
-headroom, making H2 degenerate to H1 — yields no H2 candidate at all,
-which is how the tuner "refuses" H2 and falls back to H1 under a tight
-limit.
+The per-kind search axes come from the registry, not from code here: each
+registered :class:`~repro.core.kinds.KindSpec` enumerates its own
+:meth:`~repro.core.kinds.KindSpec.search_specs` at a given ``(k, b)`` —
+virtual degrees for interleaved-capable kinds (pinned for ZB-V), the
+greedily-priced per-stage warmup vector ``w[s]`` for warmup-capable ones
+(closed-form via the kind's ``peak_live_groups`` row; a warmup-REQUIRING
+kind like ``zb_h2`` contributes no candidate when no stage admits
+``w[s] = 1``, which is how the tuner "refuses" H2 and falls back to H1
+under a tight limit).  Registering a kind is therefore sufficient for the
+search to cover it — no edits here.
 
 Duplicated (kind, k, b) never arise (b is a function of (kind, k) on the
 curve), but two k values can map to the same b when memory is
 activation-light; both are kept — they are genuinely different schedules
 with different overlap behaviour.  Schedule kinds beyond kFkB are opt-in
-via ``kinds=`` so the paper's original (k, b)-only search stays the
-default; passing e.g. ``kinds=("kfkb", "zb_h1", "zb_h2")`` lets the
-adaptive loop switch schedule *kind* under preemption, not just ``k``.
+via the :class:`~repro.core.kinds.SearchSpace` (or the legacy ``kinds=``
+kwarg, which builds one) so the paper's original (k, b)-only search stays
+the default.
 """
 
 from __future__ import annotations
@@ -42,16 +39,25 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
-from repro.core.memory_model import MemoryModel, limit_curve
-from repro.core.schedule import (
-    INTERLEAVED_KINDS,
-    PLAN_KINDS,
-    SchedulePlan,
-    TabularPlan,
-    make_plan,
+from repro.core.kinds import (
+    ScheduleSpec,
+    SearchSpace,
+    admissible_warmup,
+    get_kind,
+    known_kinds,
+    registered_kinds,
+    resolve_alias,
 )
+from repro.core.memory_model import MemoryModel, limit_curve
+from repro.core.schedule import SchedulePlan, TabularPlan, make_plan
 
-__all__ = ["Candidate", "enumerate_candidates", "divisors", "largest_admissible_warmup"]
+__all__ = [
+    "Candidate",
+    "SearchSpace",
+    "enumerate_candidates",
+    "divisors",
+    "largest_admissible_warmup",
+]
 
 
 @dataclasses.dataclass
@@ -79,6 +85,12 @@ class Candidate:
         return self.plan.extra_warmup
 
     @property
+    def spec(self) -> ScheduleSpec:
+        """The candidate's normalized schedule coordinates — shared with
+        the tuning record, the compile-cache key and the runtime."""
+        return self.plan.spec
+
+    @property
     def table(self) -> TabularPlan:
         """The candidate's lowered :class:`TabularPlan` (cached on the plan —
         candidates are static, so the tuner and engines lower each at most
@@ -95,19 +107,22 @@ def _build(
     plan_factory: Callable[..., SchedulePlan],
     num_stages: int,
     M: int,
-    k: int,
-    b: int,
-    kind: str,
-    num_virtual: int,
-    extra_warmup: int | Sequence[int] = 0,
+    spec: ScheduleSpec,
 ) -> SchedulePlan:
-    if kind == "kfkb" and num_virtual == 1:
+    if (
+        spec.kind in registered_kinds()
+        and get_kind(spec.kind).legacy_factory
+        and spec.num_virtual == 1
+        and not max(spec.extra_warmup)
+    ):
         # the paper's original search path — keep legacy factories working
-        return plan_factory(num_stages, M, k, micro_batch_size=b)
-    kw = dict(kind=kind, num_virtual=num_virtual)
-    if (max(extra_warmup) if isinstance(extra_warmup, (tuple, list)) else extra_warmup):
-        kw["extra_warmup"] = extra_warmup
-    return plan_factory(num_stages, M, k, micro_batch_size=b, **kw)
+        return plan_factory(num_stages, M, spec.k, micro_batch_size=spec.micro_batch_size)
+    kw = dict(kind=spec.kind, num_virtual=spec.num_virtual)
+    if max(spec.extra_warmup):
+        kw["extra_warmup"] = spec.extra_warmup
+    return plan_factory(
+        num_stages, M, spec.k, micro_batch_size=spec.micro_batch_size, **kw
+    )
 
 
 def largest_admissible_warmup(
@@ -123,35 +138,18 @@ def largest_admissible_warmup(
 ) -> tuple[int, ...]:
     """Greedy per-stage warmup vector on the memory-limit curve.
 
-    For each stage independently, find the largest ``w[s]`` in
-    ``[0, max_extra_warmup]`` whose predicted peak live slot count
-    (base-depth + ``w[s]``, clamped at the stage's total group budget)
-    still fits ``limits[s]``, using the closed-form stage byte curve.
-    Stages are independent because the builders cap issuance per stage, so
-    no joint search is needed — this is the greedy that replaces the old
-    global scalar binary search.
+    Back-compat wrapper over :func:`repro.core.kinds.admissible_warmup`:
+    the coordinates select the registered warmup-capable kind whose
+    ``peak_live_groups`` row matches (``zb_h2`` for flat plans,
+    ``interleaved_zb`` for virtual-stage ones), and each stage
+    independently takes the largest ``w[s]`` its own limit admits via the
+    closed-form stage byte curve — no plan is built per probe.
     """
-    S, v = num_stages, num_virtual
-    G = (M + k - 1) // k
-    out = []
-    for s in range(S):
-        if v > 1:
-            base_groups = min(2 * (S - s - 1) + (v - 1) * S + 1, G * v)
-            group_budget = G * v
-        else:
-            base_groups = min(S - s, G)
-            group_budget = G
-        w_s = 0
-        for w in range(1, max_extra_warmup + 1):
-            groups = min(base_groups + w, group_budget)
-            if groups == min(base_groups + w_s, group_budget):
-                break  # clamped: deeper w buys nothing at this stage
-            live = min(groups * k, M * v)
-            if memory_model.bytes_at_live(s, b, live, zb) > limits[s]:
-                break
-            w_s = w
-        out.append(w_s)
-    return tuple(out)
+    kind = "interleaved_zb" if num_virtual > 1 else "zb_h2"
+    return admissible_warmup(
+        get_kind(kind), num_stages, M, k, b, num_virtual,
+        memory_model, limits, max_extra_warmup, zb_pricing=zb,
+    )
 
 
 def enumerate_candidates(
@@ -165,67 +163,84 @@ def enumerate_candidates(
     kinds: Sequence[str] = ("kfkb",),
     virtual_degrees: Sequence[int] = (2,),
     max_extra_warmup: int | None = None,
+    space: SearchSpace | None = None,
 ) -> list[Candidate]:
     """Enumerate the memory-limit-curve candidates.
 
-    ``min_microbatches`` (default: ``num_stages``) rejects plans that cannot
-    even fill the pipeline once — the paper always injects at least one
-    micro-batch per stage.  ``kinds`` selects the schedule families searched
-    (one curve point per (kind, k), plus one per (k, v) for interleaved
-    kinds, with ``virtual_degrees`` listing the chunk counts tried);
-    infeasible combinations (e.g. interleaved divisibility) are skipped
-    silently.  ``memory_limit_bytes`` may be a scalar or a per-stage curve.
+    The search axes come from one :class:`~repro.core.kinds.SearchSpace`
+    passed as ``space=``; the legacy kwargs (``kinds=``,
+    ``virtual_degrees=``, ``max_k=``, ``min_microbatches=``,
+    ``max_extra_warmup=``) remain accepted and simply build one —
+    conformance-tested to produce identical candidates.
 
-    For the warmup-capable kinds the per-stage extra-warmup depth ``w[s]``
-    is itself memory-priced: each stage greedily takes the largest
-    ``w[s] <= max_extra_warmup`` (default ``S - 1``, the full warmup-bubble
-    depth) its own limit admits (see :func:`largest_admissible_warmup`).
-    When no stage admits ``w[s] = 1``, ``zb_h2`` contributes no candidate
-    at that k — the tuner then falls back to the H1 plans in the set —
-    while ``interleaved_zb`` falls back to its plain (w = 0) form.
+    ``min_microbatches`` (default: ``num_stages``) rejects plans that
+    cannot even fill the pipeline once — the paper always injects at least
+    one micro-batch per stage.  Per ``(kind, k)`` (times the kind's own
+    extra axes: virtual degree, memory-priced warmup vector — see
+    :meth:`~repro.core.kinds.KindSpec.search_specs`) the largest feasible
+    ``b`` on the limit curve is kept; infeasible combinations (e.g.
+    interleaved divisibility) are skipped silently, unknown kind NAMES
+    fail loudly against the registry.  ``memory_limit_bytes`` may be a
+    scalar or a per-stage curve.
     """
-    if min_microbatches is None:
-        min_microbatches = num_stages
-    if max_extra_warmup is None:
-        max_extra_warmup = max(num_stages - 1, 1)
-    known = PLAN_KINDS + ("1f1b", "gpipe")
-    for kind in kinds:
+    if space is None:
+        space = SearchSpace(
+            kinds=tuple(kinds),
+            virtual_degrees=tuple(virtual_degrees),
+            max_k=max_k,
+            min_microbatches=min_microbatches,
+            max_extra_warmup=max_extra_warmup,
+        )
+    min_mb = space.min_microbatches
+    if min_mb is None:
+        min_mb = num_stages
+    max_w = space.max_extra_warmup
+    if max_w is None:
+        max_w = max(num_stages - 1, 1)
+    known = known_kinds()  # registry members + aliases — never a literal
+    for kind in space.kinds:
         if kind not in known:  # fail loudly — the except below is only for
             # per-(k, b) infeasibility, not misconfiguration
             raise ValueError(f"unknown schedule kind {kind!r}; expected one of {known}")
     limits = limit_curve(memory_limit_bytes, num_stages)
     out: list[Candidate] = []
-    ks = range(1, (max_k or global_batch) + 1)
-    for kind in kinds:
-        vs = tuple(virtual_degrees) if kind in INTERLEAVED_KINDS else (1,)
-        for v in vs:
+    ks = range(1, (space.max_k or global_batch) + 1)
+    for name in space.kinds:
+        resolved, _ = resolve_alias(name, 1, global_batch)
+        kspec = get_kind(resolved)
+        for v in kspec.virtual_axis(space.virtual_degrees):
             for k in ks:
-                best: Candidate | None = None
-                # largest feasible b for this (kind, k, v), walking b downwards
+                # one curve point PER search point the kind enumerates at
+                # (k, b) — the built-in kinds emit one per (kind, v), but a
+                # custom ``search_specs_fn`` may emit several (e.g. multiple
+                # warmup operating points); each takes its own largest
+                # feasible b, keyed by its position in the enumerator's list
+                found: dict[int, Candidate] = {}
                 for b in sorted(divisors(global_batch), reverse=True):
                     M = global_batch // b
-                    if M % k != 0 or M < min_microbatches:
+                    if M % k != 0 or M < min_mb:
                         continue
-                    try:
-                        if kind in ("zb_h2", "interleaved_zb"):
-                            w_vec = largest_admissible_warmup(
-                                num_stages, M, k, b, v, True,
-                                memory_model, limits, max_extra_warmup,
-                            )
-                            if kind == "zb_h2" and max(w_vec) < 1:
-                                continue  # no stage admits any warmup: refuse H2
-                            plan = _build(
-                                plan_factory, num_stages, M, k, b, kind, v,
-                                extra_warmup=w_vec,
-                            )
-                        else:
-                            plan = _build(plan_factory, num_stages, M, k, b, kind, v)
-                    except ValueError:
-                        continue  # e.g. interleaved group-divisibility
-                    peaks = memory_model.peak_bytes_per_stage(plan)
-                    if all(p <= lim for p, lim in zip(peaks, limits)):
-                        best = Candidate(k, b, M, plan, max(peaks))
-                        break  # first (largest) feasible b — the curve point
-                if best is not None:
-                    out.append(best)
+                    specs = kspec.search_specs(
+                        num_stages=num_stages,
+                        num_microbatches=M,
+                        k=k,
+                        micro_batch_size=b,
+                        virtual_degrees=(v,),
+                        memory_model=memory_model,
+                        limits=limits,
+                        max_extra_warmup=max_w,
+                    )
+                    for i, spec in enumerate(specs):
+                        if i in found:
+                            continue  # this point already has its curve b
+                        if name != spec.kind:  # alias: let make_plan force k
+                            spec = dataclasses.replace(spec, kind=name)
+                        try:
+                            plan = _build(plan_factory, num_stages, M, spec)
+                        except ValueError:
+                            continue  # e.g. interleaved group-divisibility
+                        peaks = memory_model.peak_bytes_per_stage(plan)
+                        if all(p <= lim for p, lim in zip(peaks, limits)):
+                            found[i] = Candidate(k, b, M, plan, max(peaks))
+                out.extend(c for _, c in sorted(found.items()))
     return out

@@ -43,18 +43,42 @@ def link_probe_specs(
     interleaved ring's wrap link.  The SINGLE source of truth shared by the
     tuner's suspend-probe round and the runtime's passive telemetry feed —
     the passive-skip contract (a fed link is never re-probed while fresh)
-    only holds because both walk exactly this list."""
+    only holds because both walk exactly this list.
+
+    For plans whose kind overrides the looped placement (ZB-V's mirrored
+    V), the directed link set is derived from the placement map instead:
+    every cross-device virtual-stage hop in both roles, each probed once.
+    """
     S = plan.num_stages
-    specs = [(s, s + 1, costs.fwd_bytes[s]) for s in range(S - 1)]
-    specs += [(s + 1, s, costs.bwd_bytes[s + 1]) for s in range(S - 1)]
-    if plan.num_virtual > 1 and S > 2:
-        # the interleaved ring also crosses the wrap link in both roles;
-        # wrap transfers carry the same hidden state as any other hop, so
-        # probe with in-contract entries (bwd_bytes[0] is a placeholder)
-        specs += [
-            (S - 1, 0, costs.fwd_bytes[S - 2]),
-            (0, S - 1, costs.bwd_bytes[1]),
-        ]
+    pl = plan.placement
+    if pl.is_looped:
+        specs = [(s, s + 1, costs.fwd_bytes[s]) for s in range(S - 1)]
+        specs += [(s + 1, s, costs.bwd_bytes[s + 1]) for s in range(S - 1)]
+        if plan.num_virtual > 1 and S > 2:
+            # the interleaved ring also crosses the wrap link in both
+            # roles; wrap transfers carry the same hidden state as any
+            # other hop, so probe with in-contract entries (bwd_bytes[0]
+            # is a placeholder)
+            specs += [
+                (S - 1, 0, costs.fwd_bytes[S - 2]),
+                (0, S - 1, costs.bwd_bytes[1]),
+            ]
+        return specs
+    V = plan.total_virtual_stages
+    seen: set[tuple[int, int]] = set()
+    specs = []
+    for u in range(V - 1):
+        src, dst = int(pl.device_of[u]), int(pl.device_of[u + 1])
+        if src == dst:
+            continue  # intra-device hop (the V turn): nothing on the wire
+        fwd_nbytes = costs.fwd_bytes[max(0, min(src, S - 2))]
+        bwd_nbytes = costs.bwd_bytes[max(1, min(dst, S - 1))]
+        if (src, dst) not in seen:
+            seen.add((src, dst))
+            specs.append((src, dst, fwd_nbytes))
+        if (dst, src) not in seen:
+            seen.add((dst, src))
+            specs.append((dst, src, bwd_nbytes))
     return specs
 
 

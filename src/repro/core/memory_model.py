@@ -45,12 +45,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.schedule import (
-    INTERLEAVED_KINDS,
-    ZB_KINDS,
-    SchedulePlan,
-    peak_live_activations,
-)
+from repro.core.kinds import get_kind
+from repro.core.schedule import SchedulePlan, peak_live_activations
 
 __all__ = [
     "StageMemorySpec",
@@ -90,40 +86,19 @@ def limit_curve(limit_bytes: float | Sequence[float], num_stages: int) -> list[f
 def predicted_peak_live(plan: SchedulePlan) -> list[int]:
     """Closed-form per-stage peak live activations for any family member.
 
-    Group-level peaks (exact when ``k | M``, an upper bound otherwise —
-    partial trailing groups can only shrink the expanded peak):
-
-    * ``kfkb`` / ``zb_h1``: the 1F1B depth bound ``min(S - s, G)``,
-    * ``zb_h2``: ``min(min(S - s, G) + w[s], G)`` — exactly ``w[s]`` more
-      than H1 wherever the group count leaves room.  Exact for uniform
-      ``w``; an upper bound for non-uniform vectors (a stage can only go as
-      deep as its upstream stages actually feed it),
-    * ``interleaved``: Megatron's warmup depth plus the steady-state
-      in-flight forward, ``min(2*(S - s - 1) + (v - 1)*S + 1, G*v)``,
-    * ``interleaved_zb``: capped by construction at the plain interleaved
-      plan's peak plus ``w[s]`` (the builder's memory guarantee), so the
-      same formula plus ``w[s]`` is an upper bound.
-
-    Expanded to micro-batches, each group holds ``k`` members.
+    Delegated to the plan kind's registered ``peak_live_groups`` row (the
+    builder's memory contract — every kind must ship one; an unregistered
+    kind fails closed in the registry lookup).  Group-level peaks are exact
+    when ``k | M`` and, for kinds whose ``peak_is_exact`` flag is set, at
+    uniform ``w`` (non-uniform vectors are upstream-limited, so the
+    prediction is an upper bound); expanded to micro-batches, each group
+    holds ``k`` members.
     """
     S, M, k = plan.num_stages, plan.num_microbatches, plan.k
     v, w = plan.num_virtual, plan.extra_warmup
     G = (M + k - 1) // k
-    out = []
-    for s in range(S):
-        if plan.kind in ("kfkb", "zb_h1"):
-            groups = min(S - s, G)
-        elif plan.kind == "zb_h2":
-            groups = min(min(S - s, G) + w[s], G)
-        elif plan.kind in INTERLEAVED_KINDS:
-            groups = min(2 * (S - s - 1) + (v - 1) * S + 1 + w[s], G * v)
-        else:  # fail closed: a new kind must bring its own peak contract
-            raise ValueError(
-                f"no peak-live prediction for plan kind {plan.kind!r}; "
-                "add its closed form here before shipping the kind"
-            )
-        out.append(min(groups * k, M * v))
-    return out
+    groups = get_kind(plan.kind).peak_live_groups(S, G, v, tuple(w))
+    return [min(g * k, M * v) for g in groups]
 
 
 @dataclasses.dataclass
@@ -221,7 +196,7 @@ class MemoryModel:
     def peak_bytes_per_stage(self, plan: SchedulePlan) -> list[float]:
         b = plan.micro_batch_size
         peaks_live = peak_live_activations(plan)
-        zb = plan.kind in ZB_KINDS
+        zb = get_kind(plan.kind).has_split_backward
         return [
             self.bytes_at_live(s, b, peaks_live[s], zb)
             for s in range(len(self.stages))

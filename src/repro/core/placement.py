@@ -49,8 +49,9 @@ from __future__ import annotations
 
 import math
 
+from repro.core.kinds import get_kind
 from repro.core.network import Network, StableTrace
-from repro.core.schedule import ZB_KINDS, Op, SchedulePlan, Task, assign_slots
+from repro.core.schedule import Op, SchedulePlan, Task, assign_slots
 from repro.core.simulator import simulate_plan
 from repro.core.taskgraph import StageCosts, build_task_graph
 
@@ -286,7 +287,7 @@ def optimize_weight_placement(
     ``"full"`` rebuilds and re-simulates the whole plan per move (the
     reference the incremental path is equivalence-tested against).
     """
-    if plan.kind not in ZB_KINDS:
+    if not get_kind(plan.kind).weight_placement_refinable:
         return plan
     if evaluator not in ("incremental", "full"):
         raise ValueError(f"unknown evaluator {evaluator!r}")

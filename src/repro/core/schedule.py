@@ -1,4 +1,4 @@
-"""Pipeline schedule family: 1F1B, kFkB, GPipe, ZB-H1/H2, interleaved kFkB(-ZB).
+"""Pipeline schedule family: 1F1B, kFkB, GPipe, ZB-H1/H2, interleaved, ZB-V.
 
 This module is the heart of the Ada-Grouper reproduction.  A *schedule plan*
 is, per pipeline device, an ordered list of :class:`Task` records (forward /
@@ -9,10 +9,47 @@ cross-stage transfer of member *i* is in flight, the stage can compute
 member *i+1* (overlap), at the price of keeping up to ``k`` times more
 forward activations live.
 
-Schedule-family matrix (``make_plan(..., kind=...)``).  ``w[s]`` is the
-per-stage extra-warmup vector (``extra_warmup``: a scalar broadcasts, a
-sequence gives each stage its own depth — sized to ITS memory headroom on
-the per-stage limit curve):
+How to add a schedule kind
+--------------------------
+
+Kinds are pluggable: everything the system knows about one family member
+lives in a single :class:`repro.core.kinds.KindSpec` record, and NOTHING
+outside ``repro/core/kinds.py`` (and this module's generic machinery) may
+dispatch on the kind string — a CI grep gate and the tier-1 coverage gates
+enforce it.  A new member needs exactly:
+
+1. a ``register_kind(KindSpec(...))`` call in ``repro/core/kinds.py``
+   providing (a) ``build_orders`` — per-device ordered :class:`Task` lists,
+   (b) ``peak_live_groups`` — the closed-form per-stage peak-live contract
+   the conformance oracle holds the builder to, (c) capability flags
+   (``supports_virtual`` / ``fixed_virtual``, ``supports_extra_warmup`` /
+   ``requires_warmup``, ``has_split_backward``,
+   ``weight_placement_refinable``, ``peak_is_exact``), and optionally
+   (d) ``virtual_stage`` — the placement map when the kind does not use
+   Megatron's looped ``chunk * S + stage`` (ZB-V's mirrored V is the
+   worked example at the bottom of that file);
+2. conformance coverage: ``tests/test_family_conformance.py`` derives its
+   grid cells FROM the registry's capability flags, so a registered kind
+   gains cells automatically — the coverage gate
+   (``test_grid_covers_every_plan_kind``) fails closed if a kind somehow
+   contributes none, and kind-specific *semantic* assertions (e.g. "H2 ==
+   H1 + w") are added by name where wanted;
+3. a ``FAMILY_PARITY_CASES`` entry in ``tests/test_pipeline_engine.py``
+   (the executor-proof gate fails closed on a kind with no ``jax.grad``
+   parity cell; warmup-capable kinds additionally need a non-uniform
+   ``w[s]`` cell), plus a check in the ``_SPMD_SCRIPT`` subprocess matrix
+   when the kind exercises new engine behaviour (ZB-V does: both ring
+   directions + the intra-device LOOP channel).
+
+Everything else — lowering, slot assignment, the simulator, the memory
+model, candidate enumeration, the tuner, both engines, viz — is
+kind-agnostic and picks the new member up through the registry.
+
+Schedule-family matrix (``make_plan(..., kind=...)`` or
+``make_plan(..., spec=ScheduleSpec(...))``).  ``w[s]`` is the per-stage
+extra-warmup vector (``extra_warmup``: a scalar broadcasts, a sequence
+gives each stage its own depth — sized to ITS memory headroom on the
+per-stage limit curve):
 
 ====================  =========  ==========  ========  =========================
 kind                  k          v (chunks)  w[s]      trade-off
@@ -79,6 +116,23 @@ kind                  k          v (chunks)  w[s]      trade-off
                                                        unit while the critical
                                                        walk blocks).  Composes
                                                        with k.
+``zbv``               >= 1       2 (fixed)   >= 0      ZB-V (controllable
+                                                       memory, Qi et al.
+                                                       2024): V-shaped
+                                                       placement — device s
+                                                       hosts virtual stages s
+                                                       and 2S-1-s, the turn is
+                                                       intra-device — with the
+                                                       B/W split; peak live
+                                                       hard-capped at
+                                                       min(2S + w[s], 2G)
+                                                       chunk-slots (~half the
+                                                       plain interleaved
+                                                       worst-device peak of
+                                                       3S - 1).
+                                                       Registered entirely in
+                                                       ``repro/core/kinds.py``.
+                                                       Composes with k.
 ====================  =========  ==========  ========  =========================
 
 kFkB construction follows the paper's §5.4: "generate k copies of the 1F1B
@@ -144,17 +198,34 @@ class Op(enum.IntEnum):
 #: ops that consume a cross-stage input produced by the NEXT virtual stage
 _BWD_CRITICAL = (Op.BWD, Op.BWD_INPUT)
 
-PLAN_KINDS = ("kfkb", "zb_h1", "zb_h2", "interleaved", "interleaved_zb")
 
-#: kinds whose backward is split into BWD_INPUT + BWD_WEIGHT (the activation
-#: slot is freed by the weight gradient, not the critical backward)
-ZB_KINDS = ("zb_h1", "zb_h2", "interleaved_zb")
+def __getattr__(name: str):
+    """Legacy kind-set views, derived live from the registry (PEP 562).
 
-#: kinds whose devices host ``num_virtual`` chunks in looped placement
-INTERLEAVED_KINDS = ("interleaved", "interleaved_zb")
+    ``PLAN_KINDS`` / ``ZB_KINDS`` / ``INTERLEAVED_KINDS`` / ``WARMUP_KINDS``
+    used to be hand-maintained literal tuples that every new kind had to
+    edit; they are now computed from :mod:`repro.core.kinds`, so a
+    registered kind is a member of exactly the sets its capability flags
+    claim.  Prefer the registry (``get_kind(kind).<flag>``) in new code —
+    these exist so pre-registry call sites and tests keep working
+    unchanged.
+    """
+    if name in ("PLAN_KINDS", "ZB_KINDS", "INTERLEAVED_KINDS", "WARMUP_KINDS"):
+        from repro.core import kinds as _kinds
 
-#: kinds whose per-stage warmup cap accepts ``extra_warmup`` (the H2 axis)
-WARMUP_KINDS = ("zb_h2", "interleaved_zb")
+        registry = [_kinds.get_kind(k) for k in _kinds.registered_kinds()]
+        if name == "PLAN_KINDS":
+            return tuple(s.name for s in registry)
+        if name == "ZB_KINDS":
+            return tuple(s.name for s in registry if s.has_split_backward)
+        if name == "INTERLEAVED_KINDS":
+            return tuple(
+                s.name
+                for s in registry
+                if s.supports_virtual or s.fixed_virtual is not None
+            )
+        return tuple(s.name for s in registry if s.supports_extra_warmup)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def normalize_warmup(extra_warmup: int | Sequence[int], num_stages: int) -> tuple[int, ...]:
@@ -182,8 +253,9 @@ class Task:
     """One unit of work on one pipeline device.
 
     ``chunk`` is the virtual-stage index on the device (always 0 for
-    non-interleaved plans); the global virtual stage is ``chunk * S + stage``
-    (Megatron's looped placement).
+    non-interleaved plans); the global virtual stage the chunk hosts comes
+    from the kind's placement map — Megatron's looped ``chunk * S + stage``
+    unless the kind overrides it (ZB-V's mirrored V).
     """
 
     op: Op
@@ -194,6 +266,50 @@ class Task:
 
     def key(self) -> tuple[int, int, int, int]:
         return (int(self.op), self.stage, self.mb, self.chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """The plan's device placement of virtual stages, as lookup arrays.
+
+    ``vstage_of[s, c]`` is the global virtual stage device ``s``'s chunk
+    ``c`` hosts; ``device_of[vs]`` / ``chunk_of[vs]`` invert it.  The map
+    comes from the kind's registered ``virtual_stage`` function (looped
+    ``chunk * S + stage`` by default) and must be a bijection onto
+    ``[0, S * v)``.  ``is_looped`` marks the Megatron default, which some
+    legacy helpers special-case.
+    """
+
+    vstage_of: np.ndarray  # [S, v] int
+    device_of: np.ndarray  # [S * v] int
+    chunk_of: np.ndarray  # [S * v] int
+    is_looped: bool
+
+    @classmethod
+    def build(cls, kind: str, num_stages: int, num_virtual: int) -> "Placement":
+        from repro.core.kinds import get_kind
+
+        S, v = num_stages, num_virtual
+        fn = get_kind(kind).virtual_stage
+        vstage_of = np.empty((S, v), dtype=np.int64)
+        for s in range(S):
+            for c in range(v):
+                vstage_of[s, c] = fn(s, c, S, v) if fn is not None else c * S + s
+        if sorted(int(x) for x in vstage_of.reshape(-1)) != list(range(S * v)):
+            raise ValueError(
+                f"kind {kind!r}: virtual_stage map is not a bijection onto "
+                f"[0, {S * v}): {vstage_of.tolist()}"
+            )
+        device_of = np.empty(S * v, dtype=np.int64)
+        chunk_of = np.empty(S * v, dtype=np.int64)
+        for s in range(S):
+            for c in range(v):
+                device_of[vstage_of[s, c]] = s
+                chunk_of[vstage_of[s, c]] = c
+        looped = all(
+            int(vstage_of[s, c]) == c * S + s for s in range(S) for c in range(v)
+        )
+        return cls(vstage_of, device_of, chunk_of, looped)
 
 
 @dataclasses.dataclass
@@ -217,22 +333,19 @@ class SchedulePlan:
     _table: "TabularPlan | None" = dataclasses.field(
         default=None, init=False, repr=False, compare=False
     )
+    _placement: "Placement | None" = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     def __post_init__(self) -> None:
         self.extra_warmup = normalize_warmup(self.extra_warmup, self.num_stages)
         if not self.name:
+            from repro.core.kinds import get_kind
+
             base = f"{self.k}F{self.k}B(b={self.micro_batch_size})"
-            wtag = self._warmup_tag()
-            if self.kind == "zb_h1":
-                base = f"ZB-H1[{base}]"
-            elif self.kind == "zb_h2":
-                base = f"ZB-H2+{wtag}[{base}]"
-            elif self.kind == "interleaved":
-                base = f"I{self.num_virtual}[{base}]"
-            elif self.kind == "interleaved_zb":
-                tag = f"+{wtag}" if self.max_extra_warmup else ""
-                base = f"I{self.num_virtual}ZB{tag}[{base}]"
-            self.name = base
+            self.name = get_kind(self.kind).plan_label(
+                base, self.num_virtual, self._warmup_tag(), self.max_extra_warmup
+            )
 
     def _warmup_tag(self) -> str:
         w = self.extra_warmup
@@ -253,8 +366,27 @@ class SchedulePlan:
     def total_virtual_stages(self) -> int:
         return self.num_stages * self.num_virtual
 
+    @property
+    def spec(self):
+        """The plan's normalized :class:`~repro.core.kinds.ScheduleSpec` —
+        the one coordinate currency candidates, tuning records, the
+        compile-cache key and the runtime all share."""
+        from repro.core.kinds import ScheduleSpec
+
+        return ScheduleSpec.from_plan(self)
+
+    @property
+    def placement(self) -> Placement:
+        """The kind's virtual-stage placement map (cached — plans are
+        static once built)."""
+        if self._placement is None:
+            self._placement = Placement.build(
+                self.kind, self.num_stages, self.num_virtual
+            )
+        return self._placement
+
     def virtual_stage(self, task: Task) -> int:
-        return task.chunk * self.num_stages + task.stage
+        return int(self.placement.vstage_of[task.stage, task.chunk])
 
     def tasks(self) -> Iterator[Task]:
         for order in self.orders:
@@ -274,8 +406,10 @@ class SchedulePlan:
 
     def validate(self) -> None:
         """Structural invariants every legal synchronous plan must satisfy."""
+        from repro.core.kinds import get_kind
+
         S, M, V = self.num_stages, self.num_microbatches, self.num_virtual
-        zb = self.kind in ZB_KINDS
+        zb = get_kind(self.kind).has_split_backward
         for s, order in enumerate(self.orders):
             fwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
             bwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
@@ -654,71 +788,56 @@ def interleaved_zb_orders(
 def make_plan(
     num_stages: int,
     num_microbatches: int,
-    k: int,
+    k: int | None = None,
     micro_batch_size: int = 1,
     name: str = "",
     kind: str = "kfkb",
     num_virtual: int = 1,
     extra_warmup: int | Sequence[int] = 0,
+    spec=None,
 ) -> SchedulePlan:
-    """Build a validated :class:`SchedulePlan` of any family member.
+    """Build a validated :class:`SchedulePlan` of any registered family member.
 
-    ``kind`` is one of ``"kfkb"`` (k=1 → 1F1B, k=M → GPipe), ``"zb_h1"`` /
-    ``"zb_h2"`` (zero-bubble, B/W split — H2 takes ``extra_warmup``
-    forwards beyond the 1F1B cap, either a scalar or the per-stage vector
-    ``w[s]``, with at least one stage >= 1), ``"interleaved"`` /
-    ``"interleaved_zb"`` (``num_virtual`` chunks per device; the latter
-    also composes with ``extra_warmup`` — the "interleaved H2").  ``"1f1b"``
-    and ``"gpipe"`` are accepted as aliases that force ``k``.
+    The schedule coordinates may come either from the legacy kwargs
+    (``k``, ``kind``, ``num_virtual``, ``extra_warmup``,
+    ``micro_batch_size``) or from one
+    :class:`~repro.core.kinds.ScheduleSpec` via ``spec=`` — the two forms
+    lower to identical plans (conformance-tested).  ``kind`` must be
+    registered in :mod:`repro.core.kinds` (``"1f1b"`` and ``"gpipe"`` are
+    aliases that force ``k``); coordinate validation — virtual-degree
+    rules, warmup capability, H2's ``w >= 1`` floor — is
+    ``ScheduleSpec.resolve``'s, driven by the kind's capability flags.
     """
-    if kind == "1f1b":
-        kind, k = "kfkb", 1
-    elif kind == "gpipe":
-        kind, k = "kfkb", num_microbatches
-    if kind not in PLAN_KINDS:
-        raise ValueError(f"unknown plan kind {kind!r}; expected one of {PLAN_KINDS}")
-    if kind not in INTERLEAVED_KINDS and num_virtual != 1:
-        raise ValueError(f"num_virtual > 1 requires an interleaved kind, got {kind!r}")
-    w_vec = normalize_warmup(extra_warmup, num_stages)
-    if kind == "zb_h2":
-        if max(w_vec) < 1:
-            raise ValueError(
-                f"kind='zb_h2' needs extra_warmup >= 1 at some stage (got {extra_warmup}); "
-                "extra_warmup == 0 is exactly zb_h1"
-            )
-    elif kind != "interleaved_zb" and max(w_vec) != 0:
-        raise ValueError(
-            f"extra_warmup > 0 requires kind='zb_h2' or 'interleaved_zb', got {kind!r}"
+    from repro.core.kinds import ScheduleSpec, get_kind
+
+    if spec is not None:
+        if k is not None or kind != "kfkb" or num_virtual != 1 or extra_warmup:
+            raise ValueError("pass either spec= or the legacy schedule kwargs, not both")
+        if micro_batch_size != 1:
+            raise ValueError("micro_batch_size travels inside spec= when given")
+    else:
+        spec = ScheduleSpec(
+            kind=kind,
+            k=1 if k is None else k,
+            num_virtual=num_virtual,
+            extra_warmup=extra_warmup,
+            micro_batch_size=micro_batch_size,
         )
-    orders: list[list[Task]] = []
-    if kind == "kfkb":
-        for s in range(num_stages):
-            raw = kfkb_order(num_stages, num_microbatches, k, s)
-            orders.append([Task(op, s, mb) for op, mb in raw])
-    elif kind in ("zb_h1", "zb_h2"):
-        raws = zb_orders(num_stages, num_microbatches, k, extra_warmup=w_vec)
-        for s, raw in enumerate(raws):
-            orders.append([Task(op, s, mb) for op, mb in raw])
-    elif kind == "interleaved":
-        for s in range(num_stages):
-            raw3 = interleaved_kfkb_order(num_stages, num_microbatches, k, num_virtual, s)
-            orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
-    else:  # interleaved_zb
-        raws3 = interleaved_zb_orders(
-            num_stages, num_microbatches, k, num_virtual, extra_warmup=w_vec
-        )
-        for s, raw3 in enumerate(raws3):
-            orders.append([Task(op, s, mb, chunk) for op, mb, chunk in raw3])
+    spec = spec.resolve(num_stages, num_microbatches)
+    kspec = get_kind(spec.kind)
+    orders = kspec.build_orders(
+        num_stages, num_microbatches, spec.k, spec.num_virtual, spec.extra_warmup
+    )
     plan = SchedulePlan(
         num_stages,
         num_microbatches,
-        k,
-        micro_batch_size,
+        spec.k,
+        spec.micro_batch_size,
         orders,
         name,
-        kind=kind,
-        num_virtual=num_virtual,
-        extra_warmup=w_vec,
+        kind=spec.kind,
+        num_virtual=spec.num_virtual,
+        extra_warmup=spec.extra_warmup,
     )
     plan.validate()
     assign_slots(plan)
@@ -731,10 +850,12 @@ def make_plan(
 
 
 def _frees_slot(plan: SchedulePlan, op: Op) -> bool:
-    """The op that releases a live activation: W for the zero-bubble kinds
-    (the weight gradient still needs the stage input), the combined BWD
-    otherwise."""
-    return op == (Op.BWD_WEIGHT if plan.kind in ZB_KINDS else Op.BWD)
+    """The op that releases a live activation — delegated to the plan
+    kind's registry record (W for split-backward kinds: the weight gradient
+    still needs the stage input; the combined BWD otherwise)."""
+    from repro.core.kinds import get_kind
+
+    return get_kind(plan.kind).frees_slot(op)
 
 
 def assign_slots(plan: SchedulePlan) -> int:
@@ -895,11 +1016,15 @@ class TabularPlan:
         n_expected = 0
         for key, t in exec_tick.items():
             op, s, mb, chunk = key
-            deps = _cross_deps(plan, Op(op), s, chunk, mb)
+            deps = _chain_deps(plan, Op(op), s, chunk)
             for dep_op, dep_s, dep_c in deps:
                 dep_key = (int(dep_op), dep_s, mb, dep_c)
                 assert dep_key in exec_tick, f"missing producer for {key}"
                 assert exec_tick[dep_key] < t, f"recv at {t} not after send for {key}"
+                if dep_s == s:
+                    # same-device chain hop (ZB-V's turn): ordered by the
+                    # device's own sequential execution, never a transfer
+                    continue
                 e = by_consumer.get((int(dep_op), s, mb, chunk, dep_s, dep_c))
                 assert e is not None, f"missing edge for {key} <- {dep_key}"
                 assert e.send_tick == exec_tick[dep_key] and e.recv_tick == t
@@ -915,20 +1040,32 @@ class TabularPlan:
             assert recvs == sorted(recvs), "link not FIFO-consistent"
 
 
-def _cross_deps(
-    plan: SchedulePlan, op: Op, stage: int, chunk: int, mb: int
+def _chain_deps(
+    plan: SchedulePlan, op: Op, stage: int, chunk: int
 ) -> list[tuple[Op, int, int]]:
-    """Cross-DEVICE producers (op, stage, chunk) that ``(op, stage, mb, chunk)``
-    waits on.  Intra-device deps (B after F, W after B) are enforced by the
-    device's own sequential order and are not transfers."""
-    S, V = plan.num_stages, plan.total_virtual_stages
-    vs = chunk * S + stage
+    """Virtual-stage-chain producers (op, stage, chunk) that ``(op, stage,
+    mb, chunk)`` waits on, in the plan's placement: the forward of virtual
+    stage ``j`` consumes ``j - 1``'s output, the critical backward
+    ``j + 1``'s.  Includes SAME-device producers (e.g. ZB-V's intra-device
+    turn) — callers that want transfers filter those out."""
+    pl = plan.placement
+    V = plan.total_virtual_stages
+    vs = int(pl.vstage_of[stage, chunk])
     deps: list[tuple[Op, int, int]] = []
     if op == Op.FWD and vs > 0:
-        deps.append((Op.FWD, (vs - 1) % S, (vs - 1) // S))
+        deps.append((Op.FWD, int(pl.device_of[vs - 1]), int(pl.chunk_of[vs - 1])))
     elif op in _BWD_CRITICAL and vs < V - 1:
-        deps.append((op, (vs + 1) % S, (vs + 1) // S))
+        deps.append((op, int(pl.device_of[vs + 1]), int(pl.chunk_of[vs + 1])))
     return deps
+
+
+def _cross_deps(
+    plan: SchedulePlan, op: Op, stage: int, chunk: int, mb: int = -1
+) -> list[tuple[Op, int, int]]:
+    """Cross-DEVICE producers only: :func:`_chain_deps` minus same-device
+    pairs (those are enforced by the device's own sequential order and are
+    not transfers — the kFkB chain never has any; ZB-V's turn does)."""
+    return [d for d in _chain_deps(plan, op, stage, chunk) if d[1] != stage]
 
 
 def lower_to_table(plan: SchedulePlan) -> TabularPlan:

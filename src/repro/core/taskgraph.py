@@ -181,10 +181,14 @@ def _link_bytes(costs: StageCosts, src: int, forward: bool) -> float:
 def build_task_graph(plan: SchedulePlan, costs: StageCosts) -> TaskGraph:
     """Insert Send/Recv transfer specs for every cross-device dependency.
 
-    The topology is the virtual-stage chain: the forward of virtual stage
-    ``j`` feeds ``j + 1`` (device ``(j+1) % S``); the critical backward of
-    ``j`` feeds ``j - 1``.  ``BWD_WEIGHT`` tasks neither send nor receive.
-    For interleaved plans it is *compute* that splits across chunks (see
+    The topology is the virtual-stage chain under the plan's placement
+    map: the forward of virtual stage ``j`` feeds ``j + 1``, the critical
+    backward of ``j`` feeds ``j - 1`` — on whatever device the placement
+    puts them (Megatron's looped ring, ZB-V's mirrored V, ...).  A chain
+    hop between two chunks of the SAME device (ZB-V's turn) is not a
+    transfer at all — it is ordered by the device's own sequential
+    execution.  ``BWD_WEIGHT`` tasks neither send nor receive.  For
+    chunked plans it is *compute* that splits across chunks (see
     :meth:`TaskGraph.task_time`), NOT the wire size: every message still
     carries the full ``[b, T, d]`` hidden state, and there are ``v`` times
     more of them — interleaving trades bubble for messaging, raising total
@@ -192,6 +196,7 @@ def build_task_graph(plan: SchedulePlan, costs: StageCosts) -> TaskGraph:
     """
     S = plan.num_stages
     V = plan.total_virtual_stages
+    pl = plan.placement
     assert costs.num_stages == S
     outgoing: dict[tuple[int, int, int, int], list[TransferSpec]] = {}
     incoming: dict[tuple[int, int, int, int], TransferSpec | None] = {}
@@ -201,7 +206,9 @@ def build_task_graph(plan: SchedulePlan, costs: StageCosts) -> TaskGraph:
         incoming.setdefault(key, None)
         vs = plan.virtual_stage(task)
         if task.op == Op.FWD and vs < V - 1:
-            dst_s, dst_c = (vs + 1) % S, (vs + 1) // S
+            dst_s, dst_c = int(pl.device_of[vs + 1]), int(pl.chunk_of[vs + 1])
+            if dst_s == task.stage:
+                continue  # intra-device chain hop: no wire
             xf = TransferSpec(
                 task.stage, dst_s, Op.FWD, task.mb,
                 _link_bytes(costs, task.stage, forward=True), chunk=task.chunk,
@@ -209,7 +216,9 @@ def build_task_graph(plan: SchedulePlan, costs: StageCosts) -> TaskGraph:
             outgoing[key].append(xf)
             incoming[(int(Op.FWD), dst_s, task.mb, dst_c)] = xf
         elif task.op in (Op.BWD, Op.BWD_INPUT) and vs > 0:
-            dst_s, dst_c = (vs - 1) % S, (vs - 1) // S
+            dst_s, dst_c = int(pl.device_of[vs - 1]), int(pl.chunk_of[vs - 1])
+            if dst_s == task.stage:
+                continue  # intra-device chain hop: no wire
             xb = TransferSpec(
                 task.stage, dst_s, task.op, task.mb,
                 _link_bytes(costs, task.stage, forward=False), chunk=task.chunk,

@@ -47,9 +47,9 @@ from typing import Callable
 
 from repro.core.candidates import Candidate
 from repro.core.costmodel import CostModel, link_probe_specs
+from repro.core.kinds import ScheduleSpec, get_kind
 from repro.core.placement import optimize_weight_placement
 from repro.core.profiler import NetworkProfiler
-from repro.core.schedule import ZB_KINDS
 from repro.core.taskgraph import StageCosts
 
 __all__ = ["TuningRecord", "AutoTuner"]
@@ -67,6 +67,10 @@ class TuningRecord:
     # the winner's per-stage warmup vector w[s]; all-zero unless a warmup
     # kind (zb_h2 / warmed interleaved_zb) won
     chosen_extra_warmup: tuple[int, ...] = ()
+    # the winner's full schedule coordinates — the same ScheduleSpec the
+    # candidate, the compile-cache key and the runtime consume (the legacy
+    # chosen_* fields above are its projections, kept for callers)
+    chosen_spec: ScheduleSpec | None = None
     # suspend-and-probe accounting for this round: with passive telemetry
     # keeping the profiler windows fresh, probes_run drops toward 0 and the
     # coordinator scales the charged tuning_overhead accordingly
@@ -167,7 +171,7 @@ class AutoTuner:
         # dispatch artifact for the engines: lowered once per candidate ever
         # (Candidate.table caches on the static plan)
         self.current_table = best.table
-        if self.refine_weight_placement and best.plan.kind in ZB_KINDS:
+        if self.refine_weight_placement and get_kind(best.plan.kind).weight_placement_refinable:
             costs = self.stage_costs_for(best)
             bw = self._last_bw[best.name]  # measured during evaluate()
             key = (best.name, tuple(sorted(bw.items())))
@@ -185,6 +189,7 @@ class AutoTuner:
             chosen_kind=best.plan.kind,
             chosen_num_virtual=best.plan.num_virtual,
             chosen_extra_warmup=best.plan.extra_warmup,
+            chosen_spec=best.spec,
             probes_run=self._probes_run,
             probes_skipped=self._probes_skipped,
         )

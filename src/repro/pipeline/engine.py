@@ -22,13 +22,19 @@ the tuner's dispatch path — never re-lowered).
 * :func:`make_pipeline_step` — the real lock-step ``shard_map`` program:
   devices live on the mesh's ``stage`` axis, data parallel over the
   remaining axis.  Each tick every device executes at most one task
-  (``lax.switch`` on its grid row), then one ``ppermute`` per direction
-  moves activations down / gradients up (a full ring when the plan is
-  interleaved — virtual stage ``j`` lives on device ``j % S``, so the
-  forward chain wraps ``S-1 -> 0``).  Arrivals land in §4.4-style FIFO ring
-  queues whose push schedule is *static* (derived from the grid), so
-  kFkB's early-arrival buffering is structural, exactly as analyzed in the
-  paper.
+  (``lax.switch`` on its grid row), then the plan's transfer *channels*
+  move payloads: one ``ppermute`` per used ring direction (DOWN ``s ->
+  s+1``, UP ``s -> s-1``) per payload kind, plus a ppermute-free LOOP
+  channel for intra-device chain hops.  Flat plans use DOWN for
+  activations and UP for gradients; Megatron's looped placement rings the
+  same two (virtual stage ``j`` lives on device ``j % S``, so the forward
+  chain wraps ``S-1 -> 0``); ZB-V's mirrored placement is what exercises
+  everything at once — chunk-0 forwards ride DOWN, chunk-1 forwards ride
+  UP, and the turn is a LOOP.  Which channels exist, which queue a task
+  pops and where a payload lands are all *static* tables derived from the
+  grid plus the kind's placement map (:func:`_channel_tables`), so §4.4's
+  early-arrival buffering stays structural, exactly as analyzed in the
+  paper — per (channel, device) every queue is a single-source FIFO link.
 
 Backward uses the stage-input checkpoint policy: a stage saves only its
 input per in-flight micro-batch and rematerializes the stage body inside
@@ -135,11 +141,110 @@ def queue_capacities(table: np.ndarray, num_virtual: int = 1) -> tuple[int, int]
     return cap_f, cap_b
 
 
-def _looped_placement(num_stages: int, num_virtual: int) -> np.ndarray:
+def _placement_perm(plan: SchedulePlan) -> np.ndarray:
     """Permutation mapping device-major position ``s * v + c`` to the global
-    virtual stage ``c * S + s`` it hosts (identity when ``v == 1``)."""
-    S, v = num_stages, num_virtual
-    return np.array([c * S + s for s in range(S) for c in range(v)], dtype=np.int64)
+    virtual stage device ``s``'s chunk ``c`` hosts, under the plan kind's
+    placement map (looped ``c * S + s`` by default; ZB-V's mirrored V).
+    Identity when ``v == 1``."""
+    S, v = plan.num_stages, plan.num_virtual
+    pl = plan.placement
+    return np.array(
+        [int(pl.vstage_of[s, c]) for s in range(S) for c in range(v)], dtype=np.int64
+    )
+
+
+#: transfer channels of the lock-step engine: a payload leaving device ``s``
+#: at the end of a tick either shifts DOWN the ring (to ``s + 1``), UP (to
+#: ``s - 1``), or stays LOCAL (ZB-V's intra-device turn — no ppermute).
+#: Flat plans use DOWN for activations and UP for gradients; Megatron rings
+#: the same two; the V placement is what exercises all of them per
+#: direction (chunk-0 forwards go down, chunk-1 forwards come back up).
+_CH_DOWN, _CH_UP, _CH_LOOP = 0, 1, 2
+_NUM_CH = 3
+
+
+def _channel_of(src: int, dst: int, S: int) -> int:
+    if src == dst:
+        return _CH_LOOP
+    if (dst - src) % S == 1:
+        return _CH_DOWN
+    if (src - dst) % S == 1:
+        return _CH_UP
+    raise ValueError(
+        f"placement requires a non-neighbour transfer {src} -> {dst}; the "
+        "lock-step engine only implements ring shifts of +-1"
+    )
+
+
+def _channel_tables(plan: SchedulePlan, grid: np.ndarray):
+    """Static per-channel send / arrival / input-source tables of a plan.
+
+    Derived from the lowered grid plus the kind's placement map:
+
+    * ``send_f[ch][s, t]`` / ``send_b[ch][s, t]`` — the task device ``s``
+      executes at tick ``t`` emits its forward / backward payload into
+      channel ``ch``;
+    * ``arr_f`` / ``arr_b`` — the matching arrival masks at the receiving
+      device (end of the send tick, consumable from ``t + 1``);
+    * ``in_f[s, c]`` / ``in_b[s, c]`` — which channel queue the FWD input /
+      backward ``dy`` of device ``s``'s chunk ``c`` is popped from (``-1``
+      = no queue: the embedding for virtual stage 0, the loss seed for the
+      last);
+    * ``caps_f`` / ``caps_b`` — exact max in-flight depth per channel
+      queue (>= 1 so zero-traffic channels still get a dummy buffer).
+    """
+    pl = plan.placement
+    S, T = grid.shape[:2]
+    v = plan.num_virtual
+    V = plan.total_virtual_stages
+    send_f = np.zeros((_NUM_CH, S, T), bool)
+    send_b = np.zeros((_NUM_CH, S, T), bool)
+    in_f = np.full((S, v), -1, np.int32)
+    in_b = np.full((S, v), -1, np.int32)
+    for s in range(S):
+        for c in range(v):
+            vs = int(pl.vstage_of[s, c])
+            if vs > 0:
+                in_f[s, c] = _channel_of(int(pl.device_of[vs - 1]), s, S)
+            if vs < V - 1:
+                in_b[s, c] = _channel_of(int(pl.device_of[vs + 1]), s, S)
+    for s in range(S):
+        for t in range(T):
+            op, _, c, _ = (int(x) for x in grid[s, t])
+            if op == int(Op.IDLE):
+                continue
+            vs = int(pl.vstage_of[s, c])
+            if op == int(Op.FWD) and vs < V - 1:
+                send_f[_channel_of(s, int(pl.device_of[vs + 1]), S), s, t] = True
+            elif op in _BWD_SENDERS and vs > 0:
+                send_b[_channel_of(s, int(pl.device_of[vs - 1]), S), s, t] = True
+    arr_f = np.zeros_like(send_f)
+    arr_b = np.zeros_like(send_b)
+    for ch, shift in ((_CH_DOWN, 1), (_CH_UP, -1), (_CH_LOOP, 0)):
+        src_of = (np.arange(S) - shift) % S
+        arr_f[ch] = send_f[ch][src_of]
+        arr_b[ch] = send_b[ch][src_of]
+    caps_f, caps_b = [], []
+    for ch in range(_NUM_CH):
+        cap_f = cap_b = 1
+        for s in range(S):
+            df = db = 0
+            for t in range(T):
+                op, _, c, _ = (int(x) for x in grid[s, t])
+                # consumption happens during tick t, arrivals at its end
+                if op == int(Op.FWD) and in_f[s, c] == ch:
+                    df -= 1
+                elif op in _BWD_SENDERS and in_b[s, c] == ch:
+                    db -= 1
+                if arr_f[ch, s, t]:
+                    df += 1
+                if arr_b[ch, s, t]:
+                    db += 1
+                cap_f = max(cap_f, df)
+                cap_b = max(cap_b, db)
+        caps_f.append(cap_f)
+        caps_b.append(cap_b)
+    return send_f, send_b, arr_f, arr_b, in_f, in_b, caps_f, caps_b
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +270,7 @@ def reference_pipeline_grads(
     )
     table = plan.lower()
     grid = table.grid
+    pl = plan.placement  # kind-owned virtual-stage map (looped, V-shaped, ...)
 
     def p_of(vs):
         return jax.tree_util.tree_map(lambda p: p[vs], all_params)
@@ -190,7 +296,7 @@ def reference_pipeline_grads(
             op, mb, chunk, _ = (int(x) for x in grid[s, t])
             if op == int(Op.IDLE):
                 continue
-            vs = chunk * S + s
+            vs = int(pl.vstage_of[s, chunk])
             params_v = p_of(vs)
             key = (mb, chunk)
             if op == int(Op.FWD):
@@ -203,7 +309,9 @@ def reference_pipeline_grads(
                 if vs < V - 1:
                     y = staged.stage_hidden(params_v, x)
                     nxt = vs + 1
-                    sends.append(("f", nxt % S, (mb, nxt // S), y))
+                    sends.append(
+                        ("f", int(pl.device_of[nxt]), (mb, int(pl.chunk_of[nxt])), y)
+                    )
                 # last virtual stage: fwd output feeds its own bwd; recomputed
             elif op in (int(Op.BWD), int(Op.BWD_INPUT)):
                 zb = op == int(Op.BWD_INPUT)
@@ -242,7 +350,10 @@ def reference_pipeline_grads(
                     else:
                         dparams = jax.tree_util.tree_map(jnp.add, dparams, dparams_e)
                 else:
-                    sends.append(("b", (vs - 1) % S, (mb, (vs - 1) // S), dx))
+                    prv = vs - 1
+                    sends.append(
+                        ("b", int(pl.device_of[prv]), (mb, int(pl.chunk_of[prv])), dx)
+                    )
                 if not zb:
                     grads = add_grad(grads, vs, dparams)
             else:  # BWD_WEIGHT
@@ -296,17 +407,18 @@ def make_pipeline_step(
     grid_np = tabular.grid  # [S, T, 4]
     T_ticks = tabular.num_ticks
     n_slots = int(grid_np[:, :, 3].max()) + 1
-    fwd_arr_np, bwd_arr_np = arrival_tables(grid_np, v)
-    cap_f, cap_b = queue_capacities(grid_np, v)
-    placement = _looped_placement(S, v)
+    pl = plan.placement
+    send_f_np, send_b_np, arr_f_np, arr_b_np, in_f_np, in_b_np, caps_f, caps_b = (
+        _channel_tables(plan, grid_np)
+    )
+    used_f = [bool(send_f_np[ch].any()) for ch in range(_NUM_CH)]
+    used_b = [bool(send_b_np[ch].any()) for ch in range(_NUM_CH)]
+    placement = _placement_perm(plan)
     inverse_placement = np.argsort(placement)
-
-    if v > 1:
-        fwd_perm = [(i, (i + 1) % S) for i in range(S)]
-        bwd_perm = [((i + 1) % S, i) for i in range(S)]
-    else:
-        fwd_perm = [(i, i + 1) for i in range(S - 1)]
-        bwd_perm = [(i + 1, i) for i in range(S - 1)]
+    perm_of = {
+        _CH_DOWN: [(i, (i + 1) % S) for i in range(S)],
+        _CH_UP: [(i, (i - 1) % S) for i in range(S)],
+    }
 
     # lax.switch over only the ops this plan actually uses
     present_ops = sorted({int(o) for o in np.unique(grid_np[:, :, 0])})
@@ -315,27 +427,38 @@ def make_pipeline_step(
         branch_of[o] = i
 
     def device_body(all_params, tokens, labels):
-        # all_params leaves [v, ...] (this device's chunks, looped placement)
+        # all_params leaves [v, ...] (this device's chunks, in chunk order
+        # under the plan's placement map)
         params = all_params
         s = jax.lax.axis_index(stage_axis)
         grid = jnp.asarray(grid_np)[s]  # [T_ticks, 4]
-        fwd_arr = jnp.asarray(fwd_arr_np)[s]  # [T_ticks]
-        bwd_arr = jnp.asarray(bwd_arr_np)[s]
+        vs_tbl = jnp.asarray(np.asarray(pl.vstage_of, dtype=np.int32))[s]  # [v]
+        f_in_tbl = jnp.asarray(in_f_np)[s]  # [v]: FWD input channel (-1 = embed)
+        b_in_tbl = jnp.asarray(in_b_np)[s]  # [v]: dy channel (-1 = loss seed)
+        sf_rows = [jnp.asarray(send_f_np[ch])[s] for ch in range(_NUM_CH)]
+        sb_rows = [jnp.asarray(send_b_np[ch])[s] for ch in range(_NUM_CH)]
+        af_rows = [jnp.asarray(arr_f_np[ch])[s] for ch in range(_NUM_CH)]
+        ab_rows = [jnp.asarray(arr_b_np[ch])[s] for ch in range(_NUM_CH)]
         b, T = tokens.shape[1], tokens.shape[2]
         d = cfg.d_model
         act = jnp.zeros((n_slots, b, T, d), cfg.dtype)
         wctx = jnp.zeros((n_slots, b, T, d), cfg.dtype)  # zb: stashed dy per slot
-        fq = jnp.zeros((cap_f, b, T, d), cfg.dtype)
-        bq = jnp.zeros((cap_b, b, T, d), cfg.dtype)
+        fqs = tuple(
+            jnp.zeros((caps_f[ch], b, T, d), cfg.dtype) for ch in range(_NUM_CH)
+        )
+        bqs = tuple(
+            jnp.zeros((caps_b[ch], b, T, d), cfg.dtype) for ch in range(_NUM_CH)
+        )
         zeros_bTd = jnp.zeros((b, T, d), cfg.dtype)
         grads = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params
         )
         loss_sum = jnp.zeros((), jnp.float32)
-        fq_push = jnp.zeros((), jnp.int32)
-        fq_pop = jnp.zeros((), jnp.int32)
-        bq_push = jnp.zeros((), jnp.int32)
-        bq_pop = jnp.zeros((), jnp.int32)
+        zero_i = jnp.zeros((), jnp.int32)
+        fpops = (zero_i, zero_i, zero_i)
+        bpops = (zero_i, zero_i, zero_i)
+        fpush = [zero_i, zero_i, zero_i]
+        bpush = [zero_i, zero_i, zero_i]
 
         def params_of(chunk):
             return jax.tree_util.tree_map(
@@ -349,36 +472,52 @@ def make_pipeline_step(
             )
 
         def vstage_flags(chunk):
-            vs = chunk * S + s
+            vs = vs_tbl[chunk]
             return vs == 0, vs == V - 1
 
-        def fwd_task(state, mb, chunk, slot):
-            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
-            p_c = params_of(chunk)
-            is_first, is_last = vstage_flags(chunk)
-            x_wire = jax.lax.dynamic_index_in_dim(
-                fq, fq_pop % cap_f, axis=0, keepdims=False
+        def pop_queue(qs, pops, caps, code):
+            """Select the queue entry ``code`` points at (cheap reads of
+            every channel head + a select chain) and advance that
+            channel's pop cursor; ``code == -1`` selects nothing."""
+            heads = [
+                jax.lax.dynamic_index_in_dim(
+                    qs[ch], pops[ch] % caps[ch], axis=0, keepdims=False
+                )
+                for ch in range(_NUM_CH)
+            ]
+            x = zeros_bTd
+            for ch in range(_NUM_CH):
+                x = jnp.where(code == ch, heads[ch], x)
+            new_pops = tuple(
+                pops[ch] + (code == ch).astype(jnp.int32) for ch in range(_NUM_CH)
             )
+            return x, new_pops
+
+        def fwd_task(state, mb, chunk, slot):
+            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            p_c = params_of(chunk)
+            is_first, _ = vstage_flags(chunk)
+            code = f_in_tbl[chunk]
+            x_wire, fpops = pop_queue(fqs, fpops, caps_f, code)
             x_emb = staged.embed_tokens(p_c, tokens[mb])
             x = jnp.where(is_first, x_emb, x_wire)
-            fq_pop = fq_pop + jnp.where(is_first, 0, 1)
             act = jax.lax.dynamic_update_index_in_dim(
                 act, x.astype(act.dtype), slot, axis=0
             )
             y = staged.stage_hidden(p_c, x)
-            send_f = jnp.where(is_last, zeros_bTd, y.astype(cfg.dtype))
             return (
-                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum),
-                send_f,
+                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum),
+                y.astype(cfg.dtype),
                 zeros_bTd,
             )
 
         def bwd_task(state, mb, chunk, slot):
             """Combined backward (kFkB / interleaved plans)."""
-            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             is_first, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
+            dy, bpops = pop_queue(bqs, bpops, caps_b, b_in_tbl[chunk])
 
             def last_branch(_):
                 def loss_fn(p, xx):
@@ -390,15 +529,11 @@ def make_pipeline_step(
                 return loss / M, dparams, dx
 
             def mid_branch(_):
-                dy = jax.lax.dynamic_index_in_dim(
-                    bq, bq_pop % cap_b, axis=0, keepdims=False
-                )
                 _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), p_c, x)
                 dparams, dx = vjp(dy.astype(cfg.dtype))
                 return jnp.zeros((), jnp.float32), dparams, dx
 
             dloss, dparams, dx = jax.lax.cond(is_last, last_branch, mid_branch, None)
-            bq_pop = bq_pop + jnp.where(is_last, 0, 1)
 
             def first_branch(dp):
                 _, evjp = jax.vjp(lambda p: staged.embed_tokens(p, tokens[mb]), p_c)
@@ -407,19 +542,19 @@ def make_pipeline_step(
 
             dparams = jax.lax.cond(is_first, first_branch, lambda dp: dp, dparams)
             grads = add_grads(grads, chunk, dparams)
-            send_b = jnp.where(is_first, zeros_bTd, dx.astype(cfg.dtype))
             return (
-                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum + dloss),
+                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum + dloss),
                 zeros_bTd,
-                send_b,
+                dx.astype(cfg.dtype),
             )
 
         def bwd_input_task(state, mb, chunk, slot):
             """Zero-bubble B: input gradient only; stash dy for the later W."""
-            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             is_first, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
+            dy, bpops = pop_queue(bqs, bpops, caps_b, b_in_tbl[chunk])
 
             def last_branch(_):
                 def loss_fn(xx):
@@ -431,15 +566,11 @@ def make_pipeline_step(
                 return loss / M, dx, zeros_bTd  # W recomputes the loss path
 
             def mid_branch(_):
-                dy = jax.lax.dynamic_index_in_dim(
-                    bq, bq_pop % cap_b, axis=0, keepdims=False
-                )
                 _, vjp = jax.vjp(lambda xx: staged.stage_hidden(p_c, xx), x)
                 (dx,) = vjp(dy.astype(cfg.dtype))
                 return jnp.zeros((), jnp.float32), dx, dy.astype(cfg.dtype)
 
             dloss, dx, dy_keep = jax.lax.cond(is_last, last_branch, mid_branch, None)
-            bq_pop = bq_pop + jnp.where(is_last, 0, 1)
             wctx = jax.lax.dynamic_update_index_in_dim(wctx, dy_keep, slot, axis=0)
 
             def first_branch(g):
@@ -448,16 +579,15 @@ def make_pipeline_step(
                 return add_grads(g, chunk, dpe)
 
             grads = jax.lax.cond(is_first, first_branch, lambda g: g, grads)
-            send_b = jnp.where(is_first, zeros_bTd, dx.astype(cfg.dtype))
             return (
-                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum + dloss),
+                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum + dloss),
                 zeros_bTd,
-                send_b,
+                dx.astype(cfg.dtype),
             )
 
         def bwd_weight_task(state, mb, chunk, slot):
             """Zero-bubble W: weight gradients via a second rematerialization."""
-            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
+            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             _, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
@@ -480,7 +610,7 @@ def make_pipeline_step(
             dparams = jax.lax.cond(is_last, last_branch, mid_branch, None)
             grads = add_grads(grads, chunk, dparams)
             return (
-                (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum),
+                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum),
                 zeros_bTd,
                 zeros_bTd,
             )
@@ -498,32 +628,51 @@ def make_pipeline_step(
         branches = [all_branches[o] for o in present_ops]
         branch_lut = jnp.asarray(branch_of)
 
+        def push(qs, pushes, caps, rows, recvs, t):
+            """Static-schedule arrivals into the per-channel ring queues.
+            The write must be CONDITIONAL — when a ring is exactly full,
+            the push cursor aliases the oldest unconsumed entry, and an
+            unconditional write would clobber it."""
+            out = list(qs)
+            for ch, recv in recvs.items():
+                idx = pushes[ch] % caps[ch]
+                cur = jax.lax.dynamic_index_in_dim(
+                    out[ch], idx, axis=0, keepdims=False
+                )
+                out[ch] = jax.lax.dynamic_update_index_in_dim(
+                    out[ch], jnp.where(rows[ch][t], recv, cur), idx, axis=0
+                )
+                pushes[ch] = pushes[ch] + rows[ch][t].astype(jnp.int32)
+            return tuple(out)
+
         for t in range(T_ticks):
             op, mb, chunk, slot = grid[t, 0], grid[t, 1], grid[t, 2], grid[t, 3]
-            state = (act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum)
+            state = (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum)
             state, send_f, send_b = jax.lax.switch(
                 branch_lut[op], branches, state, mb, chunk, slot
             )
-            act, wctx, fq, fq_pop, bq, bq_pop, grads, loss_sum = state
-            # lock-step transfers: activations down, gradients up (ring when
-            # the plan is interleaved)
-            recv_f = jax.lax.ppermute(send_f, stage_axis, fwd_perm)
-            recv_b = jax.lax.ppermute(send_b, stage_axis, bwd_perm)
-            # static-schedule arrivals: the write must be CONDITIONAL — when
-            # the ring is exactly full, the push cursor aliases the oldest
-            # unconsumed entry, and an unconditional write would clobber it
-            f_idx = fq_push % cap_f
-            f_cur = jax.lax.dynamic_index_in_dim(fq, f_idx, axis=0, keepdims=False)
-            fq = jax.lax.dynamic_update_index_in_dim(
-                fq, jnp.where(fwd_arr[t], recv_f, f_cur), f_idx, axis=0
-            )
-            fq_push = fq_push + fwd_arr[t].astype(jnp.int32)
-            b_idx = bq_push % cap_b
-            b_cur = jax.lax.dynamic_index_in_dim(bq, b_idx, axis=0, keepdims=False)
-            bq = jax.lax.dynamic_update_index_in_dim(
-                bq, jnp.where(bwd_arr[t], recv_b, b_cur), b_idx, axis=0
-            )
-            bq_push = bq_push + bwd_arr[t].astype(jnp.int32)
+            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            # lock-step transfers on whichever channels the plan uses:
+            # activations and gradients each ride ring shifts of +-1 (flat
+            # chains and Megatron rings use one direction each; ZB-V uses
+            # both) plus the ppermute-free LOOP channel for intra-device
+            # turns.  Payloads are masked by the static send tables, so a
+            # tick with no send on a channel moves zeros (and the arrival
+            # mask ignores them).
+            recvs_f, recvs_b = {}, {}
+            for ch in (_CH_DOWN, _CH_UP):
+                if used_f[ch]:
+                    payload = jnp.where(sf_rows[ch][t], send_f, zeros_bTd)
+                    recvs_f[ch] = jax.lax.ppermute(payload, stage_axis, perm_of[ch])
+                if used_b[ch]:
+                    payload = jnp.where(sb_rows[ch][t], send_b, zeros_bTd)
+                    recvs_b[ch] = jax.lax.ppermute(payload, stage_axis, perm_of[ch])
+            if used_f[_CH_LOOP]:
+                recvs_f[_CH_LOOP] = jnp.where(sf_rows[_CH_LOOP][t], send_f, zeros_bTd)
+            if used_b[_CH_LOOP]:
+                recvs_b[_CH_LOOP] = jnp.where(sb_rows[_CH_LOOP][t], send_b, zeros_bTd)
+            fqs = push(fqs, fpush, caps_f, af_rows, recvs_f, t)
+            bqs = push(bqs, bpush, caps_b, ab_rows, recvs_b, t)
 
         # replicated leaves (embed, final_norm) accumulate their one non-zero
         # contribution per virtual stage; stage-local leaves (blocks) stay

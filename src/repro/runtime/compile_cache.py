@@ -81,7 +81,9 @@ class CompiledStepCache:
 
     @staticmethod
     def plan_key(table: TabularPlan) -> tuple:
-        """Lowered-plan identity: schedule coordinates + grid digest.
+        """Lowered-plan identity: the plan's :class:`ScheduleSpec` (the
+        same frozen coordinate currency candidates and tuning records
+        carry) + shape + grid digest.
 
         Two plans with the same coordinates but different lowerings (e.g. a
         ``+Wopt`` refinement) must not share an executable — the engine's
@@ -90,13 +92,9 @@ class CompiledStepCache:
         digest = hashlib.sha1(table.grid.tobytes()).hexdigest()[:16]
         return (
             p.name,
-            p.kind,
+            p.spec,
             p.num_stages,
             p.num_microbatches,
-            p.k,
-            p.micro_batch_size,
-            p.num_virtual,
-            tuple(p.extra_warmup),
             digest,
         )
 

@@ -145,6 +145,10 @@ class SwitchEvent:
     warm: bool  # executable was ready before the switch was requested
     seconds: float  # dispatch latency: fetch + re-stack + pointer swap
     compile_seconds: float  # 0 for warm hits
+    # full schedule coordinates of both sides — the same ScheduleSpec the
+    # candidate set, the tuning record and the compile-cache key carry
+    from_spec: "object | None" = None
+    to_spec: "object | None" = None
 
 
 @dataclasses.dataclass
@@ -361,6 +365,8 @@ class PlanRuntime:
             warm=warm,
             seconds=seconds if warm else seconds - (t1 - t0),
             compile_seconds=0.0 if warm else (t1 - t0),
+            from_spec=self.current_table.plan.spec if self.current_table else None,
+            to_spec=table.plan.spec,
         )
         self.current_table = table
         self._compiled = entry.compiled

@@ -31,11 +31,10 @@ import pytest
 from _hyp import given, settings, st  # hypothesis optional: property tests skip cleanly
 
 from repro.core import predicted_peak_live
+from repro.core.kinds import get_kind, registered_kinds, warmup_kinds
 from repro.core.network import StableTrace, uniform_network
 from repro.core.schedule import (
-    INTERLEAVED_KINDS,
     PLAN_KINDS,
-    ZB_KINDS,
     Op,
     make_plan,
     normalize_warmup,
@@ -47,7 +46,10 @@ from repro.core.taskgraph import StageCosts
 # ---------------------------------------------------------------------------
 # The family grid: every kind x k x num_virtual x (S, M) cell that satisfies
 # the kind's divisibility constraints (k | M everywhere so the closed-form
-# peak predictions are exact, S | M/k for the interleaved kinds).
+# peak predictions are exact, S | M/k for the Megatron-interleaved kinds).
+# The kinds and their axes come from the REGISTRY — a newly registered kind
+# grows its own cells from its capability flags, and the coverage gates
+# below fail closed if it somehow contributes none.
 # ---------------------------------------------------------------------------
 
 _SHAPES = [(2, 4), (2, 8), (4, 8), (4, 16), (3, 12)]
@@ -61,8 +63,32 @@ _W_VECS = {
     4: ((3, 2, 1, 0), (0, 1, 0, 2)),
 }
 
-#: builders whose peak-live contract is an equality, not just a bound
-_EXACT_PEAK_KINDS = ("kfkb", "zb_h1", "zb_h2", "interleaved")
+#: builders whose peak-live contract is an equality, not just a bound —
+#: derived from the registry's peak_is_exact flag, never hand-listed
+_EXACT_PEAK_KINDS = tuple(
+    k for k in registered_kinds() if get_kind(k).peak_is_exact
+)
+
+
+def _kind_cells(kind, S, M, k):
+    """One registered kind's conformance cells at a given (S, M, k) —
+    derived from its capability flags."""
+    spec = get_kind(kind)
+    G = M // k
+    if spec.needs_group_multiple_of_stages and G % S:
+        return
+    for v in spec.virtual_axis(_VS):
+        if not spec.requires_warmup:
+            yield (kind, k, v, 0, S, M)
+        if spec.supports_extra_warmup:
+            if G < 2:
+                continue  # no warmup headroom: the w axis degenerates
+            scalar_ws = _WS if spec.requires_warmup else _WS[:1]
+            for w in scalar_ws:
+                yield (kind, k, v, w, S, M)
+            vecs = _W_VECS[S] if v == 1 else _W_VECS[S][:1]
+            for w_vec in vecs:
+                yield (kind, k, v, w_vec, S, M)
 
 
 def _family_cells():
@@ -71,25 +97,8 @@ def _family_cells():
         for k in _KS:
             if M % k:
                 continue
-            G = M // k
-            for kind in PLAN_KINDS:
-                if kind in INTERLEAVED_KINDS:
-                    if G % S:
-                        continue
-                    for v in _VS:
-                        cells.append((kind, k, v, 0, S, M))
-                        if kind == "interleaved_zb":  # the interleaved-H2 cells
-                            cells.append((kind, k, v, 1, S, M))
-                            cells.append((kind, k, v, _W_VECS[S][0], S, M))
-                elif kind == "zb_h2":
-                    if G < 2:
-                        continue  # no warmup headroom: H2 degenerates to H1
-                    for w in _WS:
-                        cells.append((kind, k, 1, w, S, M))
-                    for w_vec in _W_VECS[S]:  # the vector-w cells
-                        cells.append((kind, k, 1, w_vec, S, M))
-                else:
-                    cells.append((kind, k, 1, 0, S, M))
+            for kind in registered_kinds():
+                cells.extend(_kind_cells(kind, S, M, k))
     return cells
 
 
@@ -139,7 +148,7 @@ def _conformance(kind, k, v, w, S, M):
         assert recvs == sorted(recvs), "link recv order diverges from send order"
 
     # -- op-count conservation ---------------------------------------------
-    zb = kind in ZB_KINDS
+    zb = get_kind(kind).has_split_backward
     per_device = (3 if zb else 2) * M * v
     busy = int((table.grid[:, :, 0] != int(Op.IDLE)).sum())
     assert busy == per_device * S == sum(len(o) for o in plan.orders)
@@ -152,11 +161,17 @@ def _conformance(kind, k, v, w, S, M):
                 assert set(mbs) == set(range(M)), f"device {s} chunk {c}: {op} incomplete"
 
     # -- edge-count conservation -------------------------------------------
+    # every CROSS-device virtual-stage hop carries one F and one B per
+    # micro-batch; same-device hops (ZB-V's turn) ride the device order
     V = S * v
+    pl = plan.placement
+    n_cross = sum(
+        1 for u in range(V - 1) if pl.device_of[u] != pl.device_of[u + 1]
+    )
     n_fwd = sum(1 for e in table.edges if e.is_forward)
     n_bwd = len(table.edges) - n_fwd
-    assert n_fwd == M * (V - 1)  # every non-first virtual stage receives one F
-    assert n_bwd == M * (V - 1)  # every non-last one receives one B
+    assert n_fwd == M * n_cross
+    assert n_bwd == M * n_cross
 
     # -- memory: exact liveness vs the closed-form model prediction --------
     peaks = peak_live_activations(plan)
@@ -216,17 +231,21 @@ def test_family_conformance(cell):
 
 
 def test_grid_covers_every_plan_kind():
-    """The sweep is differential only if no kind can silently drop out."""
-    assert {c[0] for c in CELLS} == set(PLAN_KINDS)
+    """Tier-1 gate, auto-derived from the REGISTRY: every registered kind
+    must contribute conformance cells — adding a kind without grid
+    coverage fails here before it can ship (and the legacy PLAN_KINDS view
+    must agree with the registry)."""
+    assert {c[0] for c in CELLS} == set(registered_kinds())
+    assert tuple(PLAN_KINDS) == registered_kinds()
 
 
 def test_grid_covers_vector_warmup():
     """...and the heterogeneous (non-uniform w[s]) cells can't drop out
-    either — for both warmup-capable kinds."""
+    either — for EVERY warmup-capable kind the registry declares."""
     vec_kinds = {
         c[0] for c in CELLS if isinstance(c[3], tuple) and len(set(c[3])) > 1
     }
-    assert vec_kinds == {"zb_h2", "interleaved_zb"}
+    assert vec_kinds == set(warmup_kinds())
 
 
 @given(
@@ -241,17 +260,18 @@ def test_grid_covers_vector_warmup():
 def test_family_conformance_hypothesis(kind, k, v, w, S, mult):
     """Random family cells — including random per-stage warmup vectors —
     through the same oracle (skips without hypothesis)."""
+    spec = get_kind(kind)
     M = S * k * mult  # guarantees k | M and S | (M / k)
-    if kind == "zb_h2" and M // k < 2:
+    if spec.requires_warmup and M // k < 2:
         M *= 2
     w_vec = tuple(w[:S])
-    if kind == "zb_h2" and max(w_vec) == 0:
+    if spec.requires_warmup and max(w_vec) == 0:
         w_vec = w_vec[:-1] + (1,)
     _conformance(
         kind,
         k,
-        v if kind in INTERLEAVED_KINDS else 1,
-        w_vec if kind in ("zb_h2", "interleaved_zb") else 0,
+        spec.virtual_axis((v,))[0],
+        w_vec if spec.supports_extra_warmup else 0,
         S,
         M,
     )

@@ -168,23 +168,27 @@ FAMILY_PARITY_CASES = [
     ("interleaved_zb", 1, 2, 0),
     ("interleaved_zb", 2, 2, 0),
     ("interleaved_zb", 1, 2, (1, 2)),  # the "interleaved H2" composition
+    ("zbv", 1, 2, 0),  # ZB-V: V-shaped placement, intra-device turn
+    ("zbv", 2, 2, 0),  # ...composed with grouping
+    ("zbv", 1, 2, (1, 0)),  # ...with a heterogeneous warmup vector
 ]
 
 
 def test_every_plan_kind_has_an_executor_proof():
-    """Gate (runs in tier 1): the gradient-parity matrix below must cover
-    every member of PLAN_KINDS — adding a schedule kind without an engine
-    proof fails here before it can ship.  Every warmup-capable kind must
+    """Gate (runs in tier 1), auto-derived from the REGISTRY: the
+    gradient-parity matrix below must cover every registered kind — adding
+    a schedule kind without an engine proof fails here before it can ship.
+    Every kind whose registry record claims ``supports_extra_warmup`` must
     additionally prove a NON-UNIFORM w[s] cell (the vector-w execution
     path cannot regress silently either)."""
-    from repro.core.schedule import PLAN_KINDS, WARMUP_KINDS
+    from repro.core.kinds import registered_kinds, warmup_kinds
 
-    assert {kind for kind, *_ in FAMILY_PARITY_CASES} == set(PLAN_KINDS)
+    assert {kind for kind, *_ in FAMILY_PARITY_CASES} == set(registered_kinds())
     vector_proofs = {
         kind for kind, _, _, w in FAMILY_PARITY_CASES
         if isinstance(w, tuple) and len(set(w)) > 1
     }
-    assert vector_proofs == set(WARMUP_KINDS)
+    assert vector_proofs == set(warmup_kinds())
 
 
 @pytest.mark.slow
@@ -306,6 +310,12 @@ _SPMD_SCRIPT = textwrap.dedent(
     # the interleaved-H2 composition (per-stage warmup over the ring)
     check(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v,
                     extra_warmup=(1, 0, 2, 1)),
+          staged_v, params_v, oloss_v, ograds_v)
+    # ZB-V: the V-shaped (non-looped) placement through the REAL engine —
+    # forwards ride BOTH ring directions and the turn is an intra-device
+    # loopback, exercising every transfer channel at once
+    check(make_plan(S, M, 1, kind="zbv"), staged_v, params_v, oloss_v, ograds_v)
+    check(make_plan(S, M, 1, kind="zbv", extra_warmup=(1, 0, 2, 1)),
           staged_v, params_v, oloss_v, ograds_v)
     print("SPMD_ENGINE_ALL_OK")
     """

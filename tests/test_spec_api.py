@@ -1,0 +1,334 @@
+"""The ScheduleSpec / SearchSpace / kind-registry API redesign, proven.
+
+Four suites:
+
+* **Back-compat conformance** — the legacy ``make_plan(**kwargs)`` /
+  ``enumerate_candidates(kinds=..., virtual_degrees=...)`` signatures and
+  the new ``spec=`` / ``space=`` forms produce IDENTICAL plans (same
+  lowered ``TabularPlan`` digests) and identical candidate sets.
+* **Fail-closed registry** — an unregistered kind is a loud ``ValueError``
+  naming the registered kinds, everywhere a kind string enters the system.
+* **No string dispatch** — the tier-1 grep gate: no module under
+  ``src/repro`` outside ``core/kinds.py`` / ``core/schedule.py`` may
+  dispatch on schedule-kind strings or the legacy kind-set tuples (the CI
+  lint job runs the same scan; this test makes it bite locally).
+* **ZB-V acceptance** — the first registry-only family member shows the
+  controllable-memory trade: peak live strictly below the equal-(S, M, k)
+  plain-interleaved plan's, makespan no worse than 1F1B on the preemption
+  traces, and full participation in candidate search, tuning records and
+  the compile-cache key through the one ScheduleSpec currency.
+"""
+
+import hashlib
+import os
+import re
+
+import pytest
+
+from repro.core import (
+    MemoryModel,
+    ScheduleSpec,
+    SearchSpace,
+    StageCosts,
+    enumerate_candidates,
+    get_kind,
+    known_kinds,
+    make_plan,
+    registered_kinds,
+    simulate_plan,
+    uniform_network,
+)
+from repro.core.network import PeriodicPreemptionTrace
+from repro.core.schedule import peak_live_activations
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def _digest(plan) -> str:
+    table = plan.lower()
+    edges = tuple(
+        sorted(
+            (e.src_stage, e.dst_stage, int(e.op), e.mb, e.src_chunk,
+             e.dst_chunk, e.send_tick, e.recv_tick)
+            for e in table.edges
+        )
+    )
+    return hashlib.sha1(table.grid.tobytes() + repr(edges).encode()).hexdigest()
+
+
+def _mm(S):
+    return MemoryModel.uniform(
+        num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Back-compat conformance: legacy kwargs == ScheduleSpec / SearchSpace
+# ---------------------------------------------------------------------------
+
+_LEGACY_VS_SPEC = [
+    (dict(k=1), ScheduleSpec()),
+    (dict(k=2, micro_batch_size=2), ScheduleSpec(k=2, micro_batch_size=2)),
+    (dict(k=1, kind="1f1b"), ScheduleSpec(kind="1f1b")),
+    (dict(k=1, kind="gpipe"), ScheduleSpec(kind="gpipe")),
+    (dict(k=2, kind="zb_h1"), ScheduleSpec(kind="zb_h1", k=2)),
+    (dict(k=1, kind="zb_h2", extra_warmup=2),
+     ScheduleSpec(kind="zb_h2", extra_warmup=2)),
+    (dict(k=1, kind="zb_h2", extra_warmup=(0, 1, 0, 2)),
+     ScheduleSpec(kind="zb_h2", extra_warmup=(0, 1, 0, 2))),
+    (dict(k=2, kind="interleaved", num_virtual=2),
+     ScheduleSpec(kind="interleaved", k=2, num_virtual=2)),
+    (dict(k=1, kind="interleaved_zb", num_virtual=2, extra_warmup=1),
+     ScheduleSpec(kind="interleaved_zb", num_virtual=2, extra_warmup=1)),
+    (dict(k=1, kind="zbv"), ScheduleSpec(kind="zbv")),
+    (dict(k=2, kind="zbv", extra_warmup=(1, 0, 2, 1)),
+     ScheduleSpec(kind="zbv", k=2, extra_warmup=(1, 0, 2, 1))),
+]
+
+
+@pytest.mark.parametrize(
+    "legacy,spec", _LEGACY_VS_SPEC,
+    ids=[s.kind + f"-k{s.k}" for _, s in _LEGACY_VS_SPEC],
+)
+def test_make_plan_legacy_kwargs_equal_spec(legacy, spec):
+    """Same coordinates, either calling convention -> the SAME lowered
+    plan, bit for bit (grid + exact edge list)."""
+    S, M = 4, 8
+    old = make_plan(S, M, **legacy)
+    new = make_plan(S, M, spec=spec)
+    assert _digest(old) == _digest(new)
+    assert old.name == new.name
+    assert old.spec == new.spec
+
+
+def test_make_plan_rejects_mixing_spec_and_kwargs():
+    with pytest.raises(ValueError, match="not both"):
+        make_plan(4, 8, 2, spec=ScheduleSpec(kind="zb_h1"))
+
+
+def test_plan_spec_roundtrip():
+    """plan.spec is normalized (aliases folded, w a vector) and rebuilding
+    from it reproduces the plan."""
+    plan = make_plan(4, 8, 1, kind="gpipe")
+    assert plan.spec == ScheduleSpec(kind="kfkb", k=8, extra_warmup=(0,) * 4)
+    again = make_plan(4, 8, spec=plan.spec)
+    assert _digest(plan) == _digest(again)
+
+
+def test_enumerate_candidates_legacy_kwargs_equal_search_space():
+    """The legacy axis kwargs and an explicit SearchSpace produce the same
+    candidate list: same order, same coordinates, same lowered digests,
+    same memory pricing."""
+    S, B = 4, 32
+    mm = _mm(S)
+    kinds = ("kfkb", "zb_h1", "zb_h2", "interleaved", "interleaved_zb", "zbv")
+    old = enumerate_candidates(
+        S, B, mm, 1e8, max_k=4, kinds=kinds, virtual_degrees=(2,),
+        max_extra_warmup=3,
+    )
+    new = enumerate_candidates(
+        S, B, mm, 1e8,
+        space=SearchSpace(
+            kinds=kinds, virtual_degrees=(2,), max_k=4, max_extra_warmup=3
+        ),
+    )
+    assert [c.name for c in old] == [c.name for c in new]
+    assert [c.spec for c in old] == [c.spec for c in new]
+    assert [c.est_peak_bytes for c in old] == [c.est_peak_bytes for c in new]
+    assert [_digest(c.plan) for c in old] == [_digest(c.plan) for c in new]
+    assert any(c.kind == "zbv" for c in new)  # the registry-only member searches
+
+
+def test_candidate_record_cache_share_one_spec_currency():
+    """Candidate.spec == TuningRecord.chosen_spec == the ScheduleSpec
+    inside the compile-cache key: one currency end to end."""
+    from repro.core import AutoTuner, NetworkProfiler, StableTrace
+    from repro.runtime.compile_cache import CompiledStepCache
+
+    S, B = 4, 32
+    cands = enumerate_candidates(
+        S, B, _mm(S), 1e8, max_k=2, kinds=("kfkb", "zb_h1", "zbv"),
+    )
+    costs_for = lambda c: StageCosts.uniform(S, 0.1, act_bytes=1.0)  # noqa: E731
+    net = uniform_network(S, lambda: StableTrace(100.0))
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net))
+    rec = tuner.tune(now=0.0)
+    winner = next(c for c in cands if c.name == rec.chosen)
+    assert rec.chosen_spec == winner.spec == winner.plan.spec
+    key = CompiledStepCache.plan_key(winner.table)
+    assert winner.spec in key
+
+
+# ---------------------------------------------------------------------------
+# Fail-closed registry
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_kind_fails_closed_everywhere():
+    """An unregistered kind raises a ValueError NAMING the registered
+    kinds — in the registry lookup, in make_plan, and in the candidate
+    search; it is never silently skipped."""
+    for call in (
+        lambda: get_kind("zb_h3"),
+        lambda: make_plan(4, 8, 1, kind="zb_h3"),
+        lambda: make_plan(4, 8, spec=ScheduleSpec(kind="zb_h3")),
+    ):
+        with pytest.raises(ValueError, match="registered kinds") as ei:
+            call()
+        for kind in registered_kinds():
+            assert kind in str(ei.value)
+    with pytest.raises(ValueError, match="unknown schedule kind"):
+        enumerate_candidates(4, 32, _mm(4), 1e8, kinds=("kfkb", "zb_h3"))
+
+
+def test_known_kinds_covers_registry_and_aliases():
+    """The candidate search accepts exactly the registry + aliases — a
+    registered kind can never be rejected as unknown (the old hardcoded
+    ``PLAN_KINDS + ("1f1b", "gpipe")`` tuple drifted by construction)."""
+    ks = known_kinds()
+    assert set(registered_kinds()) <= set(ks)
+    assert {"1f1b", "gpipe"} <= set(ks)
+    # every known name is accepted by the search (smoke: no ValueError)
+    enumerate_candidates(4, 16, _mm(4), 1e9, max_k=1, kinds=ks)
+
+
+def test_duplicate_registration_rejected():
+    from repro.core import KindSpec, register_kind
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_kind(
+            KindSpec(
+                name="kfkb",
+                build_orders=lambda *a: [],
+                peak_live_groups=lambda *a: [],
+            )
+        )
+
+
+def test_capability_flags_gate_coordinates():
+    """Coordinate validation is capability-driven: virtual degrees only on
+    virtual-capable kinds, ZB-V pinned to 2 chunks, warmup only on
+    warmup-capable kinds."""
+    with pytest.raises(ValueError, match="interleaved kind"):
+        make_plan(4, 8, 1, kind="zb_h1", num_virtual=2)
+    with pytest.raises(ValueError, match="exactly 2 chunks"):
+        make_plan(4, 8, 1, kind="zbv", num_virtual=3)
+    assert make_plan(4, 8, 1, kind="zbv").num_virtual == 2  # coerced default
+
+
+# ---------------------------------------------------------------------------
+# The grep gate: no kind-string dispatch outside kinds.py / schedule.py
+# ---------------------------------------------------------------------------
+
+_ALLOWED = {os.path.join("core", "kinds.py"), os.path.join("core", "schedule.py")}
+#: schedule-kind string dispatch (`plan.kind == "zb_h2"`-style ladders) or
+#: membership tests against the legacy kind-set tuples
+_DISPATCH = [
+    re.compile(
+        r"kind\s*(?:==|!=)\s*[\"']"
+        r"(?:kfkb|zb_h1|zb_h2|interleaved|interleaved_zb|zbv|1f1b|gpipe)[\"']"
+    ),
+    re.compile(r"kind\s+(?:not\s+)?in\s+\("),
+    re.compile(
+        r"kind\s+(?:not\s+)?in\s+"
+        r"(?:PLAN_KINDS|ZB_KINDS|INTERLEAVED_KINDS|WARMUP_KINDS)"
+    ),
+]
+
+
+def test_no_kind_string_dispatch_outside_registry():
+    """The redesign's lock: every schedule-kind decision outside the
+    registry and the schedule module itself must go through KindSpec
+    capability flags.  New ``kind == "..."`` ladders fail here (and the CI
+    lint job runs the same scan)."""
+    offenders = []
+    for root, _, files in os.walk(_SRC):
+        for f in files:
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(root, f)
+            rel = os.path.relpath(path, _SRC)
+            if rel in _ALLOWED:
+                continue
+            with open(path) as fh:
+                for i, line in enumerate(fh, 1):
+                    if any(p.search(line) for p in _DISPATCH):
+                        offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, (
+        "schedule-kind string dispatch outside core/kinds.py + "
+        "core/schedule.py:\n" + "\n".join(offenders)
+    )
+
+
+# ---------------------------------------------------------------------------
+# ZB-V: the registry-only member's acceptance gates
+# ---------------------------------------------------------------------------
+
+
+def test_zbv_peak_live_below_plain_interleaved():
+    """The controllable-memory trade, memory half: at equal (S, M, k) the
+    V placement's worst-device peak live count is strictly below plain
+    interleaved's (whose looped placement forces the deep Megatron
+    warmup) — and exactly the registered closed-form row prices it."""
+    from repro.core import predicted_peak_live
+
+    for S, M, k in ((4, 16, 1), (4, 32, 2), (8, 32, 1), (3, 12, 1)):
+        zbv = make_plan(S, M, k, kind="zbv")
+        il = make_plan(S, M, k, kind="interleaved", num_virtual=2)
+        assert max(peak_live_activations(zbv)) < max(peak_live_activations(il))
+        assert all(
+            p <= pr
+            for p, pr in zip(peak_live_activations(zbv), predicted_peak_live(zbv))
+        )
+
+
+def test_zbv_makespan_no_worse_than_1f1b_under_preemption():
+    """The controllable-memory trade, time half: on the preemption traces
+    ZB-V's simulated makespan is no worse than 1F1B's (the W filler +
+    V-shaped turn absorb the stalls), despite holding ~half the
+    plain-interleaved peak."""
+    for S, M in ((4, 16), (8, 32), (3, 12)):
+        costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
+
+        def trace():
+            return PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+
+        len_1f1b = simulate_plan(
+            make_plan(S, M, 1), costs, uniform_network(S, trace)
+        ).pipeline_length
+        len_zbv = simulate_plan(
+            make_plan(S, M, 1, kind="zbv"), costs, uniform_network(S, trace)
+        ).pipeline_length
+        assert len_zbv <= len_1f1b * 1.001, (S, M, len_zbv, len_1f1b)
+
+
+def test_zbv_lowered_plan_is_near_zero_bubble():
+    """Unit-cost bubble fraction of the lowered V stays single-digit —
+    the 2S-slot cap actually buys the zero-bubble operating point."""
+    for S, M in ((4, 16), (8, 32)):
+        stats = make_plan(S, M, 1, kind="zbv").lower().stats()
+        assert stats["bubble_fraction"] < 0.10, (S, M, stats)
+
+
+def test_zbv_weight_placement_refinable():
+    """ZB-V's registry record opts into the W-placement refinement; the
+    optimizer must preserve the task multiset and the plan's peak-live
+    price on the V placement."""
+    from repro.core import optimize_weight_placement
+
+    plan = make_plan(4, 8, 1, kind="zbv")
+    assert get_kind("zbv").weight_placement_refinable
+    skew = StageCosts(
+        fwd_time=[1.0, 0.8, 1.2, 0.9], bwd_time=[3.0, 2.0, 2.4, 2.8],
+        fwd_bytes=[1.0] * 4, bwd_bytes=[1.0] * 4,
+        bwd_input_time=[0.7, 1.1, 0.9, 1.3], bwd_weight_time=[2.3, 0.9, 1.5, 1.5],
+    )
+    bw = {(a, b): 2.0 for a in range(4) for b in range(4) if abs(a - b) == 1}
+    opt = optimize_weight_placement(plan, skew, bw, evaluator="full")
+    assert sorted(t.key() for o in opt.orders for t in o) == sorted(
+        t.key() for o in plan.orders for t in o
+    )
+    assert max(peak_live_activations(opt)) <= max(peak_live_activations(plan))
+    opt.lower().validate()
