@@ -45,6 +45,7 @@ def dry_run() -> int:
     )
     from benchmarks.common import ensure_results_dir
     from repro.core import StableTrace, StageCosts, simulate_plan, uniform_network
+    from repro.core.kinds import ScheduleSpec
     from repro.core.schedule import make_plan
 
     ensure_results_dir()  # a fresh clone must survive its first write
@@ -67,7 +68,7 @@ def dry_run() -> int:
         ("interleaved_zb", 1, 2, (1, 0, 2, 1)),  # interleaved H2
     ]
     for kind, k, v, w in cells:
-        plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
+        plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, k=k, num_virtual=v, extra_warmup=w))
         res = simulate_plan(plan, costs, net)
         print(f"[dry-run] {plan.name:28s} length={res.pipeline_length:7.2f} "
               f"bubble={res.bubble_fraction:.3f}")

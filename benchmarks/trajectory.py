@@ -20,6 +20,10 @@ a PINNED, fully seeded subset of the paper benchmarks —
   count, precompile hit rate on the tuner's candidate stream, warm-cache
   switch latency as a fraction of one iteration (wall-clock), and the
   probe overhead passive telemetry saves vs suspend-and-probe,
+* **coordinator fabric** — a two-host ``LocalTransport`` fleet driven
+  through a scripted refusal (fleet-wide abort) and a committed warm
+  switch: barrier verdict counts, commit latency (wall-clock), and the
+  worst per-host precompile hit rate,
 
 — and writes them as schema-versioned ``BENCH_<tag>.json`` at the repo
 root.  The CI ``bench`` job (main only) runs ``--check``: against the most
@@ -55,6 +59,8 @@ from repro.core import (  # noqa: E402
     Network,
     NetworkProfiler,
     RegimeTrace,
+    ScheduleSpec,
+    SearchSpace,
     StableTrace,
     StageCosts,
     enumerate_candidates,
@@ -87,13 +93,26 @@ GATES = {
     "runtime_precompile_hit_rate": ("higher", REL_TOL),
     "runtime_probe_overhead_saved_frac": ("higher", REL_TOL),
     "runtime_warm_switch_frac": ("lower", 0.5),
+    # tuner trajectory (PR 6): the decision trail must keep crossing kinds
+    "tuner_kind_diversity": ("higher", 0.0),
+    # coordinator fabric (PR 6): the scripted two-host trail must keep its
+    # one refused epoch (fleet-wide abort) and one committed warm switch,
+    # and precompilation must keep the boundary switch on the warm path
+    "fabric_committed_switches": ("higher", 0.0),
+    "fabric_aborted_switches": ("higher", 0.0),
+    "fabric_precompile_hit_rate_min": ("higher", REL_TOL),
+    "fabric_barrier_latency_commit": ("lower", 0.5),
 }
 
 #: wall-clock metrics only gate against a baseline recorded on a comparable
 #: machine — a BENCH committed from a dev laptop must not fail the CI
 #: runner (or vice versa) on hardware difference alone; on a fingerprint
 #: mismatch they are reported but not gated
-WALL_CLOCK_METRICS = {"sim_events_per_sec", "runtime_warm_switch_frac"}
+WALL_CLOCK_METRICS = {
+    "sim_events_per_sec",
+    "runtime_warm_switch_frac",
+    "fabric_barrier_latency_commit",
+}
 
 
 def machine_fingerprint() -> dict:
@@ -128,8 +147,8 @@ def vector_w_gain() -> dict:
     net = uniform_network(
         S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
     )
-    vec = make_plan(S, M, 1, kind="zb_h2", extra_warmup=(3, 3, 2, 1))
-    scal = make_plan(S, M, 1, kind="zb_h2", extra_warmup=1)
+    vec = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(3, 3, 2, 1)))
+    scal = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1))
     len_v = simulate_plan(vec, costs, net).pipeline_length
     len_s = simulate_plan(scal, costs, net).pipeline_length
     return {
@@ -155,11 +174,11 @@ def zbv_ratios() -> dict:
     len_1f1b = simulate_plan(
         make_plan(S, M, 1), costs, uniform_network(S, trace)
     ).pipeline_length
-    zbv = make_plan(S, M, 1, kind="zbv")
+    zbv = make_plan(S, M, spec=ScheduleSpec(kind="zbv"))
     len_zbv = simulate_plan(zbv, costs, uniform_network(S, trace)).pipeline_length
     peak_zbv = max(peak_live_activations(zbv))
     peak_il = max(
-        peak_live_activations(make_plan(S, M, 1, kind="interleaved", num_virtual=2))
+        peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="interleaved", num_virtual=2)))
     )
     return {
         "zbv_preempted_len": len_zbv,
@@ -170,9 +189,21 @@ def zbv_ratios() -> dict:
 
 
 def tuner_switch_trace() -> dict:
-    """Seeded Fig-10-style regime trace (4 'hours', preemption heavy ->
-    heavy -> eased -> heavy); kind-diverse candidates; all decisions are
-    deterministic given the trace seeds."""
+    """Seeded Fig-10-style regime trace (4 'hours': preemption crush ->
+    contended mid-bandwidth -> eased -> crush); all decisions deterministic
+    given the trace seeds.
+
+    The candidate space spans five schedule kinds at ``max_k=2`` — at
+    ``max_k=4`` a single family's deepest-k member dominates every regime
+    and the trajectory never leaves it (the ROADMAP-flagged degeneracy).
+    With the capped space each regime has a different winner: the crush
+    hours reward zero-bubble splitting (``zb_h2``), the eased hour's cheap
+    links reward ZB-V's bubble-free V placement (``zbv``), and contended
+    mid-bandwidth windows reward interleaving compute over the stalls
+    (``interleaved``) — the per-link bursty realizations at the decision
+    instants pick which of the last two regimes each non-crush hour lands
+    in, and ``tuner_kind_diversity`` gates that the trajectory keeps
+    crossing >= 3 kinds."""
     S, B, hour = 4, 32, 600.0
     mm = MemoryModel.uniform(
         num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
@@ -180,7 +211,11 @@ def tuner_switch_trace() -> dict:
         layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
     )
     cands = enumerate_candidates(
-        S, B, mm, 1e8, max_k=4, kinds=("kfkb", "zb_h1", "zb_h2"),
+        S, B, mm, 1e8,
+        space=SearchSpace(
+            kinds=("kfkb", "zb_h1", "zb_h2", "zbv", "interleaved"),
+            virtual_degrees=(2,), max_k=2,
+        ),
     )
 
     costs_by_b = {}
@@ -192,23 +227,27 @@ def tuner_switch_trace() -> dict:
             )
         return costs_by_b[cand.micro_batch_size]
 
-    def hourly(seed, heavy):
-        if heavy:
-            return BurstyTrace(8.0, contended_frac=0.1, mean_free=0.3,
-                               mean_contended=0.9, seed=seed)
-        return BurstyTrace(8.0, contended_frac=0.6, mean_free=2.0,
-                           mean_contended=0.2, seed=seed)
+    def crush(seed):
+        return BurstyTrace(8.0, contended_frac=0.3, mean_free=0.1,
+                           mean_contended=1.0, seed=seed)
+
+    def contended_mid(seed):
+        return BurstyTrace(100.0, contended_frac=0.3, mean_free=0.1,
+                           mean_contended=1.0, seed=seed)
 
     def link_trace(a, b):
         seed = a * 17 + b
         return RegimeTrace(
             breakpoints=[hour, 2 * hour, 3 * hour],
-            traces=[hourly(seed, True), hourly(seed + 7, True),
-                    hourly(seed + 13, False), hourly(seed + 23, True)],
+            traces=[crush(seed), contended_mid(seed + 7), StableTrace(200.0),
+                    crush(seed + 23)],
         )
 
     net = Network.build(S, link_trace)
-    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net, window=4))
+    # window == probes-per-round: each decision reads exactly the current
+    # regime's samples (a wider window leaks stale-regime samples across
+    # hour boundaries and blurs the regime winners)
+    tuner = AutoTuner(cands, costs_for, NetworkProfiler(net, window=3))
     recs = [tuner.tune(h * hour + 30.0) for h in range(4)]
     switches = sum(1 for r in recs[1:] if r.switched)
     beat = 0
@@ -217,10 +256,12 @@ def tuner_switch_trace() -> dict:
         r = recs[h]
         if r.estimates[r.chosen] < r.estimates[one_f1b]:
             beat += 1
+    kinds = [r.chosen_kind for r in recs]
     return {
         "tuner_switch_count": switches,
-        "tuner_chosen_kinds": [r.chosen_kind for r in recs],
+        "tuner_chosen_kinds": kinds,
         "tuner_chosen_ks": [r.chosen_k for r in recs],
+        "tuner_kind_diversity": len(set(kinds)),
         "tuner_preempted_hours_beat_1f1b": beat,
         "tuner_candidates": len(cands),
     }
@@ -231,7 +272,7 @@ def simulator_throughput(repeats: int = 5) -> dict:
     tasks + completed transfers).  Wall-clock, hence gated loosely."""
     S, M, k = 8, 32, 2
     costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
-    plan = make_plan(S, M, k, kind="zb_h1")
+    plan = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", k=k))
     net = uniform_network(S, lambda: BurstyTrace(4.0, seed=11))
     graph_tasks = sum(len(o) for o in plan.orders)
     transfers = 2 * M * (S - 1)
@@ -287,6 +328,63 @@ def runtime_metrics(iterations: int = 14) -> dict:
     }
 
 
+def fabric_metrics(iterations: int = 8) -> dict:
+    """The coordinator fabric's own health numbers on a two-host
+    ``LocalTransport`` fleet (tiny 2-stage model, reference backend).
+
+    A scripted decision trail drives the two-phase barrier through both
+    verdicts, deterministically: epoch 1 proposes a spec no host can lower
+    (instant fleet-wide refusal -> the aborted-switch path), epoch 2
+    proposes a real candidate (precompile-vote-commit -> the warm-switch
+    path, both hosts at the same boundary).  Counts and hit rates are
+    deterministic; the commit's barrier latency is wall-clock (it spans
+    each host's precompile), hence fingerprint-gated.  Imports are local
+    for the same reason as ``runtime_metrics`` — this compiles real steps
+    and ``--skip-runtime`` must stay light."""
+    from repro.core import ScheduleSpec as Spec
+    from repro.launch.train_adaptive import (
+        build_fabric_fleet,
+        fig10_parts,
+        run_fabric_rounds,
+    )
+
+    _, _, cands, _ = fig10_parts(2, d_model=8)
+    target = cands[1].spec
+
+    def scripted(server):
+        hist = server.barrier.history
+        if not hist:
+            # no host can lower this: every prepare() votes ready=False
+            return Spec(kind="bogus", micro_batch_size=2)
+        if len(hist) == 1:
+            return target
+        return None
+
+    server, workers = build_fabric_fleet(
+        num_hosts=2, num_stages=2, d_model=8, seq_len=16,
+        vote_timeout=600.0, decision_fn=scripted,
+    )
+    try:
+        out = run_fabric_rounds(server, workers, iterations)
+    finally:
+        for w in workers:
+            w.runtime.cache.shutdown()
+    fab = out["fabric"]
+    commits = [r for r in server.barrier.history if r.committed]
+    return {
+        "fabric_hosts": fab["hosts"],
+        "fabric_telemetry_windows": fab["telemetry_windows"],
+        "fabric_committed_switches": fab["committed_switches"],
+        "fabric_aborted_switches": fab["aborted_switches"],
+        "fabric_barrier_latency_commit": max(
+            (r.latency for r in commits), default=0.0
+        ),
+        "fabric_precompile_hit_rate_min": min(
+            h["precompile_hit_rate"] for h in out["hosts"].values()
+        ),
+    }
+
+
 def collect(skip_runtime: bool = False) -> dict:
     metrics = {}
     metrics.update(fig2_ratios())
@@ -296,6 +394,7 @@ def collect(skip_runtime: bool = False) -> dict:
     metrics.update(simulator_throughput())
     if not skip_runtime:
         metrics.update(runtime_metrics())
+        metrics.update(fabric_metrics())
     return metrics
 
 

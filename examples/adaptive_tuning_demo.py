@@ -56,16 +56,23 @@ def main():
 
     net = Network.build(S, link)
     tuner = AutoTuner(cands, costs_for, NetworkProfiler(net, window=4))
-    trail = []
-    coord = Coordinator(
-        tuner, net, GB, tuning_interval=4.0,
-        on_iteration=lambda rec: trail.append((round(rec.start, 1), rec.plan_name,
-                                               round(rec.samples_per_s, 1))),
-    )
+
+    class TrailHook:
+        """Typed IterationHook: collect (start_s, plan, samples/s) rows."""
+
+        def __init__(self):
+            self.rows = []
+
+        def on_iteration(self, rec):
+            self.rows.append((round(rec.start, 1), rec.plan_name,
+                              round(rec.samples_per_s, 1)))
+
+    trail = TrailHook()
+    coord = Coordinator(tuner, net, GB, tuning_interval=4.0, hooks=[trail])
     summary = coord.run(40)
     print("iteration trail (start_s, plan, samples/s):")
     last = None
-    for t, plan, sps in trail:
+    for t, plan, sps in trail.rows:
         if plan != last:
             print(f"  t={t:8.1f}s  -> switched to {plan}  ({sps} sps)")
             last = plan

@@ -15,6 +15,7 @@ from repro.core.candidates import (
 )
 from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
 from repro.core.costmodel import CostModel, closed_form_1f1b_length, link_probe_specs
+from repro.core.interfaces import IterationHook, TelemetrySink
 from repro.core.kinds import (
     KindSpec,
     ScheduleSpec,
@@ -41,7 +42,13 @@ from repro.core.network import (
     uniform_network,
 )
 from repro.core.placement import optimize_weight_placement
-from repro.core.profiler import ComputeProfiler, MovingAverage, NetworkProfiler
+from repro.core.profiler import (
+    ComputeProfiler,
+    LinkSample,
+    MovingAverage,
+    NetworkProfiler,
+    merge_link_samples,
+)
 from repro.core.schedule import (
     INTERLEAVED_KINDS,
     PLAN_KINDS,
@@ -77,6 +84,8 @@ __all__ = [
     "Coordinator",
     "IterationRecord",
     "RunSummary",
+    "IterationHook",
+    "TelemetrySink",
     "CostModel",
     "closed_form_1f1b_length",
     "link_probe_specs",
@@ -94,8 +103,10 @@ __all__ = [
     "StableTrace",
     "uniform_network",
     "ComputeProfiler",
+    "LinkSample",
     "MovingAverage",
     "NetworkProfiler",
+    "merge_link_samples",
     "Op",
     "PLAN_KINDS",
     "ZB_KINDS",

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Sequence
+import warnings
 
 from repro.core.kinds import (
     ScheduleSpec,
@@ -117,12 +118,7 @@ def _build(
     ):
         # the paper's original search path — keep legacy factories working
         return plan_factory(num_stages, M, spec.k, micro_batch_size=spec.micro_batch_size)
-    kw = dict(kind=spec.kind, num_virtual=spec.num_virtual)
-    if max(spec.extra_warmup):
-        kw["extra_warmup"] = spec.extra_warmup
-    return plan_factory(
-        num_stages, M, spec.k, micro_batch_size=spec.micro_batch_size, **kw
-    )
+    return plan_factory(num_stages, M, spec=spec)
 
 
 def largest_admissible_warmup(
@@ -160,18 +156,21 @@ def enumerate_candidates(
     max_k: int | None = None,
     min_microbatches: int | None = None,
     plan_factory: Callable[..., SchedulePlan] = make_plan,
-    kinds: Sequence[str] = ("kfkb",),
-    virtual_degrees: Sequence[int] = (2,),
+    kinds: Sequence[str] | None = None,
+    virtual_degrees: Sequence[int] | None = None,
     max_extra_warmup: int | None = None,
     space: SearchSpace | None = None,
 ) -> list[Candidate]:
     """Enumerate the memory-limit-curve candidates.
 
     The search axes come from one :class:`~repro.core.kinds.SearchSpace`
-    passed as ``space=``; the legacy kwargs (``kinds=``,
+    passed as ``space=``.  The legacy kwargs (``kinds=``,
     ``virtual_degrees=``, ``max_k=``, ``min_microbatches=``,
-    ``max_extra_warmup=``) remain accepted and simply build one —
-    conformance-tested to produce identical candidates.
+    ``max_extra_warmup=``) are **deprecated** (PR 6 finishes PR 5's
+    migration): they remain accepted — they simply build a ``SearchSpace``,
+    conformance-tested to produce identical candidates — but emit
+    :class:`DeprecationWarning`, and a grep gate keeps in-repo callers on
+    ``space=``.
 
     ``min_microbatches`` (default: ``num_stages``) rejects plans that
     cannot even fill the pipeline once — the paper always injects at least
@@ -183,10 +182,27 @@ def enumerate_candidates(
     fail loudly against the registry.  ``memory_limit_bytes`` may be a
     scalar or a per-stage curve.
     """
+    legacy = {
+        "kinds": kinds,
+        "virtual_degrees": virtual_degrees,
+        "max_k": max_k,
+        "min_microbatches": min_microbatches,
+        "max_extra_warmup": max_extra_warmup,
+    }
+    given = sorted(name for name, value in legacy.items() if value is not None)
+    if given:
+        warnings.warn(
+            f"enumerate_candidates({', '.join(n + '=' for n in given)}...) is "
+            "deprecated; declare the axes as one space=SearchSpace(...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if space is not None:
+            raise ValueError("pass space= or the legacy axis kwargs, not both")
     if space is None:
         space = SearchSpace(
-            kinds=tuple(kinds),
-            virtual_degrees=tuple(virtual_degrees),
+            kinds=tuple(kinds) if kinds is not None else ("kfkb",),
+            virtual_degrees=tuple(virtual_degrees) if virtual_degrees is not None else (2,),
             max_k=max_k,
             min_microbatches=min_microbatches,
             max_extra_warmup=max_extra_warmup,

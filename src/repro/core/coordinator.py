@@ -6,23 +6,32 @@ cluster* iteration by iteration: every iteration executes the current plan's
 task graph against the ground-truth network traces (whose state depends on
 wall-clock simulated time — phase matters under periodic preemption), and at
 the configured interval it invokes the auto-tuner, applying plan switches
-immediately.  A pluggable ``on_iteration`` hook lets the real JAX engine run
-the equivalent compiled step alongside — that is where
-:class:`repro.runtime.harness.RealEngineHarness` attaches the live
-plan-switch runtime (compiled-step cache + warm kind switches), closing the
-adaptive loop on real gradients.
+immediately.
 
-Two telemetry refinements (both default-off, preserving the paper's
-behaviour):
+Its two extension points are the typed control-plane protocols of
+:mod:`repro.core.interfaces` (PR 6's api redesign — previously a
+duck-typed ``telemetry=`` object and a bare ``on_iteration`` callable):
 
-* ``telemetry`` — a :class:`repro.runtime.telemetry.TelemetryBus` (any
-  object with ``publish_iteration``); every simulated iteration's observed
-  length is published so passive subscribers can keep the
-  :class:`~repro.core.profiler.NetworkProfiler` windows fresh.
-* the charged ``tuning_overhead`` is scaled by each round's
-  ``TuningRecord.probe_fraction`` — with a passive tuner
-  (``passive_staleness``) and fresh windows, no link is actually probed and
-  the suspension cost goes to ~0 (§5.4's "minimal overhead", measured).
+* ``telemetry_sink`` — a :class:`~repro.core.interfaces.TelemetrySink`
+  (e.g. :class:`repro.runtime.telemetry.TelemetryBus`); every simulated
+  iteration's observed length is published so passive subscribers can keep
+  the :class:`~repro.core.profiler.NetworkProfiler` windows fresh.
+* ``hooks`` — :class:`~repro.core.interfaces.IterationHook` participants
+  whose ``on_iteration(rec)`` runs after every iteration.  That is where
+  :class:`repro.runtime.harness.RealEngineHarness` attaches the live
+  plan-switch runtime (compiled-step cache + warm kind switches), closing
+  the adaptive loop on real gradients.
+
+The legacy kwargs (``telemetry=`` object, ``on_iteration=`` bare callable)
+still work through shims that emit :class:`DeprecationWarning` and adapt to
+the typed forms; new call sites must use the protocols (a grep gate keeps
+in-repo callers migrated).
+
+One more refinement (default-off, preserving the paper's behaviour): the
+charged ``tuning_overhead`` is scaled by each round's
+``TuningRecord.probe_fraction`` — with a passive tuner
+(``passive_staleness``) and fresh windows, no link is actually probed and
+the suspension cost goes to ~0 (§5.4's "minimal overhead", measured).
 
 This is also the harness the Fig-10 experiment uses.
 """
@@ -30,9 +39,11 @@ This is also the harness the Fig-10 experiment uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import warnings
+from typing import Callable, Sequence
 
 from repro.core.candidates import Candidate
+from repro.core.interfaces import IterationHook, TelemetrySink
 from repro.core.network import Network
 from repro.core.simulator import simulate_plan
 from repro.core.tuner import AutoTuner, TuningRecord
@@ -90,6 +101,17 @@ def _shifted_network(net: Network, t0: float) -> Network:
     )
 
 
+class _CallableHook:
+    """Adapter giving a bare ``Callable[[IterationRecord], None]`` the
+    :class:`IterationHook` shape (the legacy ``on_iteration=`` shim)."""
+
+    def __init__(self, fn: Callable[[IterationRecord], object]) -> None:
+        self._fn = fn
+
+    def on_iteration(self, rec: IterationRecord) -> object:
+        return self._fn(rec)
+
+
 class Coordinator:
     def __init__(
         self,
@@ -98,18 +120,47 @@ class Coordinator:
         global_batch: int,
         tuning_interval: float,
         tuning_overhead: float = 0.0,
-        on_iteration: Callable[[IterationRecord], None] | None = None,
-        telemetry=None,
+        hooks: Sequence[IterationHook] = (),
+        telemetry_sink: TelemetrySink | None = None,
+        **legacy,
     ) -> None:
         self.tuner = tuner
         self.network = network
         self.global_batch = global_batch
         self.tuning_interval = tuning_interval
         self.tuning_overhead = tuning_overhead
-        self.on_iteration = on_iteration
-        # duck-typed TelemetryBus (publish_iteration(**kw)); kept untyped so
-        # core never imports repro.runtime
-        self.telemetry = telemetry
+        self.hooks: list[IterationHook] = list(hooks)
+        self.telemetry_sink = telemetry_sink
+        # -- legacy shims (PR 6 api redesign) ---------------------------------
+        # telemetry=<duck-typed bus> and on_iteration=<bare callable> predate
+        # the typed protocols; both still work, warn, and adapt.
+        if "telemetry" in legacy:
+            warnings.warn(
+                "Coordinator(telemetry=...) is deprecated; pass the typed "
+                "telemetry_sink= (any repro.core.interfaces.TelemetrySink)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            shimmed = legacy.pop("telemetry")
+            if shimmed is not None:
+                if self.telemetry_sink is not None:
+                    raise ValueError("pass telemetry_sink= or telemetry=, not both")
+                self.telemetry_sink = shimmed
+        if "on_iteration" in legacy:
+            warnings.warn(
+                "Coordinator(on_iteration=<callable>) is deprecated; pass "
+                "hooks=[...] of repro.core.interfaces.IterationHook "
+                "participants (objects with an on_iteration method)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            fn = legacy.pop("on_iteration")
+            if fn is not None:
+                self.hooks.append(
+                    fn if isinstance(fn, IterationHook) else _CallableHook(fn)
+                )
+        if legacy:
+            raise TypeError(f"unknown Coordinator kwargs: {sorted(legacy)}")
 
     def run(self, num_iterations: int, tune_first: bool = True) -> RunSummary:
         now = 0.0
@@ -138,8 +189,8 @@ class Coordinator:
                 samples_per_s=self.global_batch / result.pipeline_length,
             )
             iters.append(rec)
-            if self.telemetry is not None:
-                self.telemetry.publish_iteration(
+            if self.telemetry_sink is not None:
+                self.telemetry_sink.publish_iteration(
                     index=i,
                     plan=cand.plan,
                     costs=costs,
@@ -147,8 +198,8 @@ class Coordinator:
                     end_time=now + result.pipeline_length,
                     source="sim",
                 )
-            if self.on_iteration:
-                self.on_iteration(rec)
+            for hook in self.hooks:
+                hook.on_iteration(rec)
             now += result.pipeline_length
         return RunSummary(
             iterations=iters,

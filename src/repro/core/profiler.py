@@ -33,11 +33,18 @@ import collections
 import dataclasses
 import statistics
 import time
-from typing import Callable
+from typing import Callable, Mapping, Sequence
 
 from repro.core.network import Network
 
-__all__ = ["MovingAverage", "ComputeProfiler", "NetworkProfiler", "time_callable"]
+__all__ = [
+    "MovingAverage",
+    "ComputeProfiler",
+    "LinkSample",
+    "NetworkProfiler",
+    "merge_link_samples",
+    "time_callable",
+]
 
 
 class MovingAverage:
@@ -92,6 +99,67 @@ class ComputeProfiler:
         return self._cache[key]
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkSample:
+    """One observed effective transfer on a cross-stage link.
+
+    The unit of partitioned telemetry in the coordinator fabric: worker
+    hosts ship windows of these (inferred from their own iteration
+    timings), and the central tuner's *offline* profiler is fed the merged
+    fleet view — see :func:`merge_link_samples`."""
+
+    src: int
+    dst: int
+    nbytes: float
+    duration: float
+    now: float
+
+    @property
+    def bandwidth(self) -> float:
+        return self.nbytes / self.duration if self.duration > 0 else float("inf")
+
+
+def merge_link_samples(
+    per_host: Mapping[str, Sequence[LinkSample]],
+    policy: str = "pessimistic",
+) -> list[LinkSample]:
+    """Merge per-host partitioned link observations into one fleet view.
+
+    Every host sees the same logical pipeline links but its own slice of
+    the wire, so the fleet profile per (src, dst, nbytes) class must pick a
+    representative.  ``pessimistic`` (the fabric default) keeps the slowest
+    observation — min effective bandwidth — because a group-schedule switch
+    is only safe if it pays off on the WORST host: the barrier commits all
+    hosts or none, and a plan tuned to the fastest host's wire would
+    regress the straggler the fleet must wait for anyway.  ``mean`` keeps
+    the per-class average instead (load-balanced clusters where transient
+    skew should not dominate).  Output is time-ordered so feeding it into
+    :meth:`NetworkProfiler.record` reproduces each class's window state
+    deterministically.
+    """
+    if policy not in ("pessimistic", "mean"):
+        raise ValueError(f"unknown merge policy {policy!r}")
+    by_class: dict[tuple[int, int, float], list[LinkSample]] = {}
+    for samples in per_host.values():
+        for s in samples:
+            by_class.setdefault((s.src, s.dst, float(s.nbytes)), []).append(s)
+    merged: list[LinkSample] = []
+    for (src, dst, nbytes), group in by_class.items():
+        if policy == "pessimistic":
+            worst = max(group, key=lambda s: s.duration)
+            merged.append(worst)
+        else:
+            merged.append(
+                LinkSample(
+                    src, dst, nbytes,
+                    statistics.fmean(s.duration for s in group),
+                    max(s.now for s in group),
+                )
+            )
+    merged.sort(key=lambda s: (s.now, s.src, s.dst))
+    return merged
+
+
 class NetworkProfiler:
     """Windowed end-to-end transfer-time measurement against a trace world.
 
@@ -99,9 +167,18 @@ class NetworkProfiler:
     given simulated time (one probe == one timed transfer of ``nbytes``).
     ``effective_time`` returns the moving-average measured duration for that
     link/byte-class, which is what the cost model consumes.
+
+    ``network=None`` builds an **offline** profiler — the coordinator-fabric
+    configuration, where the central tuner has no wire of its own and every
+    window is fed exclusively through :meth:`record` /
+    :meth:`record_samples` with telemetry merged from the worker hosts
+    (:func:`merge_link_samples`).  An offline profiler refuses
+    :meth:`measure` loudly; pair it with
+    ``AutoTuner(passive_staleness=...)`` so fresh windows are read instead
+    of probed.
     """
 
-    def __init__(self, network: Network, window: int = 8) -> None:
+    def __init__(self, network: Network | None, window: int = 8) -> None:
         self.network = network
         self.window = window
         self._avg: dict[tuple[int, int, float], MovingAverage] = {}
@@ -124,6 +201,12 @@ class NetworkProfiler:
     def measure(self, src: int, dst: int, nbytes: float, now: float,
                 probes: int = 3, spacing: float = 0.05) -> float:
         """Run ``probes`` timed transfers starting at ``now``; record & return mean."""
+        if self.network is None:
+            raise RuntimeError(
+                "offline NetworkProfiler (network=None) cannot probe the wire; "
+                "feed it via record()/record_samples() and run the tuner with "
+                "passive_staleness set"
+            )
         slot = self._slot(src, dst, nbytes)
         t = now
         durations = []
@@ -145,6 +228,12 @@ class NetworkProfiler:
         real iteration timings."""
         self._slot(src, dst, nbytes).add(duration)
         self._stamp(src, dst, nbytes, now)
+
+    def record_samples(self, samples: Sequence[LinkSample]) -> None:
+        """Bulk passive feed of (merged) :class:`LinkSample` observations —
+        the coordinator fabric's path into the central windows."""
+        for s in samples:
+            self.record(s.src, s.dst, s.nbytes, s.duration, now=s.now)
 
     def last_update(self, src: int, dst: int) -> float | None:
         """Time of the most recent sample (active or passive) on the link."""

@@ -155,6 +155,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 from typing import Iterator, Sequence
+import warnings
 
 import numpy as np
 
@@ -798,14 +799,18 @@ def make_plan(
 ) -> SchedulePlan:
     """Build a validated :class:`SchedulePlan` of any registered family member.
 
-    The schedule coordinates may come either from the legacy kwargs
-    (``k``, ``kind``, ``num_virtual``, ``extra_warmup``,
-    ``micro_batch_size``) or from one
-    :class:`~repro.core.kinds.ScheduleSpec` via ``spec=`` — the two forms
-    lower to identical plans (conformance-tested).  ``kind`` must be
-    registered in :mod:`repro.core.kinds` (``"1f1b"`` and ``"gpipe"`` are
-    aliases that force ``k``); coordinate validation — virtual-degree
-    rules, warmup capability, H2's ``w >= 1`` floor — is
+    The schedule coordinates come from one
+    :class:`~repro.core.kinds.ScheduleSpec` via ``spec=`` (the system's one
+    coordinate currency), or — for the paper's original two-coordinate
+    search — the plain positional ``(k, micro_batch_size)`` form.  The
+    family kwargs ``kind=`` / ``num_virtual=`` / ``extra_warmup=`` are
+    **deprecated** (PR 5 grew ``ScheduleSpec`` to carry them; PR 6 finishes
+    the migration): they still lower to identical plans
+    (conformance-tested) but emit :class:`DeprecationWarning`, and a grep
+    gate keeps in-repo callers on ``spec=``.  ``kind`` must be registered
+    in :mod:`repro.core.kinds` (``"1f1b"`` and ``"gpipe"`` are aliases
+    that force ``k``); coordinate validation — virtual-degree rules,
+    warmup capability, H2's ``w >= 1`` floor — is
     ``ScheduleSpec.resolve``'s, driven by the kind's capability flags.
     """
     from repro.core.kinds import ScheduleSpec, get_kind
@@ -816,6 +821,20 @@ def make_plan(
         if micro_batch_size != 1:
             raise ValueError("micro_batch_size travels inside spec= when given")
     else:
+        w_max = (
+            extra_warmup
+            if isinstance(extra_warmup, int)
+            else max(extra_warmup, default=0)
+        )
+        if kind != "kfkb" or num_virtual != 1 or w_max:
+            warnings.warn(
+                "make_plan(kind=..., num_virtual=..., extra_warmup=...) is "
+                "deprecated; pass the coordinates as one "
+                "spec=ScheduleSpec(kind=..., k=..., num_virtual=..., "
+                "extra_warmup=..., micro_batch_size=...)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         spec = ScheduleSpec(
             kind=kind,
             k=1 if k is None else k,

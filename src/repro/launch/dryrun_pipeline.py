@@ -37,6 +37,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.kinds import ScheduleSpec
 from repro.core.schedule import make_plan, tick_table, tick_table_stats
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
 from repro.models.common import param_count
@@ -80,7 +81,7 @@ def calibrate(config: str, S: int, b_mb: int, seq: int, out_dir: str) -> dict:
     # a per-stage limit curve: each stage's H1 peak plus 25% of its own
     # activation working set — heterogeneity makes the admitted w[s] differ
     M = max(4 * S, 8)
-    h1 = make_plan(S, M, 1, kind="zb_h1")
+    h1 = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
     base = mm.peak_bytes_per_stage(h1)
     limits = [
         p + 0.25 * mm.slot_bytes(s, b_mb, True) * S for s, p in enumerate(base)

@@ -1,0 +1,151 @@
+"""Per-host fabric worker process: connect, train, obey the barrier.
+
+One of these runs on every worker host of a multi-process fleet (the
+distributed integration test launches two against an in-test
+:class:`~repro.runtime.fabric.transport.CoordinatorListener`; a real
+deployment launches one per node).  It is deliberately thin: build the
+SAME candidate universe as every other host (:func:`fig10_parts` — a
+:class:`ScheduleSpec` on the wire must resolve to the same logical plan
+everywhere), wrap the local :class:`~repro.runtime.executor.PlanRuntime`
+in a :class:`~repro.runtime.fabric.worker.WorkerAgent`, dial the
+coordinator over TCP, and step.  All control flow — telemetry shipping,
+precompile-and-vote, boundary blocking, commit/rollback — lives in the
+agent; this file is argument parsing plus a result JSON.
+
+The result JSON carries the observables the integration test asserts on:
+per-iteration losses, the applied switch trail (epoch/boundary/verdict),
+the final spec, and an L1/L2 digest of the trained parameters for gradient
+parity against a single-process oracle run.
+
+Usage::
+
+    python -m repro.launch.fabric_worker --connect 127.0.0.1:9123 \\
+        --host host0 --host-index 0 --iterations 8 --out host0.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+
+from repro.data import SyntheticTextDataset
+from repro.launch.train_adaptive import fig10_parts
+from repro.optim import make_optimizer
+from repro.runtime.executor import PlanRuntime
+from repro.runtime.fabric import SocketTransport, WorkerAgent, fabric_probe_links
+
+__all__ = ["build_worker", "param_digest", "main"]
+
+
+def param_digest(params) -> dict:
+    """Order-independent L1/L2 digest of a parameter pytree — the
+    cross-process gradient-parity observable (two runs that applied the
+    same updates to the same init produce the same digest)."""
+    import jax
+    import numpy as np
+
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    return {
+        "l1": float(sum(np.abs(x).sum() for x in leaves)),
+        "l2": float(np.sqrt(sum((x.astype(np.float64) ** 2).sum() for x in leaves))),
+        "leaves": len(leaves),
+    }
+
+
+def build_worker(
+    host: str,
+    host_index: int,
+    transport,
+    num_stages: int = 2,
+    d_model: int = 8,
+    seq_len: int = 16,
+    seed: int = 0,
+    cache=None,
+) -> WorkerAgent:
+    """The host-side half of ``build_fabric_fleet``: same candidate
+    universe, same init key, data shard picked by ``host_index``.
+
+    ``cache`` may be a :class:`CompiledStepCache` borrowed from another
+    same-config runtime — reference-backend programs are pure functions of
+    state/batch, so in-process tests share one cache across hosts to avoid
+    recompiling identical plans per host."""
+    cfg, costs, cands, B = fig10_parts(num_stages, d_model=d_model)
+    opt = make_optimizer("adamw", schedule=lambda s: jnp.float32(1e-3))
+    runtime = PlanRuntime(
+        cfg, num_stages, opt, global_batch=B, seq_len=seq_len,
+        backend="reference", init_key=seed, cache=cache,
+    )
+    dataset = SyntheticTextDataset(cfg.vocab_size, seq_len, B, seed=seed + host_index)
+
+    def batch_fn(it: int):
+        batch = dataset.batch_at(it)
+        return batch.tokens, batch.labels
+
+    return WorkerAgent(
+        host, runtime, transport, batch_fn,
+        costs=costs, initial_spec=cands[0].spec,
+        probe_links=fabric_probe_links(cands, lambda c: costs),
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT")
+    ap.add_argument("--host", required=True, help="this worker's fabric name")
+    ap.add_argument("--host-index", type=int, required=True)
+    ap.add_argument("--iterations", type=int, default=8)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write the result JSON here")
+    args = ap.parse_args(argv)
+
+    addr_host, _, addr_port = args.connect.rpartition(":")
+    transport = SocketTransport((addr_host, int(addr_port)))
+    agent = build_worker(
+        args.host, args.host_index, transport,
+        num_stages=args.stages, d_model=args.d_model,
+        seq_len=args.seq_len, seed=args.seed,
+    )
+    try:
+        results = agent.run(args.iterations)
+    finally:
+        agent.runtime.cache.shutdown()
+        transport.close()
+
+    out = {
+        "host": args.host,
+        "iterations": len(results),
+        "losses": [float(r.loss) for r in results],
+        "final_spec": dataclasses.asdict(agent.current_spec),
+        "applied": [
+            {
+                "epoch": o.epoch,
+                "committed": o.committed,
+                "boundary": o.boundary,
+                "spec": dataclasses.asdict(o.spec),
+                "reason": o.reason,
+            }
+            for o in agent.applied_outcomes
+        ],
+        "switch_events": len(agent.runtime.switch_events),
+        "precompile_hit_rate": agent.runtime.cache.stats.hit_rate,
+        "param_digest": param_digest(agent.runtime.state.params),
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+        print(f"wrote {os.path.abspath(args.out)}")
+    else:
+        print(json.dumps(out, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

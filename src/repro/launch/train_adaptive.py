@@ -49,6 +49,7 @@ from repro.core import (
     Network,
     NetworkProfiler,
     RegimeTrace,
+    ScheduleSpec,
     StableTrace,
     StageCosts,
     make_plan,
@@ -61,6 +62,55 @@ from repro.runtime import PassiveLinkFeed, PlanRuntime, RealEngineHarness, Telem
 ARTIFACT_DIR = os.path.join(
     os.path.dirname(__file__), "..", "..", "..", "experiments", "train_adaptive"
 )
+
+
+def fig10_parts(
+    num_stages: int = 4, d_model: int = 16
+) -> tuple[ModelConfig, StageCosts, list[Candidate], int]:
+    """The Fig-10 scenario's shared static parts: model config, calibrated
+    stage costs, the candidate set (1F1B, 2F2B, ZB-H1, ZB-H2(w=2),
+    interleaved-ZB(v=2)) and the global batch.
+
+    Factored out so the single-process harness AND every fabric host (in
+    or out of process — see ``repro.launch.fabric_worker``) construct the
+    identical candidate universe: a :class:`ScheduleSpec` on the wire must
+    resolve to the same logical plan on every host."""
+    S, M, b = num_stages, num_stages, 2
+    B = M * b
+    cfg = ModelConfig(
+        "runtime-tiny", "dense", num_layers=2 * S, d_model=d_model, num_heads=2,
+        num_kv_heads=2, d_ff=2 * d_model, vocab_size=64,
+        dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+    costs = StageCosts.uniform(S, 1.0, act_bytes=2.0)
+    cands = [
+        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b), 0.0),
+        Candidate(2, b, M, make_plan(S, M, 2, micro_batch_size=b), 0.0),
+        Candidate(
+            1, b, M,
+            make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", micro_batch_size=b)),
+            0.0,
+        ),
+        Candidate(
+            1, b, M,
+            make_plan(
+                S, M,
+                spec=ScheduleSpec(kind="zb_h2", extra_warmup=2, micro_batch_size=b),
+            ),
+            0.0,
+        ),
+        Candidate(
+            1, b, M,
+            make_plan(
+                S, M,
+                spec=ScheduleSpec(
+                    kind="interleaved_zb", num_virtual=2, micro_batch_size=b
+                ),
+            ),
+            0.0,
+        ),
+    ]
+    return cfg, costs, cands, B
 
 
 @dataclasses.dataclass
@@ -102,29 +152,8 @@ def build_fig10_scenario(
     fill/drain takes over — so the decision trail flips kinds at least
     twice, crossing the parameter re-stacking boundary both ways.
     """
-    S, M, b = num_stages, num_stages, 2
-    B = M * b
-    cfg = ModelConfig(
-        "runtime-tiny", "dense", num_layers=2 * S, d_model=d_model, num_heads=2,
-        num_kv_heads=2, d_ff=2 * d_model, vocab_size=64,
-        dtype=jnp.float32, param_dtype=jnp.float32,
-    )
-    costs = StageCosts.uniform(S, 1.0, act_bytes=2.0)
-    cands = [
-        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b), 0.0),
-        Candidate(2, b, M, make_plan(S, M, 2, micro_batch_size=b), 0.0),
-        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b, kind="zb_h1"), 0.0),
-        Candidate(
-            1, b, M,
-            make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2", extra_warmup=2),
-            0.0,
-        ),
-        Candidate(
-            1, b, M,
-            make_plan(S, M, 1, micro_batch_size=b, kind="interleaved_zb", num_virtual=2),
-            0.0,
-        ),
-    ]
+    cfg, costs, cands, B = fig10_parts(num_stages, d_model=d_model)
+    S = num_stages
 
     def link(a: int, c: int):
         s = 17 * a + c + 100 * seed
@@ -156,14 +185,108 @@ def build_fig10_scenario(
     )
     coord = Coordinator(
         tuner, net, global_batch=B, tuning_interval=tuning_interval,
-        tuning_overhead=tuning_overhead, on_iteration=harness.on_iteration,
-        telemetry=bus,
+        tuning_overhead=tuning_overhead, hooks=(harness,),
+        telemetry_sink=bus,
     )
     return Fig10Scenario(
         cfg=cfg, candidates=cands, costs=costs, network=net, coordinator=coord,
         tuner=tuner, runtime=runtime, harness=harness, bus=bus, dataset=dataset,
         global_batch=B,
     )
+
+
+def build_fabric_fleet(
+    num_hosts: int = 2,
+    num_stages: int = 4,
+    seed: int = 0,
+    backend: str = "reference",
+    tuning_interval: float = 0.0,
+    vote_timeout: float = 30.0,
+    boundary_lead: int = 2,
+    decision_fn=None,
+    d_model: int = 16,
+    seq_len: int = 64,
+):
+    """An N-host coordinator fabric over LocalTransport, sharing the Fig-10
+    scenario's model/candidates.
+
+    Each host owns a full :class:`PlanRuntime` replica training its own
+    data shard (``seed + host``); the coordinator runs the unmodified
+    AutoTuner over an *offline* profiler fed only by the hosts' merged
+    telemetry windows, and dispatches switches through the two-phase
+    barrier.  ``decision_fn`` (server -> spec | None) scripts the switch
+    trail deterministically; without it the passive tuner decides.
+
+    Returns ``(server, workers)`` — drive with
+    ``run_fabric_rounds(server, workers, n)``.
+    """
+    from repro.runtime.fabric import (
+        CoordinatorServer,
+        FabricConfig,
+        LocalTransport,
+        WorkerAgent,
+        fabric_probe_links,
+    )
+
+    cfg, costs, cands, B = fig10_parts(num_stages, d_model=d_model)
+    S = num_stages
+    costs_for = lambda c: costs  # noqa: E731
+    profiler = NetworkProfiler(None, window=4)  # offline: telemetry-only
+    tuner = AutoTuner(cands, costs_for, profiler, passive_staleness=float("inf"))
+    hosts = tuple(f"host{i}" for i in range(num_hosts))
+    server = CoordinatorServer(
+        hosts,
+        initial_spec=cands[0].spec,
+        tuner=tuner,
+        config=FabricConfig(
+            tuning_interval=tuning_interval,
+            vote_timeout=vote_timeout,
+            boundary_lead=boundary_lead,
+        ),
+        decision_fn=decision_fn,
+    )
+    probe_links = fabric_probe_links(cands, costs_for)
+    workers = []
+    for i, host in enumerate(hosts):
+        opt = make_optimizer("adamw", schedule=lambda s: jnp.float32(1e-3))
+        runtime = PlanRuntime(
+            cfg, S, opt, global_batch=B, seq_len=seq_len, backend=backend,
+            init_key=seed,
+        )
+        dataset = SyntheticTextDataset(cfg.vocab_size, seq_len, B, seed=seed + i)
+
+        def batch_fn(it: int, ds=dataset):
+            batch = ds.batch_at(it)
+            return batch.tokens, batch.labels
+
+        workers.append(
+            WorkerAgent(
+                host, runtime, LocalTransport(server, host), batch_fn,
+                costs=costs, initial_spec=cands[0].spec,
+                probe_links=probe_links,
+            )
+        )
+    return server, workers
+
+
+def run_fabric_rounds(server, workers, num_iterations: int) -> dict:
+    """Drive every worker through ``num_iterations`` fabric rounds
+    (round-robin — the deterministic interleave tier-1 tests rely on) and
+    return the fleet summary."""
+    for _ in range(num_iterations):
+        for w in workers:
+            w.step()
+    per_host = {
+        w.host: {
+            "iterations": len(w.runtime.iterations),
+            "losses": [round(r.loss, 4) for r in w.runtime.iterations],
+            "spec": dataclasses.asdict(w.current_spec),
+            "switches": len(w.runtime.switch_events),
+            "precompile_hit_rate": w.runtime.cache.stats.hit_rate,
+        }
+        for w in workers
+    }
+    return {"fabric": server.fabric_metrics(), "hosts": per_host}
 
 
 def summarize(sc: Fig10Scenario, summary) -> dict:
@@ -247,9 +370,53 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", choices=("reference", "spmd"), default="reference")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write the run summary JSON here")
+    ap.add_argument(
+        "--fabric", type=int, default=0, metavar="N",
+        help="run an N-host coordinator fabric (in-process LocalTransport "
+        "fleet: central tuner + barrier-safe switching) instead of the "
+        "single-process harness",
+    )
+    ap.add_argument(
+        "--vote-timeout", type=float, default=600.0,
+        help="fabric PREPARE->deadline span in seconds (first-time "
+        "precompiles must fit inside it or the epoch aborts and retries)",
+    )
     args = ap.parse_args(argv)
     if os.environ.get("REPRO_SMOKE"):
         args.iterations = min(args.iterations, 6)
+
+    if args.fabric:
+        if args.backend != "reference":
+            ap.error("--fabric currently supports the reference backend only")
+        server, workers = build_fabric_fleet(
+            num_hosts=args.fabric, num_stages=args.stages, seed=args.seed,
+            vote_timeout=args.vote_timeout,
+        )
+        t0 = time.time()
+        out = run_fabric_rounds(server, workers, args.iterations)
+        out["wall_seconds"] = round(time.time() - t0, 2)
+        fm = out["fabric"]
+        print(
+            f"fabric: {fm['hosts']} hosts, "
+            f"{fm['telemetry_windows']} telemetry windows"
+        )
+        print(
+            f"barrier epochs: {fm['barrier_epochs']} "
+            f"(committed {fm['committed_switches']}, "
+            f"aborted {fm['aborted_switches']})"
+        )
+        print(f"incumbent: {fm['incumbent']}")
+        path = args.out
+        if path is None:
+            os.makedirs(ARTIFACT_DIR, exist_ok=True)
+            path = os.path.join(ARTIFACT_DIR, "fig10_fabric.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+            f.write("\n")
+        print(f"wrote {os.path.abspath(path)}")
+        for w in workers:
+            w.runtime.cache.shutdown()
+        return 0
 
     mesh = None
     if args.backend == "spmd":

@@ -34,10 +34,18 @@ module                    role (paper anchor)
                           the tuner suspends-and-probes only links whose
                           windows went stale (``tuning_overhead`` -> ~0).
 ``harness``               Fig-10 end-to-end: ``RealEngineHarness`` rides
-                          ``Coordinator.on_iteration``, mirroring every
-                          tuner decision onto the live engine with real
-                          gradients (entry point:
+                          the coordinator's typed ``IterationHook`` surface,
+                          mirroring every tuner decision onto the live
+                          engine with real gradients (entry point:
                           ``python -m repro.launch.train_adaptive``).
+``fabric``                §5.4 across *hosts*: the cross-host control plane
+                          — :class:`CoordinatorServer` merges per-host
+                          telemetry partitions into the central tuner and
+                          drives barrier-safe (all-or-none, deadline-forced)
+                          spec switches on every :class:`WorkerAgent`'s
+                          local ``PlanRuntime``, over in-process or TCP
+                          transports (entry points: ``train_adaptive
+                          --fabric N``, ``repro.launch.fabric_worker``).
 ========================  ===================================================
 
 The compiled-step programs run either the single-device reference executor

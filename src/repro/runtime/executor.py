@@ -52,6 +52,7 @@ import numpy as np
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.interfaces import TelemetrySink
 from repro.core.schedule import TabularPlan
 from repro.models.common import ModelConfig
 from repro.pipeline.engine import make_pipeline_step, reference_pipeline_grads
@@ -174,7 +175,7 @@ class PlanRuntime:
         mesh=None,
         data_axis: str | None = None,
         cache: CompiledStepCache | None = None,
-        telemetry=None,
+        telemetry: TelemetrySink | None = None,
         init_key: int = 0,
     ) -> None:
         if backend not in ("reference", "spmd"):

@@ -1,0 +1,266 @@
+"""CoordinatorServer: the fleet's control plane in one process.
+
+The paper's §5.4 coordinator ("dispatches the decided plan to all workers
+and swaps plans with minimal overhead"), lifted from the single-process
+harness to N worker hosts:
+
+* **aggregate** — every worker ships a :class:`TelemetryWindow` per
+  iteration; the server stores them partitioned per host and, once every
+  host has reported a round, merges the per-link samples pessimistically
+  (:func:`repro.core.profiler.merge_link_samples` — min effective
+  bandwidth across hosts, because the barrier commits all-or-none and the
+  fleet is as fast as its worst wire) into the central tuner's *offline*
+  :class:`~repro.core.profiler.NetworkProfiler`.
+* **decide** — the unmodified single-process :class:`~repro.core.tuner
+  .AutoTuner` runs on the merged view at the configured interval.  With
+  ``passive_staleness`` covering the telemetry cadence it never probes
+  (it has no wire to probe — the offline profiler would refuse).
+* **dispatch** — a decision that changes the incumbent spec opens a
+  two-phase :class:`~repro.runtime.fabric.barrier.SwitchBarrier` epoch:
+  PREPARE goes out piggybacked on each host's next telemetry reply, votes
+  come back, and the verdict (all ready before the deadline -> COMMIT,
+  anything else -> ABORT + fleet-wide rollback to the incumbent) is served
+  to hosts blocked at the boundary.  Aborted epochs are telemetry, not
+  errors: the incumbent keeps running and the tuner may retry later.
+
+The server is transport-agnostic: it exposes one serialized
+``handle(msg) -> reply`` entry point that both the in-process
+LocalTransport and the TCP listener drive.  ``decision_fn`` lets tests and
+the multi-process integration drive a *scripted* decision trail through
+the identical barrier path (determinism without faking telemetry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+from repro.core.kinds import ScheduleSpec
+from repro.core.profiler import merge_link_samples
+from repro.core.tuner import AutoTuner
+from repro.runtime.fabric.barrier import BarrierPhase, SwitchBarrier
+from repro.runtime.fabric.messages import (
+    OutcomePoll,
+    PrepareSwitch,
+    ReadyVote,
+    SwitchOutcome,
+    TelemetryWindow,
+)
+
+__all__ = ["FabricConfig", "CoordinatorServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Control-plane knobs shared by server and launch entry points."""
+
+    tuning_interval: float = 50.0  # telemetry-clock seconds between decisions
+    vote_timeout: float = 30.0  # PREPARE -> deadline span
+    boundary_lead: int = 2  # switch lands this many iterations ahead
+    merge_policy: str = "pessimistic"
+
+
+class CoordinatorServer:
+    """One lock, one state machine, N hosts.
+
+    ``tuner`` may be None when every decision comes from ``decision_fn``
+    (the scripted mode integration tests use); otherwise it must be an
+    AutoTuner over an offline profiler (the server feeds it merged
+    telemetry and calls ``tune`` on the telemetry clock)."""
+
+    def __init__(
+        self,
+        hosts: tuple[str, ...],
+        initial_spec: ScheduleSpec,
+        tuner: AutoTuner | None = None,
+        config: FabricConfig | None = None,
+        clock: Callable[[], float] | None = None,
+        decision_fn: Callable[["CoordinatorServer"], ScheduleSpec | None] | None = None,
+    ) -> None:
+        self.hosts = tuple(hosts)
+        self.incumbent = initial_spec
+        self.tuner = tuner
+        self.config = config or FabricConfig()
+        self.clock = clock or time.monotonic
+        self.decision_fn = decision_fn
+        self.barrier = SwitchBarrier(self.hosts)
+        self._lock = threading.Lock()
+        # host -> all windows received (the partitioned telemetry trace)
+        self.windows: dict[str, list[TelemetryWindow]] = {h: [] for h in self.hosts}
+        # host -> PrepareSwitch not yet delivered (piggybacks on next reply)
+        self._pending_prepare: dict[str, PrepareSwitch] = {}
+        self._prepared_epoch_spec: ScheduleSpec | None = None
+        self._rounds_merged = 0
+        self._last_tune_time: float | None = None
+        self.decision_log: list[dict] = []
+
+    # -- transport entry point ------------------------------------------------
+
+    def handle(self, msg: object) -> object | None:
+        """THE server: every transport delivers here, serialized."""
+        with self._lock:
+            if isinstance(msg, TelemetryWindow):
+                return self._on_telemetry(msg)
+            if isinstance(msg, ReadyVote):
+                self.barrier.vote(msg, now=self.clock())
+                self._collect_verdict()
+                return None
+            if isinstance(msg, OutcomePoll):
+                return self._on_poll(msg)
+            raise TypeError(f"unknown fabric message {type(msg).__name__}")
+
+    # -- telemetry aggregation + decision -------------------------------------
+
+    def _on_telemetry(self, win: TelemetryWindow) -> PrepareSwitch | None:
+        if win.host not in self.windows:
+            raise ValueError(f"telemetry from unknown host {win.host!r}")
+        self.windows[win.host].append(win)
+        self._merge_complete_rounds()
+        self._maybe_decide(win.end_time)
+        # deliver a pending PREPARE exactly once per host
+        return self._pending_prepare.pop(win.host, None)
+
+    def _merge_complete_rounds(self) -> None:
+        """Feed the central profiler every telemetry round all hosts have
+        completed (partition merge happens per-round so the pessimum is
+        taken across hosts at the SAME iteration, not across time)."""
+        if self.tuner is None:
+            return
+        while all(len(w) > self._rounds_merged for w in self.windows.values()):
+            r = self._rounds_merged
+            per_host = {h: self.windows[h][r].samples for h in self.hosts}
+            merged = merge_link_samples(per_host, self.config.merge_policy)
+            self.tuner.net_profiler.record_samples(merged)
+            self._rounds_merged += 1
+
+    def _maybe_decide(self, now: float) -> None:
+        if self.barrier.phase is BarrierPhase.PREPARING:
+            return  # one collective at a time
+        if self.barrier.history:
+            # the previous epoch's boundary must drain fleet-wide before a
+            # new collective opens: every host past it has either applied
+            # the committed spec or discarded the aborted epoch, so epochs
+            # can never overlap on a worker
+            last = self.barrier.history[-1]
+            if self.min_reported_iteration() < last.boundary:
+                return
+        target: ScheduleSpec | None = None
+        if self.tuner is not None and self._rounds_merged > 0:
+            due = (
+                self._last_tune_time is None
+                or now - self._last_tune_time >= self.config.tuning_interval
+            )
+            if due:
+                rec = self.tuner.tune(now)
+                self._last_tune_time = now
+                self.decision_log.append(
+                    {"t": now, "chosen": rec.chosen, "spec": rec.chosen_spec}
+                )
+                target = rec.chosen_spec
+        if self.decision_fn is not None:
+            # scripted override: the tuner (if any) still runs on its own
+            # cadence above — telemetry -> tune stays exercised — but the
+            # dispatched target comes from the script (deterministic
+            # integration tests drive known switch trails this way)
+            target = self.decision_fn(self)
+        if target is not None and target != self.incumbent:
+            self._begin_switch(target, now)
+
+    def _begin_switch(self, spec: ScheduleSpec, now: float) -> None:
+        boundary = self.max_reported_iteration() + 1 + self.config.boundary_lead
+        wall = self.clock()
+        epoch = self.barrier.begin(
+            spec, boundary, deadline=wall + self.config.vote_timeout, now=wall
+        )
+        self._prepared_epoch_spec = spec
+        cmd = PrepareSwitch(
+            epoch=epoch, spec=spec, boundary=boundary,
+            deadline=wall + self.config.vote_timeout,
+        )
+        for h in self.hosts:
+            self._pending_prepare[h] = cmd
+
+    # -- the boundary ----------------------------------------------------------
+
+    def _on_poll(self, poll: OutcomePoll) -> SwitchOutcome | None:
+        out = self.barrier.outcome_for(poll.epoch, now=self.clock())
+        if out is not None:
+            self._collect_verdict()
+        return out
+
+    def _collect_verdict(self) -> None:
+        """Apply a finished epoch to the server's own view of the fleet."""
+        if self.barrier.phase is BarrierPhase.COMMITTED:
+            self.incumbent = self._prepared_epoch_spec
+            # the tuner's own current candidate already matches (it decided);
+            # scripted mode has no tuner state to sync
+            self.barrier.reset_for_next_epoch()
+            # drop PREPAREs not yet delivered for this epoch (verdict known)
+            self._pending_prepare.clear()
+        elif self.barrier.phase is BarrierPhase.ABORTED:
+            # fleet-wide rollback: the incumbent simply stays; clear the
+            # undelivered PREPAREs so stragglers never see a dead epoch
+            self.barrier.reset_for_next_epoch()
+            self._pending_prepare.clear()
+
+    # -- introspection ---------------------------------------------------------
+
+    def max_reported_iteration(self) -> int:
+        its = [w[-1].iteration for w in self.windows.values() if w]
+        return max(its) if its else -1
+
+    def min_reported_iteration(self) -> int:
+        its = [w[-1].iteration if w else -1 for w in self.windows.values()]
+        return min(its) if its else -1
+
+    def fabric_metrics(self) -> dict:
+        """The fabric's own health metrics (benchmarked + traced)."""
+        hist = self.barrier.history
+        return {
+            "hosts": len(self.hosts),
+            "telemetry_windows": sum(len(w) for w in self.windows.values()),
+            "barrier_epochs": len(hist),
+            "committed_switches": self.barrier.committed_count,
+            "aborted_switches": self.barrier.aborted_count,
+            "barrier_latency_max": max((r.latency for r in hist), default=0.0),
+            "incumbent": dataclasses.asdict(self.incumbent),
+        }
+
+    def telemetry_trace(self) -> dict:
+        """The partitioned telemetry trace (the CI artifact): every window
+        per host plus the barrier trail, JSON-serializable."""
+        return {
+            "hosts": list(self.hosts),
+            "windows": {
+                h: [
+                    {
+                        "iteration": w.iteration,
+                        "seconds": w.seconds,
+                        "end_time": w.end_time,
+                        "spec": dataclasses.asdict(w.spec),
+                        "loss": w.loss,
+                        "samples": [dataclasses.asdict(s) for s in w.samples],
+                    }
+                    for w in ws
+                ]
+                for h, ws in self.windows.items()
+            },
+            "barrier": [
+                {
+                    "epoch": r.epoch,
+                    "committed": r.committed,
+                    "reason": r.reason,
+                    "boundary": r.boundary,
+                    "latency": r.latency,
+                    "spec": dataclasses.asdict(r.spec),
+                    "votes": {
+                        h: {"ready": v.ready, "precompile_seconds": v.precompile_seconds}
+                        for h, v in r.votes.items()
+                    },
+                }
+                for r in self.barrier.history
+            ],
+            "metrics": self.fabric_metrics(),
+        }

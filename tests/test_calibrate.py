@@ -68,10 +68,10 @@ def test_calibration_memory_model_matches_stages(calibration):
         assert spec.stage_input_bytes_per_token == 32 * 4  # d_model * f32
         assert spec.num_layers == staged.layers_per_stage
     # calibrated profile drives the per-stage warmup greedy end to end
-    from repro.core import largest_admissible_warmup, make_plan
+    from repro.core import ScheduleSpec, largest_admissible_warmup, make_plan
 
     S = staged.num_stages
-    h1 = make_plan(S, 4, 1, micro_batch_size=2, kind="zb_h1")
+    h1 = make_plan(S, 4, spec=ScheduleSpec(kind="zb_h1", micro_batch_size=2))
     base = mm.peak_bytes_per_stage(h1)
     limits = [p + 2.5 * mm.slot_bytes(s, 2, True) for s, p in enumerate(base)]
     w = largest_admissible_warmup(S, 4, 1, 2, 1, True, mm, limits, 8)

@@ -3,7 +3,7 @@
 import pytest
 from _hyp import given, settings, st  # hypothesis optional: property tests skip cleanly
 
-from repro.core import MemoryModel, enumerate_candidates
+from repro.core import MemoryModel, ScheduleSpec, SearchSpace, enumerate_candidates
 from repro.core.schedule import make_plan
 
 
@@ -26,7 +26,10 @@ def test_candidates_on_curve_are_maximal():
     S, B = 4, 64
     mm = _model(S)
     limit = 2e9
-    cands = enumerate_candidates(S, B, mm, limit, max_k=8)
+    cands = enumerate_candidates(
+        S, B, mm, limit,
+        space=SearchSpace(max_k=8),
+    )
     assert cands, "no candidates found"
     divisors = [d for d in range(1, B + 1) if B % d == 0]
     for c in cands:
@@ -43,13 +46,19 @@ def test_candidates_on_curve_are_maximal():
 
 def test_k1_always_first_candidate_when_anything_fits():
     S, B = 4, 64
-    cands = enumerate_candidates(S, B, _model(S), 2e9, max_k=8)
+    cands = enumerate_candidates(
+        S, B, _model(S), 2e9,
+        space=SearchSpace(max_k=8),
+    )
     assert cands[0].k == 1  # 1F1B is the most memory-efficient (paper §3.1)
 
 
 def test_no_candidates_when_limit_too_small():
     S, B = 4, 64
-    cands = enumerate_candidates(S, B, _model(S), 1e3, max_k=8)
+    cands = enumerate_candidates(
+        S, B, _model(S), 1e3,
+        space=SearchSpace(max_k=8),
+    )
     assert cands == []
 
 
@@ -59,7 +68,10 @@ def test_b_nonincreasing_in_k(S, B):
     """Paper §3.1: 'a larger k value is always paired with a smaller b'."""
     if B < S:
         B = S * 4
-    cands = enumerate_candidates(S, B, _model(S), 1.5e9, max_k=8)
+    cands = enumerate_candidates(
+        S, B, _model(S), 1.5e9,
+        space=SearchSpace(max_k=8),
+    )
     by_k = {c.k: c.micro_batch_size for c in cands}
     ks = sorted(by_k)
     for a, b in zip(ks, ks[1:]):
@@ -118,15 +130,21 @@ def test_saved_residual_rejected_under_limit_that_admits_double_remat():
     work happens."""
     S, B = 4, 32
     dr, sr = _model_policy("double_remat", S), _model_policy("saved_residual", S)
-    h1 = make_plan(S, B, 1, micro_batch_size=1, kind="zb_h1")
+    h1 = make_plan(S, B, spec=ScheduleSpec(kind="zb_h1"))
     # one extra double-remat slot of headroom per stage: admits w=1 under
     # double_remat, not under the residual-fattened slot
     limits = [
         p + 1.5 * dr.slot_bytes(s, 1, True)
         for s, p in enumerate(dr.peak_bytes_per_stage(h1))
     ]
-    dr_cands = enumerate_candidates(S, B, dr, limits, max_k=1, kinds=("zb_h2",))
-    sr_cands = enumerate_candidates(S, B, sr, limits, max_k=1, kinds=("zb_h2",))
+    dr_cands = enumerate_candidates(
+        S, B, dr, limits,
+        space=SearchSpace(kinds=("zb_h2",), max_k=1),
+    )
+    sr_cands = enumerate_candidates(
+        S, B, sr, limits,
+        space=SearchSpace(kinds=("zb_h2",), max_k=1),
+    )
     assert dr_cands and max(dr_cands[0].extra_warmup) >= 1
     sr_names = {c.name for c in sr_cands}
     assert not (sr_names & {c.name for c in dr_cands}), (

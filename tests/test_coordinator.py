@@ -115,6 +115,70 @@ def test_run_summary_throughput_zero_time_edge():
     assert some.throughput == pytest.approx(4.0)
 
 
+def test_legacy_coordinator_kwargs_warn_and_still_work():
+    """PR 6 typed-hook migration: ``telemetry=`` and ``on_iteration=`` are
+    deprecated shims — they warn, but route to ``telemetry_sink=`` /
+    ``hooks=`` so external callers keep working for one release."""
+    S = 4
+    net = uniform_network(S, lambda: StableTrace(2.0))
+
+    def coord(**kw):
+        tuner = AutoTuner(_cands(S), _costs_for(S), NetworkProfiler(net))
+        return Coordinator(tuner, net, global_batch=8, tuning_interval=1e9, **kw)
+
+    seen = []
+    with pytest.warns(DeprecationWarning, match="hooks="):
+        c = coord(on_iteration=seen.append)
+    c.run(2)
+    assert len(seen) == 2  # the wrapped callable still fires per iteration
+
+    class Sink:
+        def __init__(self):
+            self.n = 0
+
+        def publish_iteration(self, **kw):
+            self.n += 1
+
+    sink = Sink()
+    with pytest.warns(DeprecationWarning, match="telemetry_sink="):
+        c = coord(telemetry=sink)
+    assert c.telemetry_sink is sink
+    c.run(2)
+    assert sink.n == 2
+
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="not both"):
+            coord(telemetry=sink, telemetry_sink=sink)
+    with pytest.raises(TypeError, match="unknown Coordinator kwargs"):
+        coord(bogus_kwarg=1)
+
+
+def test_typed_hooks_receive_iteration_records():
+    """The modern path: a typed IterationHook object on hooks= sees every
+    IterationRecord, warning-free."""
+    import warnings as _w
+
+    S = 4
+    net = uniform_network(S, lambda: StableTrace(2.0))
+
+    class Hook:
+        def __init__(self):
+            self.recs = []
+
+        def on_iteration(self, rec):
+            self.recs.append(rec)
+
+    hook = Hook()
+    tuner = AutoTuner(_cands(S), _costs_for(S), NetworkProfiler(net))
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        coord = Coordinator(
+            tuner, net, global_batch=8, tuning_interval=1e9, hooks=(hook,)
+        )
+        summary = coord.run(3)
+    assert [r.index for r in hook.recs] == [r.index for r in summary.iterations]
+
+
 def test_passive_telemetry_drives_tuning_overhead_to_zero():
     """With the runtime telemetry bus feeding the profiler windows, a
     passive tuner stops suspending the pipeline: after the first round
@@ -139,7 +203,7 @@ def test_passive_telemetry_drives_tuning_overhead_to_zero():
             bus.subscribe(PassiveLinkFeed(prof))
         coord = Coordinator(
             tuner, net, global_batch=8, tuning_interval=0.0,  # tune every iter
-            tuning_overhead=overhead, telemetry=bus,
+            tuning_overhead=overhead, telemetry_sink=bus,
         )
         return coord.run(4)
 

@@ -1,0 +1,420 @@
+"""Cross-host coordinator fabric (runtime/fabric/): control plane + barrier.
+
+Five suites:
+
+* partitioned-telemetry merge + the offline profiler contract
+  (``merge_link_samples``, ``NetworkProfiler(None)``);
+* the :class:`SwitchBarrier` state machine — commit, refusal, deadline
+  abort, stale/late votes, idempotent late polls;
+* :class:`CoordinatorServer` driven by hand-crafted messages: telemetry
+  rounds merge pessimistically into the central tuner, decisions match a
+  reference tuner fed the same merged samples, PREPARE piggybacks on the
+  next telemetry reply;
+* real-runtime fleets over :class:`LocalTransport`: a committed switch
+  lands on every host at the same boundary and matches a single-process
+  oracle run; a refused spec rolls back fleet-wide; a straggler whose
+  votes are lost aborts every epoch by deadline without ever deadlocking
+  the fleet (the soak);
+* :func:`fabric_probe_links` — the union keeps every candidate's link
+  (including the interleaved wrap link) fresh at the coordinator.
+"""
+
+import pytest
+
+from repro.core import NetworkProfiler
+from repro.core.kinds import ScheduleSpec
+from repro.core.profiler import LinkSample, merge_link_samples
+from repro.core.tuner import AutoTuner
+from repro.launch.fabric_worker import build_worker, param_digest
+from repro.launch.train_adaptive import fig10_parts
+from repro.runtime.fabric import (
+    BarrierPhase,
+    CoordinatorServer,
+    FabricConfig,
+    LocalTransport,
+    OutcomePoll,
+    PrepareSwitch,
+    ReadyVote,
+    SwitchBarrier,
+    TelemetryWindow,
+    fabric_probe_links,
+)
+
+S1 = ScheduleSpec(kind="kfkb", k=1, micro_batch_size=2)
+S2 = ScheduleSpec(kind="kfkb", k=2, micro_batch_size=2)
+
+
+# ---------------------------------------------------------------------------
+# partition merge + offline profiler
+# ---------------------------------------------------------------------------
+
+
+def test_merge_pessimistic_keeps_slowest_per_class():
+    per_host = {
+        "a": [LinkSample(0, 1, 100.0, 1.0, now=10.0)],
+        "b": [LinkSample(0, 1, 100.0, 4.0, now=11.0),
+              LinkSample(1, 2, 100.0, 2.0, now=11.0)],
+    }
+    merged = merge_link_samples(per_host)
+    by_link = {(s.src, s.dst): s for s in merged}
+    assert by_link[(0, 1)].duration == 4.0  # the slow host wins the class
+    assert by_link[(1, 2)].duration == 2.0  # unmatched classes pass through
+    assert [s.now for s in merged] == sorted(s.now for s in merged)
+
+
+def test_merge_mean_policy_and_unknown_policy():
+    per_host = {
+        "a": [LinkSample(0, 1, 100.0, 1.0, now=10.0)],
+        "b": [LinkSample(0, 1, 100.0, 3.0, now=12.0)],
+    }
+    (m,) = merge_link_samples(per_host, policy="mean")
+    assert m.duration == pytest.approx(2.0) and m.now == 12.0
+    with pytest.raises(ValueError, match="unknown merge policy"):
+        merge_link_samples(per_host, policy="optimistic")
+
+
+def test_distinct_byte_classes_not_merged():
+    per_host = {
+        "a": [LinkSample(0, 1, 100.0, 1.0, now=1.0)],
+        "b": [LinkSample(0, 1, 200.0, 9.0, now=1.0)],
+    }
+    assert len(merge_link_samples(per_host)) == 2
+
+
+def test_offline_profiler_refuses_probe_accepts_samples():
+    prof = NetworkProfiler(None, window=4)
+    with pytest.raises(RuntimeError, match="offline"):
+        prof.measure(0, 1, 100.0, now=0.0)
+    prof.record_samples([LinkSample(0, 1, 100.0, 2.5, now=1.0)])
+    assert prof.effective_time(0, 1, 100.0) == pytest.approx(2.5)
+    assert prof.last_update(0, 1) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# SwitchBarrier state machine
+# ---------------------------------------------------------------------------
+
+
+def _vote(epoch, host, ready=True, reason=""):
+    return ReadyVote(epoch=epoch, host=host, ready=ready, reason=reason)
+
+
+def test_barrier_commits_when_all_vote_before_deadline():
+    bar = SwitchBarrier(("a", "b"))
+    epoch = bar.begin(S2, boundary=5, deadline=10.0, now=0.0)
+    bar.vote(_vote(epoch, "a"), now=1.0)
+    assert bar.phase is BarrierPhase.PREPARING
+    bar.vote(_vote(epoch, "b"), now=2.0)
+    assert bar.phase is BarrierPhase.COMMITTED
+    out = bar.outcome_for(epoch, now=2.0)
+    assert out.committed and out.spec == S2 and out.boundary == 5
+    assert bar.committed_count == 1 and bar.history[0].latency == 2.0
+
+
+def test_barrier_single_refusal_aborts_fleet_wide():
+    bar = SwitchBarrier(("a", "b"))
+    epoch = bar.begin(S2, boundary=5, deadline=10.0, now=0.0)
+    bar.vote(_vote(epoch, "a", ready=False, reason="oom"), now=1.0)
+    out = bar.outcome_for(epoch, now=1.0)
+    assert not out.committed and "refused" in out.reason and "oom" in out.reason
+    assert bar.aborted_count == 1
+
+
+def test_barrier_deadline_forces_abort_and_late_votes_are_void():
+    bar = SwitchBarrier(("a", "b"))
+    epoch = bar.begin(S2, boundary=5, deadline=10.0, now=0.0)
+    bar.vote(_vote(epoch, "a"), now=1.0)
+    assert bar.decide(now=9.9) is None  # undecided inside the window
+    bar.vote(_vote(epoch, "b"), now=10.5)  # late: void, not an error
+    out = bar.decide(now=10.5)
+    assert not out.committed and "no vote from b" in out.reason
+
+
+def test_barrier_outcome_idempotent_after_reset():
+    bar = SwitchBarrier(("a",))
+    epoch = bar.begin(S2, boundary=3, deadline=10.0, now=0.0)
+    bar.vote(_vote(epoch, "a"), now=1.0)
+    bar.reset_for_next_epoch()
+    assert bar.phase is BarrierPhase.IDLE
+    # a straggler polling the finished epoch is answered from history
+    out = bar.outcome_for(epoch, now=99.0)
+    assert out is not None and out.committed and out.epoch == epoch
+    assert bar.outcome_for(epoch + 7, now=99.0) is None  # unknown epoch
+
+
+def test_barrier_rejects_overlapping_epochs_and_stale_votes():
+    bar = SwitchBarrier(("a", "b"))
+    epoch = bar.begin(S2, boundary=5, deadline=10.0, now=0.0)
+    with pytest.raises(RuntimeError, match="still preparing"):
+        bar.begin(S1, boundary=9, deadline=20.0, now=1.0)
+    bar.vote(_vote(epoch - 1, "a"), now=1.0)  # stale epoch: dropped
+    assert not bar._votes
+    with pytest.raises(ValueError, match="unknown host"):
+        bar.vote(_vote(epoch, "mallory"), now=1.0)
+
+
+# ---------------------------------------------------------------------------
+# CoordinatorServer control plane (hand-crafted messages, no engines)
+# ---------------------------------------------------------------------------
+
+
+def _fig10_tuner():
+    _, costs, cands, _ = fig10_parts(4)
+    prof = NetworkProfiler(None, window=4)
+    return (
+        AutoTuner(cands, lambda c: costs, prof, passive_staleness=float("inf")),
+        cands,
+        costs,
+    )
+
+
+def _window(host, it, t, spec, links, bw):
+    samples = tuple(
+        LinkSample(src, dst, nb, nb / bw, now=t) for (src, dst, nb) in links
+    )
+    return TelemetryWindow(
+        host=host, iteration=it, seconds=1.0, end_time=t, spec=spec,
+        samples=samples, loss=1.0,
+    )
+
+
+def test_server_merges_rounds_and_decides_like_a_reference_tuner():
+    tuner, cands, costs = _fig10_tuner()
+    links = fabric_probe_links(cands, lambda c: costs)
+    server = CoordinatorServer(
+        ("a", "b"), initial_spec=cands[0].spec, tuner=tuner,
+        config=FabricConfig(tuning_interval=0.0, vote_timeout=60.0),
+    )
+    # half a round: nothing merged, no decision yet
+    assert server.handle(_window("a", 0, 1.0, cands[0].spec, links, bw=8.0)) is None
+    assert server._rounds_merged == 0 and not server.decision_log
+    # host b is the slow partition; its samples must win the merge
+    reply = server.handle(_window("b", 0, 1.1, cands[0].spec, links, bw=0.5))
+    assert server._rounds_merged == 1 and len(server.decision_log) == 1
+    src, dst, nb = links[0]
+    assert tuner.net_profiler.effective_time(src, dst, nb) == pytest.approx(nb / 0.5)
+    # the server's decision equals a reference tuner fed the same merge
+    ref_tuner, _, _ = _fig10_tuner()
+    ref_tuner.net_profiler.record_samples(
+        merge_link_samples(
+            {h: server.windows[h][0].samples for h in ("a", "b")}
+        )
+    )
+    expected = ref_tuner.tune(1.1).chosen_spec
+    assert server.decision_log[0]["spec"] == expected
+    if expected != cands[0].spec:  # a switch opened: PREPARE piggybacks
+        assert server.barrier.phase is BarrierPhase.PREPARING
+        assert isinstance(reply, PrepareSwitch) and reply.spec == expected
+        # host a's PREPARE rides its NEXT telemetry reply, exactly once
+        nxt = server.handle(_window("a", 1, 2.0, cands[0].spec, links, bw=8.0))
+        assert isinstance(nxt, PrepareSwitch) and nxt.epoch == reply.epoch
+
+
+def test_server_scripted_commit_updates_incumbent_and_serves_polls():
+    calls = []
+
+    def script(server):
+        calls.append(server.max_reported_iteration())
+        return S2 if not server.barrier.history else None
+
+    server = CoordinatorServer(
+        ("a", "b"), initial_spec=S1, tuner=None,
+        config=FabricConfig(vote_timeout=60.0, boundary_lead=2),
+        decision_fn=script,
+    )
+    cmd = server.handle(_window("a", 0, 1.0, S1, (), bw=1.0))
+    assert isinstance(cmd, PrepareSwitch) and cmd.boundary == 0 + 1 + 2
+    server.handle(_window("b", 0, 1.1, S1, (), bw=1.0))
+    server.handle(ReadyVote(epoch=cmd.epoch, host="a", ready=True))
+    assert server.incumbent == S1  # undecided until the last vote
+    server.handle(ReadyVote(epoch=cmd.epoch, host="b", ready=True))
+    assert server.incumbent == S2
+    out = server.handle(OutcomePoll(epoch=cmd.epoch, host="a", iteration=3))
+    assert out.committed and out.spec == S2 and out.boundary == cmd.boundary
+    # idempotent for the second host, and after the barrier reset
+    out2 = server.handle(OutcomePoll(epoch=cmd.epoch, host="b", iteration=3))
+    assert out2.committed and server.barrier.phase is BarrierPhase.IDLE
+    m = server.fabric_metrics()
+    assert m["committed_switches"] == 1 and m["aborted_switches"] == 0
+
+
+def test_server_rejects_unknown_hosts_and_messages():
+    server = CoordinatorServer(("a",), initial_spec=S1)
+    with pytest.raises(ValueError, match="unknown host"):
+        server.handle(_window("z", 0, 1.0, S1, (), bw=1.0))
+    with pytest.raises(TypeError, match="unknown fabric message"):
+        server.handle(object())
+
+
+# ---------------------------------------------------------------------------
+# real-runtime fleets over LocalTransport
+# ---------------------------------------------------------------------------
+
+
+class _NullTransport:
+    """Oracle transport: no coordinator, no commands."""
+
+    def request(self, msg):
+        return None
+
+
+def _one_shot(target):
+    def fn(server):
+        return target if not server.barrier.history else None
+
+    return fn
+
+
+# one compiled-step cache shared by every same-config test runtime:
+# reference-backend programs are pure functions of state/batch, so hosts
+# (and tests) reuse each other's executables instead of recompiling the
+# same two tiny plans eight times over
+_FLEET_CACHE: list = []
+
+
+def _build(host, index, transport):
+    w = build_worker(host, index, transport, num_stages=2, d_model=8,
+                     seq_len=16, cache=_FLEET_CACHE[0] if _FLEET_CACHE else None)
+    if not _FLEET_CACHE:
+        _FLEET_CACHE.append(w.runtime.cache)
+    return w
+
+
+def _fleet(decision_fn, clock=None, filter_fn=None, vote_timeout=300.0, lead=1):
+    _, _, cands, _ = fig10_parts(2, d_model=8)
+    server = CoordinatorServer(
+        ("host0", "host1"), initial_spec=cands[0].spec, tuner=None,
+        config=FabricConfig(vote_timeout=vote_timeout, boundary_lead=lead),
+        clock=clock, decision_fn=decision_fn,
+    )
+    workers = [
+        _build(h, i, LocalTransport(server, h, filter_fn))
+        for i, h in enumerate(server.hosts)
+    ]
+    return server, workers
+
+
+def _run_rounds(workers, n):
+    for _ in range(n):
+        for w in workers:
+            w.step()
+
+
+def test_fleet_commits_at_one_boundary_and_matches_oracle():
+    _, _, cands, _ = fig10_parts(2, d_model=8)
+    target = cands[1].spec  # 2F2B: same layout, different schedule kind
+    server, workers = _fleet(_one_shot(target))
+    _run_rounds(workers, 4)
+
+    rec = server.barrier.history[0]
+    assert rec.committed and rec.spec == target
+    assert server.incumbent == target
+    for w in workers:
+        (out,) = w.applied_outcomes
+        assert out.committed and out.boundary == rec.boundary
+        assert w.current_spec == target
+        assert len(w.runtime.iterations) == 4
+    # the fleet is in lockstep: every window's spec matches what the
+    # incumbent was at that iteration
+    for h in server.hosts:
+        for win in server.windows[h]:
+            expect = target if win.iteration >= rec.boundary else cands[0].spec
+            assert win.spec == expect
+
+    # single-process oracle: same init, same shard as host0, switched by
+    # hand at the same boundary -- the fabric must not perturb numerics
+    oracle = _build("oracle", 0, _NullTransport())
+    for it in range(4):
+        if it == rec.boundary:
+            oracle.runtime.switch_to(oracle.resolve(target))
+        oracle.step()
+    host0 = workers[0]
+    for a, b in zip(host0.runtime.iterations, oracle.runtime.iterations):
+        assert abs(a.loss - b.loss) < 5e-6
+    da = param_digest(host0.runtime.state.params)
+    db = param_digest(oracle.runtime.state.params)
+    assert da["l2"] == pytest.approx(db["l2"], rel=1e-6)
+
+
+def test_fleet_refused_spec_rolls_back_everywhere():
+    bogus = ScheduleSpec(kind="bogus", micro_batch_size=2)
+    server, workers = _fleet(_one_shot(bogus))
+    _run_rounds(workers, 4)
+
+    rec = server.barrier.history[0]
+    assert not rec.committed and "refused" in rec.reason
+    # the refuser (host0, first in round-robin) blocked at the boundary and
+    # saw the rollback; host1's PREPARE died with the epoch (the server
+    # clears undelivered PREPAREs once the verdict is known), so it may
+    # never have observed the dead epoch at all -- both are rolled back
+    (out,) = workers[0].applied_outcomes
+    assert not out.committed
+    _, _, cands, _ = fig10_parts(2, d_model=8)
+    for w in workers:
+        assert w.current_spec == cands[0].spec  # incumbent kept
+        assert len(w.runtime.iterations) == 4  # ...and training continued
+        assert all(not o.committed for o in w.applied_outcomes)
+        assert w._pending is None  # nobody left blocked on a dead epoch
+    assert server.incumbent == cands[0].spec
+    trace = server.telemetry_trace()
+    assert trace["barrier"][0]["committed"] is False
+    assert trace["metrics"]["aborted_switches"] == 1
+
+
+class _TickClock:
+    """Coordinator clock that leaps past any deadline on every reading."""
+
+    def __init__(self, step=1e6):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+def test_fleet_straggler_soak_aborts_by_deadline_never_deadlocks():
+    _, _, cands, _ = fig10_parts(2, d_model=8)
+    target = cands[1].spec
+
+    def always(server):
+        return target
+
+    # host1's votes are lost in transit AND the clock leaps past every
+    # deadline: each epoch must abort -- and the fleet must keep training
+    def drop_host1_votes(host, msg):
+        return not (host == "host1" and isinstance(msg, ReadyVote))
+
+    server, workers = _fleet(
+        always, clock=_TickClock(), filter_fn=drop_host1_votes, vote_timeout=1.0
+    )
+    _run_rounds(workers, 8)  # completing at all proves no deadlock
+
+    assert server.barrier.committed_count == 0
+    assert server.barrier.aborted_count >= 2  # retried after each rollback
+    assert all("deadline" in r.reason for r in server.barrier.history)
+    assert workers[1].transport.dropped  # the straggler's votes were lost
+    for w in workers:
+        assert w.current_spec == cands[0].spec
+        assert len(w.runtime.iterations) == 8
+        assert all(not o.committed for o in w.applied_outcomes)
+    trace = server.telemetry_trace()
+    assert trace["metrics"]["aborted_switches"] == server.barrier.aborted_count
+    assert trace["metrics"]["committed_switches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fabric_probe_links
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_probe_links_unions_all_candidate_links():
+    _, costs, cands, _ = fig10_parts(4)
+    links = fabric_probe_links(cands, lambda c: costs)
+    pairs = {(src, dst) for src, dst, _ in links}
+    # the flat chain...
+    assert {(s, s + 1) for s in range(3)} <= pairs
+    # ...plus the interleaved member's wrap link, which no flat plan probes
+    assert (3, 0) in pairs
+    # one byte class per link (the union dedups classes)
+    assert len(links) == len(pairs)

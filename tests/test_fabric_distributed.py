@@ -1,0 +1,135 @@
+"""Multi-process fabric integration: real worker processes over TCP.
+
+The distributed proof for the coordinator fabric: an in-test
+:class:`CoordinatorListener` + two ``repro.launch.fabric_worker``
+subprocesses (each a full PlanRuntime on its own data shard) complete one
+telemetry -> decide -> two-phase barrier -> warm-switch round over the
+socket transport, and every host's losses and trained parameters match an
+in-process single-runtime oracle driven by hand through the same switch
+at the same boundary.
+
+The decision is scripted (``decision_fn``) so the switch trail is
+deterministic across machines; the telemetry -> tune path over the same
+barrier is proven in tier 1 (``tests/test_fabric.py``).  The coordinator's
+partitioned telemetry trace is written to ``$REPRO_FABRIC_TRACE`` (or a
+tmpdir) — CI's ``distributed`` job uploads it as an artifact.
+
+Marked slow: two cold worker processes each compile two tiny plans.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.fabric_worker import build_worker, param_digest
+from repro.launch.train_adaptive import fig10_parts
+from repro.runtime.fabric import CoordinatorListener, CoordinatorServer, FabricConfig
+
+pytestmark = pytest.mark.slow
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_ITERS = 4
+
+
+class _NullTransport:
+    def request(self, msg):
+        return None
+
+
+def _worker_cmd(port, host, index, out):
+    return [
+        sys.executable, "-m", "repro.launch.fabric_worker",
+        "--connect", f"127.0.0.1:{port}",
+        "--host", host, "--host-index", str(index),
+        "--iterations", str(_ITERS),
+        "--stages", "2", "--d-model", "8", "--seq-len", "16",
+        "--out", out,
+    ]
+
+
+def test_two_process_fleet_switches_once_and_matches_oracles(tmp_path):
+    _, _, cands, _ = fig10_parts(2, d_model=8)
+    target = cands[1].spec
+
+    def one_shot(server):
+        return target if not server.barrier.history else None
+
+    server = CoordinatorServer(
+        ("host0", "host1"), initial_spec=cands[0].spec, tuner=None,
+        config=FabricConfig(vote_timeout=300.0, boundary_lead=1),
+        decision_fn=one_shot,
+    )
+    listener = CoordinatorListener(server).start()
+    env = {**os.environ, "PYTHONPATH": os.path.join(_REPO, "src")}
+    outs = {h: str(tmp_path / f"{h}.json") for h in server.hosts}
+    procs = [
+        subprocess.Popen(
+            _worker_cmd(listener.port, h, i, outs[h]),
+            cwd=_REPO, env=env,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        )
+        for i, h in enumerate(server.hosts)
+    ]
+    try:
+        for p in procs:
+            stdout, _ = p.communicate(timeout=540)
+            assert p.returncode == 0, f"worker failed:\n{stdout}"
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        listener.stop()
+
+    # the coordinator committed exactly one fleet-wide switch
+    (rec,) = server.barrier.history
+    assert rec.committed and rec.spec == target
+    assert server.incumbent == target
+    m = server.fabric_metrics()
+    assert m["committed_switches"] == 1 and m["aborted_switches"] == 0
+    assert m["telemetry_windows"] == 2 * _ITERS
+
+    # both hosts applied it at the SAME boundary and finished on the target
+    results = {h: json.load(open(outs[h])) for h in server.hosts}
+    for h, r in results.items():
+        (applied,) = r["applied"]
+        assert applied["committed"] and applied["boundary"] == rec.boundary
+        assert r["final_spec"]["kind"] == target.kind
+        assert r["final_spec"]["k"] == target.k
+        assert r["iterations"] == _ITERS
+        assert r["switch_events"] >= 2  # initial resolve + the warm switch
+
+    # gradient parity: each worker process must match an in-process oracle
+    # on its own shard, switched by hand at the same boundary
+    shared_cache = None
+    for i, h in enumerate(server.hosts):
+        oracle = build_worker(f"oracle-{h}", i, _NullTransport(),
+                              num_stages=2, d_model=8, seq_len=16,
+                              cache=shared_cache)
+        shared_cache = oracle.runtime.cache
+        for it in range(_ITERS):
+            if it == rec.boundary:
+                oracle.runtime.switch_to(oracle.resolve(target))
+            oracle.step()
+        got, want = results[h], oracle.runtime
+        for a, b in zip(got["losses"], [r.loss for r in want.iterations]):
+            assert abs(a - b) < 5e-6
+        dg, dw = got["param_digest"], param_digest(want.state.params)
+        assert dg["leaves"] == dw["leaves"]
+        assert dg["l2"] == pytest.approx(dw["l2"], rel=1e-6)
+
+    # the partitioned telemetry trace is the CI artifact
+    trace_path = os.environ.get(
+        "REPRO_FABRIC_TRACE", str(tmp_path / "fabric_trace.json")
+    )
+    os.makedirs(os.path.dirname(os.path.abspath(trace_path)), exist_ok=True)
+    trace = server.telemetry_trace()
+    with open(trace_path, "w") as f:
+        json.dump(trace, f, indent=1)
+        f.write("\n")
+    assert set(trace["windows"]) == set(server.hosts)
+    assert all(len(ws) == _ITERS for ws in trace["windows"].values())
+    assert trace["barrier"][0]["committed"] is True
+    assert set(trace["barrier"][0]["votes"]) == set(server.hosts)

@@ -31,7 +31,7 @@ import pytest
 from _hyp import given, settings, st  # hypothesis optional: property tests skip cleanly
 
 from repro.core import predicted_peak_live
-from repro.core.kinds import get_kind, registered_kinds, warmup_kinds
+from repro.core.kinds import ScheduleSpec, get_kind, registered_kinds, warmup_kinds
 from repro.core.network import StableTrace, uniform_network
 from repro.core.schedule import (
     PLAN_KINDS,
@@ -130,7 +130,7 @@ def _skewed_costs(S):
 
 def _conformance(kind, k, v, w, S, M):
     """The single differential oracle every family member must pass."""
-    plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, k=k, num_virtual=v, extra_warmup=w))
     plan.validate()
     table = plan.lower()
     table.validate()  # dependency validity + per-link FIFO + stream order
@@ -180,7 +180,7 @@ def _conformance(kind, k, v, w, S, M):
     if kind in _EXACT_PEAK_KINDS and uniform_w:
         assert peaks == predicted, (kind, peaks, predicted)
     if kind == "zb_h2":
-        h1 = predicted_peak_live(make_plan(S, M, k, kind="zb_h1"))
+        h1 = predicted_peak_live(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", k=k)))
         G = M // k
         bound = [min(p + w_vec[s] * k, G * k) for s, p in enumerate(h1)]
         if uniform_w:
@@ -191,7 +191,7 @@ def _conformance(kind, k, v, w, S, M):
             assert all(a <= b for a, b in zip(peaks, bound)), (peaks, bound)
             assert all(a >= p for a, p in zip(peaks, h1)), (peaks, h1)
     if kind == "interleaved_zb":
-        plain = peak_live_activations(make_plan(S, M, k, kind="interleaved", num_virtual=v))
+        plain = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="interleaved", k=k, num_virtual=v)))
         bound = [p + w_vec[s] * k for s, p in enumerate(plain)]
         assert all(p <= q for p, q in zip(peaks, bound))  # plain + w[s], at most
 

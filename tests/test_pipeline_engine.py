@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.kinds import ScheduleSpec
 from repro.core.schedule import Op, lower_to_table, make_plan, tick_table
 from repro.models.common import ModelConfig
 from repro.pipeline.engine import arrival_tables, queue_capacities, reference_pipeline_grads
@@ -113,7 +114,7 @@ def test_family_arrival_conservation(kind, k, v, w):
     virtual stage receives exactly M forward activations and every
     non-last one exactly M gradients, and queue pushes balance pops."""
     S, M = 4, 8
-    plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, k=k, num_virtual=v, extra_warmup=w))
     grid = lower_to_table(plan).grid
     fwd, bwd = arrival_tables(grid, v)
     V = S * v
@@ -130,7 +131,7 @@ def test_family_arrival_conservation(kind, k, v, w):
 def test_zb_grid_slots_shared_by_b_and_w():
     """BWD_INPUT reads the activation slot and BWD_WEIGHT frees it: in the
     lowered grid both carry the same slot index as their FWD."""
-    plan = make_plan(4, 8, 1, kind="zb_h1")
+    plan = make_plan(4, 8, spec=ScheduleSpec(kind="zb_h1"))
     grid = lower_to_table(plan).grid
     for s in range(grid.shape[0]):
         slot_of = {}
@@ -207,7 +208,7 @@ def test_reference_engine_family_matches_oracle(kind, k, v, w):
         return sum(staged.full_loss(p, tokens[m], labels[m]) for m in range(M)) / M
 
     oloss, ograds = jax.value_and_grad(oracle)(params)
-    plan = make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, k=k, num_virtual=v, extra_warmup=w))
     rloss, rgrads = reference_pipeline_grads(staged, params, tokens, labels, plan)
     assert float(rloss) == pytest.approx(float(oloss), rel=1e-5)
     for a, g in zip(jax.tree_util.tree_leaves(ograds), jax.tree_util.tree_leaves(rgrads)):
@@ -231,7 +232,7 @@ def test_reference_engine_matches_oracle_after_weight_placement():
         return sum(staged.full_loss(p, tokens[m], labels[m]) for m in range(M)) / M
 
     oloss, ograds = jax.value_and_grad(oracle)(params)
-    plan = make_plan(S, M, 1, kind="zb_h2", extra_warmup=(2, 1))
+    plan = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(2, 1)))
     skew = StageCosts(
         fwd_time=[1.0, 0.8], bwd_time=[3.0, 2.0],
         fwd_bytes=[1.0] * S, bwd_bytes=[1.0] * S,
@@ -249,6 +250,7 @@ _SPMD_SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
+    from repro.core.kinds import ScheduleSpec
     from repro.core.schedule import make_plan
     from repro.models.common import ModelConfig
     from repro.pipeline.stage import StagedModel
@@ -289,10 +291,12 @@ _SPMD_SCRIPT = textwrap.dedent(
         check(make_plan(S, M, k), staged, params, oloss, ograds, dp)
     # schedule family: zero-bubble split (H1 + deeper-warmup H2) and
     # interleaved virtual stages (plain + joint interleaved-ZB)
-    check(make_plan(S, M, 2, kind="zb_h1"), staged, params, oloss, ograds)
-    check(make_plan(S, M, 1, kind="zb_h2", extra_warmup=1), staged, params, oloss, ograds)
+    check(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", k=2)),
+          staged, params, oloss, ograds)
+    check(make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1)),
+          staged, params, oloss, ograds)
     # heterogeneous per-stage warmup vector w[s] through the REAL engine
-    check(make_plan(S, M, 1, kind="zb_h2", extra_warmup=(0, 1, 2, 1)),
+    check(make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(0, 1, 2, 1))),
           staged, params, oloss, ograds)
     v = 2  # S*v = 8 virtual stages -> the 8-layer sibling config
     cfg_v = ModelConfig("tiny8", "dense", num_layers=8, d_model=48, num_heads=4,
@@ -303,19 +307,20 @@ _SPMD_SCRIPT = textwrap.dedent(
     def oracle_v(p):
         return sum(staged_v.full_loss(p, tokens[m], labels[m]) for m in range(M)) / M
     oloss_v, ograds_v = jax.value_and_grad(oracle_v)(params_v)
-    check(make_plan(S, M, 1, kind="interleaved", num_virtual=v),
+    check(make_plan(S, M, spec=ScheduleSpec(kind="interleaved", num_virtual=v)),
           staged_v, params_v, oloss_v, ograds_v)
-    check(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v),
+    check(make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=v)),
           staged_v, params_v, oloss_v, ograds_v)
     # the interleaved-H2 composition (per-stage warmup over the ring)
-    check(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v,
-                    extra_warmup=(1, 0, 2, 1)),
+    check(make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=v,
+                                            extra_warmup=(1, 0, 2, 1))),
           staged_v, params_v, oloss_v, ograds_v)
     # ZB-V: the V-shaped (non-looped) placement through the REAL engine —
     # forwards ride BOTH ring directions and the turn is an intra-device
     # loopback, exercising every transfer channel at once
-    check(make_plan(S, M, 1, kind="zbv"), staged_v, params_v, oloss_v, ograds_v)
-    check(make_plan(S, M, 1, kind="zbv", extra_warmup=(1, 0, 2, 1)),
+    check(make_plan(S, M, spec=ScheduleSpec(kind="zbv")),
+          staged_v, params_v, oloss_v, ograds_v)
+    check(make_plan(S, M, spec=ScheduleSpec(kind="zbv", extra_warmup=(1, 0, 2, 1))),
           staged_v, params_v, oloss_v, ograds_v)
     print("SPMD_ENGINE_ALL_OK")
     """

@@ -13,6 +13,7 @@ from collections import Counter
 import pytest
 
 from repro.core import (
+    ScheduleSpec,
     StableTrace,
     StageCosts,
     make_plan,
@@ -53,7 +54,7 @@ def _net():
 def test_optimized_placement_beats_fifo_filler_on_skewed_costs(kind, kw):
     """The proof: strictly shorter simulated pipeline than the builder's
     FIFO W placement, on every warmup-capable kind."""
-    plan = make_plan(S, M, 1, kind=kind, **kw)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, **kw))
     base = simulate_plan(plan, SKEWED, _net()).pipeline_length
     opt = optimize_weight_placement(plan, SKEWED, _BW)
     new = simulate_plan(opt, SKEWED, _net()).pipeline_length
@@ -72,7 +73,7 @@ def test_optimized_placement_beats_fifo_filler_on_skewed_costs(kind, kw):
 def test_optimized_placement_preserves_all_contracts(kind, kw):
     """Same tasks, valid plan + lowering, peak liveness never above the
     input plan's (the published memory price), and never a longer pipeline."""
-    plan = make_plan(S, M, 1, kind=kind, **kw)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, **kw))
     opt = optimize_weight_placement(plan, SKEWED, _BW)
     assert opt.name.endswith("+Wopt")
     for s in range(S):
@@ -117,7 +118,7 @@ def test_incremental_makespan_equals_full_resimulation(kind, kw):
     )
     from repro.core.schedule import Op
 
-    plan = make_plan(S, M, 1, kind=kind, **kw)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, **kw))
     net = Network(
         default=StableTrace(float("inf")),
         links={k: StableTrace(bw) for k, bw in _BW.items()},
@@ -157,7 +158,7 @@ def test_incremental_search_matches_full_search(kind, kw):
     """End to end: the greedy search driven by the incremental evaluator
     lands on exactly the same placement (and simulated length) as the
     full-resimulation search it replaced."""
-    plan = make_plan(S, M, 1, kind=kind, **kw)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind=kind, **kw))
     inc = optimize_weight_placement(plan, SKEWED, _BW, evaluator="incremental")
     full = optimize_weight_placement(plan, SKEWED, _BW, evaluator="full")
     assert [[t.key() for t in o] for o in inc.orders] == [
@@ -174,7 +175,7 @@ def test_tuner_dispatches_refined_table():
     from repro.core import AutoTuner, Candidate, NetworkProfiler
 
     cands = [
-        Candidate(1, 1, M, make_plan(S, M, 1, kind="zb_h2", extra_warmup=2), 0.0),
+        Candidate(1, 1, M, make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=2)), 0.0),
         Candidate(1, 1, M, make_plan(S, M, 1), 0.0),
     ]
 

@@ -21,6 +21,7 @@ import pytest
 
 from repro.core import (
     NetworkProfiler,
+    ScheduleSpec,
     StableTrace,
     StageCosts,
     make_plan,
@@ -207,7 +208,7 @@ def test_cache_key_distinguishes_refined_lowerings():
     unrolled tick program IS the grid)."""
     from repro.core import optimize_weight_placement
 
-    plan = make_plan(2, 4, 1, kind="zb_h2", extra_warmup=1)
+    plan = make_plan(2, 4, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1))
     costs = StageCosts(
         fwd_time=[1.0, 0.8], bwd_time=[3.0, 2.0],
         fwd_bytes=[1.0, 1.0], bwd_bytes=[1.0, 1.0],
@@ -329,8 +330,8 @@ def test_switch_equivalence_kfkb_zb_interleaved():
     opt = _opt()
     plans = [
         make_plan(S, M, 1, micro_batch_size=b),
-        make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2", extra_warmup=1),
-        make_plan(S, M, 1, micro_batch_size=b, kind="interleaved_zb", num_virtual=2),
+        make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1, micro_batch_size=b)),
+        make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=2, micro_batch_size=b)),
     ]
     batches = [_data(B, T, seed=10 + i) for i in range(6)]
 
@@ -385,6 +386,7 @@ _SPMD_RUNTIME_SCRIPT = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
+from repro.core.kinds import ScheduleSpec
 from repro.core.schedule import make_plan
 from repro.models.common import ModelConfig
 from repro.optim import make_optimizer
@@ -400,8 +402,11 @@ mesh = jax.make_mesh((S,), ("stage",))
 rt = PlanRuntime(cfg, S, opt, global_batch=B, seq_len=T, backend="spmd", mesh=mesh)
 plans = [
     make_plan(S, M, 1, micro_batch_size=b),
-    make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2", extra_warmup=1),
-    make_plan(S, M, 1, micro_batch_size=b, kind="interleaved_zb", num_virtual=2),
+    make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1, micro_batch_size=b)),
+    make_plan(
+        S, M,
+        spec=ScheduleSpec(kind="interleaved_zb", num_virtual=2, micro_batch_size=b),
+    ),
 ]
 rng = np.random.default_rng(0)
 tok = jnp.asarray(rng.integers(0, 64, (B, T)), jnp.int32)

@@ -13,6 +13,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    ScheduleSpec,
+    SearchSpace,
     StableTrace,
     StageCosts,
     simulate_plan,
@@ -48,7 +50,7 @@ FAMILY = [
 
 def _plans(S=4, M=8):
     return [
-        make_plan(S, M, k, kind=kind, num_virtual=v, extra_warmup=w)
+        make_plan(S, M, spec=ScheduleSpec(kind=kind, k=k, num_virtual=v, extra_warmup=w))
         for kind, k, v, w in FAMILY
     ]
 
@@ -60,9 +62,9 @@ def test_degenerate_k_cases():
     for s in range(S):
         assert kfkb_order(S, M, 1, s) == one_f_one_b_order(S, M, s)
         assert kfkb_order(S, M, M, s) == gpipe_order(S, M, s)
-    alias_1f1b = make_plan(S, M, 3, kind="1f1b")
+    alias_1f1b = make_plan(S, M, spec=ScheduleSpec(kind="1f1b", k=3))
     assert alias_1f1b.k == 1 and alias_1f1b.kind == "kfkb"
-    alias_gpipe = make_plan(S, M, 1, kind="gpipe")
+    alias_gpipe = make_plan(S, M, spec=ScheduleSpec(kind="gpipe"))
     assert alias_gpipe.k == M
 
 
@@ -71,7 +73,7 @@ def test_zb_h1_memory_equals_1f1b():
     equal-k kFkB plan per stage — zero-bubble is free memory-wise."""
     for S, M in [(2, 4), (4, 8), (4, 16), (8, 16)]:
         for k in (1, 2):
-            zb = peak_live_activations(make_plan(S, M, k, kind="zb_h1"))
+            zb = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", k=k)))
             base = peak_live_activations(make_plan(S, M, k))
             assert zb == base, (S, M, k, zb, base)
 
@@ -80,9 +82,9 @@ def test_zb_h2_buys_exactly_w_slots_per_stage():
     """The "H2" trade: every extra warmup unit costs one live slot per stage
     (per group member), clamped where the group count leaves no room."""
     S, M = 4, 16
-    base = peak_live_activations(make_plan(S, M, 1, kind="zb_h1"))
+    base = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1")))
     for w in (1, 2, 3):
-        h2 = peak_live_activations(make_plan(S, M, 1, kind="zb_h2", extra_warmup=w))
+        h2 = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=w)))
         assert h2 == [min(p + w, M) for p in base], (w, h2, base)
 
 
@@ -91,8 +93,8 @@ def test_zb_vector_warmup_uniform_equals_scalar():
     orders, same name, same peaks."""
     S, M = 4, 16
     for w in (1, 2):
-        scalar = make_plan(S, M, 1, kind="zb_h2", extra_warmup=w)
-        vector = make_plan(S, M, 1, kind="zb_h2", extra_warmup=(w,) * S)
+        scalar = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=w))
+        vector = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(w,) * S))
         assert scalar.name == vector.name
         assert [t.key() for o in scalar.orders for t in o] == [
             t.key() for o in vector.orders for t in o
@@ -104,9 +106,9 @@ def test_zb_vector_warmup_per_stage_memory_price():
     H1 + w[s], and a stage with w[s] = 0 keeps exactly its H1 peak when its
     upstream stages can feed the difference."""
     S, M = 4, 16
-    h1 = peak_live_activations(make_plan(S, M, 1, kind="zb_h1"))
+    h1 = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1")))
     w = (2, 0, 1, 0)
-    peaks = peak_live_activations(make_plan(S, M, 1, kind="zb_h2", extra_warmup=w))
+    peaks = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=w)))
     assert all(h1[s] <= peaks[s] <= h1[s] + w[s] for s in range(S)), (h1, peaks)
     # stage 0 has no upstream: its extra warmup depth is realized exactly
     assert peaks[0] == h1[0] + w[0]
@@ -115,11 +117,11 @@ def test_zb_vector_warmup_per_stage_memory_price():
 def test_zb_vector_warmup_length_and_guards():
     """The vector must be one entry per stage, >= 0, with some stage >= 1."""
     with pytest.raises(ValueError, match="one entry per stage"):
-        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=(1, 2))
+        make_plan(4, 8, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(1, 2)))
     with pytest.raises(ValueError, match=">= 0"):
-        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=(1, -1, 0, 0))
+        make_plan(4, 8, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(1, -1, 0, 0)))
     with pytest.raises(ValueError, match="extra_warmup >= 1"):
-        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=(0, 0, 0, 0))
+        make_plan(4, 8, spec=ScheduleSpec(kind="zb_h2", extra_warmup=(0, 0, 0, 0)))
 
 
 def test_interleaved_zb_composes_with_warmup():
@@ -127,11 +129,11 @@ def test_interleaved_zb_composes_with_warmup():
     the plain interleaved peak — more live slots bought at exactly the
     stages that asked, never beyond plain + w[s]."""
     S, M, v = 4, 8, 2
-    plain = peak_live_activations(make_plan(S, M, 1, kind="interleaved", num_virtual=v))
+    plain = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="interleaved", num_virtual=v)))
     w = (2, 1, 0, 2)
-    plan = make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v, extra_warmup=w)
+    plan = make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=v, extra_warmup=w))
     peaks = peak_live_activations(plan)
-    zb0 = peak_live_activations(make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v))
+    zb0 = peak_live_activations(make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=v)))
     assert all(peaks[s] <= plain[s] + w[s] for s in range(S)), (peaks, plain)
     assert all(peaks[s] >= zb0[s] for s in range(S))
     assert any(peaks[s] > zb0[s] for s in range(S) if w[s] > 0)  # warmup realized
@@ -141,7 +143,7 @@ def test_zb_orders_w0_is_h1():
     """The cap-parameterized builder at w=0 IS the H1 schedule."""
     S, M = 4, 8
     assert zb_orders(S, M, 1, extra_warmup=0) == zb_orders(S, M, 1)
-    plan = make_plan(S, M, 1, kind="zb_h1")
+    plan = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
     for s in range(S):
         assert [(t.op, t.mb) for t in plan.orders[s]] == zb_h1_order(S, M, s)
 
@@ -150,22 +152,22 @@ def test_extra_warmup_guards():
     """extra_warmup is a zb_h2-only axis, and zb_h2 requires it >= 1 (w == 0
     is exactly zb_h1 and must be spelled that way)."""
     with pytest.raises(ValueError, match="extra_warmup >= 1"):
-        make_plan(4, 8, 1, kind="zb_h2")
+        make_plan(4, 8, spec=ScheduleSpec(kind="zb_h2"))
     with pytest.raises(ValueError, match="warmup-capable kind"):
-        make_plan(4, 8, 1, kind="zb_h1", extra_warmup=1)
+        make_plan(4, 8, spec=ScheduleSpec(kind="zb_h1", extra_warmup=1))
     with pytest.raises(ValueError):
-        make_plan(4, 8, 1, kind="zb_h2", extra_warmup=-1)
+        make_plan(4, 8, spec=ScheduleSpec(kind="zb_h2", extra_warmup=-1))
 
 
 def test_interleaved_divisibility_guard():
     with pytest.raises(ValueError):
-        make_plan(4, 6, 1, kind="interleaved", num_virtual=2)  # G=6, S=4
+        make_plan(4, 6, spec=ScheduleSpec(kind="interleaved", num_virtual=2))  # G=6, S=4
     with pytest.raises(ValueError):
-        make_plan(4, 8, 3, kind="interleaved", num_virtual=2)  # k does not divide M
+        make_plan(4, 8, spec=ScheduleSpec(kind="interleaved", k=3, num_virtual=2))  # k does not divide M
     with pytest.raises(ValueError):
-        make_plan(4, 8, 1, kind="kfkb", num_virtual=2)  # chunks need interleaved
+        make_plan(4, 8, spec=ScheduleSpec(kind="kfkb", num_virtual=2))  # chunks need interleaved
     with pytest.raises(ValueError):
-        make_plan(4, 6, 1, kind="interleaved_zb", num_virtual=2)  # same rule
+        make_plan(4, 6, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=2))  # same rule
 
 
 def test_interleaved_shrinks_fill_drain_bubble():
@@ -173,7 +175,7 @@ def test_interleaved_shrinks_fill_drain_bubble():
     fraction strictly drops going 1F1B -> interleaved (same device count)."""
     S, M = 4, 8
     base = tick_table_stats(tick_table(make_plan(S, M, 1)))
-    inter = make_plan(S, M, 1, kind="interleaved", num_virtual=2).lower().stats()
+    inter = make_plan(S, M, spec=ScheduleSpec(kind="interleaved", num_virtual=2)).lower().stats()
     assert inter["bubble_fraction"] < base["bubble_fraction"]
 
 
@@ -182,10 +184,10 @@ def test_interleaved_zb_memory_never_exceeds_plain_interleaved():
     buying any extra live slots over the equal-(k, v) interleaved plan."""
     for S, M, k, v in [(4, 8, 1, 2), (4, 8, 2, 2), (2, 8, 2, 2), (4, 16, 2, 2)]:
         zb = peak_live_activations(
-            make_plan(S, M, k, kind="interleaved_zb", num_virtual=v)
+            make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", k=k, num_virtual=v))
         )
         plain = peak_live_activations(
-            make_plan(S, M, k, kind="interleaved", num_virtual=v)
+            make_plan(S, M, spec=ScheduleSpec(kind="interleaved", k=k, num_virtual=v))
         )
         assert all(a <= b for a, b in zip(zb, plain)), (S, M, k, v, zb, plain)
 
@@ -201,7 +203,7 @@ def test_legacy_tick_table_shim_matches_grid():
 def test_plan_lowering_is_cached():
     """Plans are static: ``plan.lower()`` computes the TabularPlan once and
     returns the same object forever after (the tuner/engine contract)."""
-    plan = make_plan(4, 8, 2, kind="zb_h1")
+    plan = make_plan(4, 8, spec=ScheduleSpec(kind="zb_h1", k=2))
     assert plan.lower() is plan.lower()
     # the uncached entry point still rebuilds (used by the shim tests above)
     assert lower_to_table(plan) is not plan.lower()
@@ -228,7 +230,10 @@ def test_enumerate_rejects_unknown_kind():
         layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
     )
     with pytest.raises(ValueError, match="unknown schedule kind"):
-        enumerate_candidates(4, 32, mm, 1e8, max_k=2, kinds=("kfkb", "zb-h1"))
+        enumerate_candidates(
+        4, 32, mm, 1e8,
+        space=SearchSpace(kinds=("kfkb", "zb-h1"), max_k=2),
+    )
 
 
 @pytest.mark.parametrize("kind,w", [("zb_h1", 0), ("zb_h2", 1), ("zb_h2", 2)])
@@ -244,7 +249,7 @@ def test_zb_memory_model_prices_the_dy_context(kind, w):
         layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
     )
     base = make_plan(4, 8, 2, micro_batch_size=4)
-    zb = make_plan(4, 8, 2, micro_batch_size=4, kind=kind, extra_warmup=w)
+    zb = make_plan(4, 8, spec=ScheduleSpec(kind=kind, k=2, extra_warmup=w, micro_batch_size=4))
     expected = [min(p + w * 2, 8) for p in peak_live_activations(base)]
     assert peak_live_activations(zb) == expected
     assert mm.peak_bytes(zb) > mm.peak_bytes(base)
@@ -260,7 +265,7 @@ def test_h2_peak_bytes_monotone_in_w():
         layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
     )
     peaks = [
-        mm.peak_bytes(make_plan(4, 16, 1, micro_batch_size=2, kind="zb_h2", extra_warmup=w))
+        mm.peak_bytes(make_plan(4, 16, spec=ScheduleSpec(kind="zb_h2", extra_warmup=w, micro_batch_size=2)))
         for w in (1, 2, 3)
     ]
     assert peaks == sorted(peaks) and peaks[0] < peaks[-1]

@@ -9,6 +9,7 @@ from repro.core import (
     BurstyTrace,
     Network,
     PeriodicPreemptionTrace,
+    ScheduleSpec,
     StableTrace,
     StageCosts,
     closed_form_1f1b_length,
@@ -121,7 +122,7 @@ def test_zero_bubble_beats_1f1b_on_uniform_pipeline():
     costs = StageCosts.uniform(S, 1.0)  # bwd = 2*fwd, B = W = fwd
     net = _fast_net(S)
     res_1f1b = simulate_plan(make_plan(S, M, 1), costs, net)
-    res_zb = simulate_plan(make_plan(S, M, 1, kind="zb_h1"), costs, net)
+    res_zb = simulate_plan(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1")), costs, net)
     assert res_zb.pipeline_length < res_1f1b.pipeline_length
     assert res_zb.bubble_fraction < res_1f1b.bubble_fraction
     # same total work: the split must not change per-device busy time
@@ -135,7 +136,7 @@ def test_grouped_zero_bubble_beats_kfkb_under_preemption():
     costs = StageCosts.uniform(S, 1.0, act_bytes=2.0)
     net = uniform_network(S, lambda: StableTrace(1.0))
     res_kfkb = simulate_plan(make_plan(S, M, k), costs, net)
-    res_hybrid = simulate_plan(make_plan(S, M, k, kind="zb_h1"), costs, net)
+    res_hybrid = simulate_plan(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", k=k)), costs, net)
     assert res_hybrid.pipeline_length < res_kfkb.pipeline_length
 
 
@@ -162,7 +163,7 @@ def test_zb_h2_golden_fills_warmup_at_exactly_w_slots():
     from repro.core.schedule import peak_live_activations
 
     S, M = 4, 16
-    h1 = make_plan(S, M, 1, kind="zb_h1")
+    h1 = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
     costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
     net = uniform_network(
         S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
@@ -171,7 +172,7 @@ def test_zb_h2_golden_fills_warmup_at_exactly_w_slots():
     warm_h1 = _warmup_bubble_ticks(h1)
     prev = len_h1
     for w in (1, 2, 3):
-        h2 = make_plan(S, M, 1, kind="zb_h2", extra_warmup=w)
+        h2 = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=w))
         # the memory price: exactly w extra live slots at every stage
         assert peak_live_activations(h2) == [
             p + w for p in peak_live_activations(h1)
@@ -196,9 +197,9 @@ def test_zb_h2_vector_golden_beats_best_scalar_under_preemption():
         S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
     )
     w_vec = (3, 3, 2, 1)
-    vector = make_plan(S, M, 1, kind="zb_h2", extra_warmup=w_vec)
-    scalar = make_plan(S, M, 1, kind="zb_h2", extra_warmup=1)
-    h1 = make_plan(S, M, 1, kind="zb_h1")
+    vector = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=w_vec))
+    scalar = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1))
+    h1 = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
     len_v = simulate_plan(vector, costs, net).pipeline_length
     len_s = simulate_plan(scalar, costs, net).pipeline_length
     len_1 = simulate_plan(h1, costs, net).pipeline_length
@@ -214,8 +215,8 @@ def test_interleaved_zb_golden_beats_plain_interleaved():
     transfer cost), with identical per-device busy time."""
     S, M, v = 4, 8, 2
     costs = StageCosts.uniform(S, 1.0, act_bytes=1.0)
-    plain = make_plan(S, M, 1, kind="interleaved", num_virtual=v)
-    joint = make_plan(S, M, 1, kind="interleaved_zb", num_virtual=v)
+    plain = make_plan(S, M, spec=ScheduleSpec(kind="interleaved", num_virtual=v))
+    joint = make_plan(S, M, spec=ScheduleSpec(kind="interleaved_zb", num_virtual=v))
     for net in (_fast_net(S), uniform_network(S, lambda: StableTrace(2.0))):
         res_p = simulate_plan(plain, costs, net)
         res_j = simulate_plan(joint, costs, net)

@@ -1,17 +1,23 @@
 """The ScheduleSpec / SearchSpace / kind-registry API redesign, proven.
 
-Four suites:
+Five suites:
 
 * **Back-compat conformance** — the legacy ``make_plan(**kwargs)`` /
   ``enumerate_candidates(kinds=..., virtual_degrees=...)`` signatures and
   the new ``spec=`` / ``space=`` forms produce IDENTICAL plans (same
-  lowered ``TabularPlan`` digests) and identical candidate sets.
+  lowered ``TabularPlan`` digests) and identical candidate sets.  This
+  file is the ONE place legacy forms are called on purpose (module-level
+  ``filterwarnings`` below); everywhere else the gate test bites.
+* **Deprecation contract** — the legacy forms warn ``DeprecationWarning``
+  (PR 6), the modern forms stay silent, and mixing both is a loud error.
 * **Fail-closed registry** — an unregistered kind is a loud ``ValueError``
   naming the registered kinds, everywhere a kind string enters the system.
-* **No string dispatch** — the tier-1 grep gate: no module under
-  ``src/repro`` outside ``core/kinds.py`` / ``core/schedule.py`` may
-  dispatch on schedule-kind strings or the legacy kind-set tuples (the CI
-  lint job runs the same scan; this test makes it bite locally).
+* **No string dispatch / no legacy call forms** — the tier-1 gates: no
+  module under ``src/repro`` outside ``core/kinds.py`` /
+  ``core/schedule.py`` may dispatch on schedule-kind strings, and no
+  in-repo caller outside this file may use the deprecated kwarg forms or
+  the untyped Coordinator hooks (the CI lint job runs the same scans;
+  these tests make them bite locally).
 * **ZB-V acceptance** — the first registry-only family member shows the
   controllable-memory trade: peak live strictly below the equal-(S, M, k)
   plain-interleaved plan's, makespan no worse than 1F1B on the preemption
@@ -19,11 +25,17 @@ Four suites:
   the compile-cache key through the one ScheduleSpec currency.
 """
 
+import ast
 import hashlib
 import os
 import re
+import warnings as _warnings
 
 import pytest
+
+# the conformance suite exercises the deprecated forms BY DESIGN; the
+# explicit deprecation tests below re-enable the filter locally
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.core import (
     MemoryModel,
@@ -162,6 +174,49 @@ def test_candidate_record_cache_share_one_spec_currency():
 
 
 # ---------------------------------------------------------------------------
+# Deprecation contract (PR 6): legacy forms warn, modern forms are silent
+# ---------------------------------------------------------------------------
+
+
+def test_make_plan_legacy_kind_kwargs_warn():
+    """The kind/num_virtual/extra_warmup kwargs emit DeprecationWarning
+    pointing at spec=ScheduleSpec(...); the paper's original positional
+    (S, M, k, micro_batch_size=b) form and the spec= form stay silent."""
+    with pytest.warns(DeprecationWarning, match="spec=ScheduleSpec"):
+        make_plan(4, 8, 1, kind="zb_h1")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        make_plan(4, 8, 2, kind="interleaved", num_virtual=2)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        make_plan(4, 8, 1, extra_warmup=1, kind="zb_h2")
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        make_plan(4, 8, 2, micro_batch_size=2)  # paper form: not deprecated
+        make_plan(4, 8, spec=ScheduleSpec(kind="zbv", k=2))
+
+
+def test_enumerate_candidates_legacy_axis_kwargs_warn():
+    """Each legacy axis kwarg triggers the warning (which names the kwargs
+    given); space= and the bare 4-positional call stay silent."""
+    mm = _mm(4)
+    with pytest.warns(DeprecationWarning, match=r"max_k=.*space=SearchSpace"):
+        enumerate_candidates(4, 16, mm, 1e9, max_k=1)
+    with pytest.warns(DeprecationWarning, match="kinds="):
+        enumerate_candidates(4, 16, mm, 1e9, kinds=("kfkb",))
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        enumerate_candidates(4, 16, mm, 1e9)
+        enumerate_candidates(4, 16, mm, 1e9, space=SearchSpace(max_k=1))
+
+
+def test_enumerate_candidates_rejects_space_plus_legacy_axes():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="not both"):
+            enumerate_candidates(
+                4, 16, _mm(4), 1e9, max_k=1, space=SearchSpace(max_k=1)
+            )
+
+
+# ---------------------------------------------------------------------------
 # Fail-closed registry
 # ---------------------------------------------------------------------------
 
@@ -259,6 +314,67 @@ def test_no_kind_string_dispatch_outside_registry():
     assert not offenders, (
         "schedule-kind string dispatch outside core/kinds.py + "
         "core/schedule.py:\n" + "\n".join(offenders)
+    )
+
+
+#: deprecated kwarg sets per callee — a call site naming any of these is a
+#: legacy form (AST-matched, so formatting/line-breaks can't hide one)
+_LEGACY_FORMS = {
+    "make_plan": {"kind", "num_virtual", "extra_warmup"},
+    "enumerate_candidates": {
+        "kinds", "virtual_degrees", "max_k", "min_microbatches", "max_extra_warmup"
+    },
+    "Coordinator": {"telemetry", "on_iteration"},
+}
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_ROOTS = [
+    _SRC,
+    os.path.join(os.path.dirname(__file__)),
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks"),
+    os.path.join(os.path.dirname(__file__), "..", "examples"),
+]
+_LEGACY_EXEMPT = {os.path.abspath(__file__)}  # this suite calls them on purpose
+
+
+def test_no_legacy_call_forms_outside_conformance_suite():
+    """PR 6's migration lock: every in-repo caller of make_plan /
+    enumerate_candidates / Coordinator uses the ScheduleSpec / SearchSpace
+    / typed-hook forms.  The deprecated kwargs may appear only in this
+    conformance suite.  AST-based so a reformatted call can't slip past
+    the CI grep (which runs a coarser single-line scan of the same names
+    for log visibility)."""
+    offenders = []
+    for base in _ROOTS:
+        for root, _, files in os.walk(os.path.abspath(base)):
+            for f in sorted(files):
+                if not f.endswith(".py"):
+                    continue
+                path = os.path.join(root, f)
+                if os.path.abspath(path) in _LEGACY_EXEMPT:
+                    continue
+                with open(path) as fh:
+                    tree = ast.parse(fh.read())
+                for node in ast.walk(tree):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = (
+                        node.func.id if isinstance(node.func, ast.Name)
+                        else node.func.attr if isinstance(node.func, ast.Attribute)
+                        else None
+                    )
+                    banned = _LEGACY_FORMS.get(name)
+                    if not banned:
+                        continue
+                    hit = banned & {kw.arg for kw in node.keywords if kw.arg}
+                    if hit:
+                        offenders.append(
+                            f"{os.path.relpath(path, _REPO)}:{node.lineno}: "
+                            f"{name}({', '.join(sorted(hit))}=...)"
+                        )
+    assert not offenders, (
+        "deprecated legacy call forms outside tests/test_spec_api.py "
+        "(use spec=ScheduleSpec / space=SearchSpace / hooks= / "
+        "telemetry_sink=):\n" + "\n".join(offenders)
     )
 
 

@@ -10,6 +10,8 @@ from repro.core import (
     Network,
     NetworkProfiler,
     RegimeTrace,
+    ScheduleSpec,
+    SearchSpace,
     StableTrace,
     StageCosts,
     enumerate_candidates,
@@ -24,7 +26,10 @@ def _setup(S=4, B=32, bw=2.0):
         grad_bytes=1e6, stage_input_bytes_per_token=512.0,
         layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
     )
-    cands = enumerate_candidates(S, B, mm, 1e8, max_k=4)
+    cands = enumerate_candidates(
+        S, B, mm, 1e8,
+        space=SearchSpace(max_k=4),
+    )
     costs_by_b = {}
 
     def stage_costs_for(cand):
@@ -113,7 +118,8 @@ def test_tuner_selects_schedule_kind_not_just_k():
         layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
     )
     cands = enumerate_candidates(
-        S, B, mm, 1e8, max_k=4, kinds=("kfkb", "zb_h1", "interleaved"),
+        S, B, mm, 1e8,
+        space=SearchSpace(kinds=("kfkb", "zb_h1", "interleaved"), max_k=4),
     )
     kinds = {c.kind for c in cands}
     assert kinds == {"kfkb", "zb_h1", "interleaved"}
@@ -179,7 +185,8 @@ def test_tuner_selects_zb_h2_when_memory_admits_extra_warmup():
     vector."""
     S, B = 4, 32
     cands = enumerate_candidates(
-        S, B, _mm(S), 1e8, max_k=1, min_microbatches=16, kinds=("zb_h1", "zb_h2"),
+        S, B, _mm(S), 1e8,
+        space=SearchSpace(kinds=("zb_h1", "zb_h2"), max_k=1, min_microbatches=16),
     )
     assert {c.kind for c in cands} == {"zb_h1", "zb_h2"}
     h2 = next(c for c in cands if c.kind == "zb_h2")
@@ -206,10 +213,11 @@ def test_tuner_refuses_zb_h2_when_memory_forbids_it():
     # at the smallest feasible b (=1): each stage's limit sits between its
     # own H1 peak and the cost of one extra zb slot — H1 fits everywhere,
     # w[s]=1 fits nowhere
-    h1_peaks = mm.peak_bytes_per_stage(make_plan(S, B, 1, micro_batch_size=1, kind="zb_h1"))
+    h1_peaks = mm.peak_bytes_per_stage(make_plan(S, B, spec=ScheduleSpec(kind="zb_h1")))
     tight = [p + 0.5 * mm.slot_bytes(s, 1, True) for s, p in enumerate(h1_peaks)]
     cands = enumerate_candidates(
-        S, B, mm, tight, max_k=1, min_microbatches=B, kinds=("zb_h1", "zb_h2"),
+        S, B, mm, tight,
+        space=SearchSpace(kinds=("zb_h1", "zb_h2"), max_k=1, min_microbatches=B),
     )
     assert [c.kind for c in cands] == ["zb_h1"]  # H2 refused entirely
 
@@ -233,12 +241,12 @@ def test_vector_warmup_beats_every_scalar_on_memory_skewed_pipeline():
     # the skew: stage s's limit admits exactly target[s] extra slots — early
     # stages are memory-rich, the last stage nearly full
     target = (3, 3, 2, 1)
-    plan_v = make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2", extra_warmup=target)
+    plan_v = make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=target, micro_batch_size=b))
     limits = [p + 1.0 for p in mm.peak_bytes_per_stage(plan_v)]
 
     cands = enumerate_candidates(
-        S, B, mm, limits, max_k=1, min_microbatches=B,
-        kinds=("zb_h1", "zb_h2"), max_extra_warmup=8,
+        S, B, mm, limits,
+        space=SearchSpace(kinds=("zb_h1", "zb_h2"), max_k=1, min_microbatches=B, max_extra_warmup=8),
     )
     h2 = next(c for c in cands if c.kind == "zb_h2")
     assert h2.extra_warmup == target  # greedy recovers the full skew
@@ -257,7 +265,7 @@ def test_vector_warmup_beats_every_scalar_on_memory_skewed_pipeline():
     scalar_lengths = {}
     for w in range(0, max(target) + 2):
         kind = "zb_h1" if w == 0 else "zb_h2"
-        plan_s = make_plan(S, M, 1, micro_batch_size=b, kind=kind, extra_warmup=w)
+        plan_s = make_plan(S, M, spec=ScheduleSpec(kind=kind, extra_warmup=w, micro_batch_size=b))
         if mm.fits(plan_s, limits):
             scalar_lengths[w] = simulate_plan(plan_s, costs, net).pipeline_length
     assert set(scalar_lengths) == {0, 1}  # the tight stage pins scalars at w<=1
@@ -268,8 +276,7 @@ def test_vector_warmup_beats_every_scalar_on_memory_skewed_pipeline():
     from repro.core import Candidate
 
     scalar_cands = [
-        Candidate(1, b, M, make_plan(S, M, 1, micro_batch_size=b, kind="zb_h2",
-                                     extra_warmup=1), 0.0)
+        Candidate(1, b, M, make_plan(S, M, spec=ScheduleSpec(kind="zb_h2", extra_warmup=1, micro_batch_size=b)), 0.0)
     ]
     tuner = AutoTuner(
         cands + scalar_cands, costs_for, NetworkProfiler(_preempted_network(S))
