@@ -24,6 +24,12 @@ a PINNED, fully seeded subset of the paper benchmarks —
   through a scripted refusal (fleet-wide abort) and a committed warm
   switch: barrier verdict counts, commit latency (wall-clock), and the
   worst per-host precompile hit rate,
+* **saved-residual zero-bubble** — the no-remat ``BWD_WEIGHT`` body:
+  simulated makespan gain of ``zb_policy="saved_residual"`` over
+  double-remat on a W-heavy pipeline under preemption, the tuner's
+  per-stage policy trail on a stage-0-tight limit curve, and (runtime
+  suite) the compiled-HLO FLOP ratio of the two W bodies on real stage
+  kernels — all deterministic,
 
 — and writes them as schema-versioned ``BENCH_<tag>.json`` at the repo
 root.  The CI ``bench`` job (main only) runs ``--check``: against the most
@@ -102,6 +108,14 @@ GATES = {
     "fabric_aborted_switches": ("higher", 0.0),
     "fabric_precompile_hit_rate_min": ("higher", REL_TOL),
     "fabric_barrier_latency_commit": ("lower", 0.5),
+    # saved-residual zero-bubble (PR 7): the no-remat W body must keep
+    # beating double-remat on the W-heavy preemption cell, the tuner must
+    # keep choosing saved_residual exactly on the admitting stages, and the
+    # real compiled W kernels must keep the FLOP gap (the eliminated
+    # rematerialized forward) on every stage
+    "saved_residual_gain_vs_double_remat": ("higher", REL_TOL),
+    "sr_tuner_mixed_selected": ("higher", 0.0),
+    "sr_w_flops_ratio_min": ("higher", REL_TOL),
 }
 
 #: wall-clock metrics only gate against a baseline recorded on a comparable
@@ -185,6 +199,111 @@ def zbv_ratios() -> dict:
         "zbv_preempted_gain_vs_1f1b": len_1f1b / len_zbv,
         "zbv_peak_live": peak_zbv,
         "zbv_peak_live_ratio_vs_interleaved": peak_il / peak_zbv,
+    }
+
+
+def saved_residual_metrics() -> dict:
+    """Saved-residual zero-bubble on the pinned W-heavy preemption cell.
+
+    * **simulator gain** — identical zb_h1 schedule shape, W-heavy costs
+      (double-remat W = remat forward + pullback at 2.0, saved-residual W
+      = pure pullback at 1.0); gain = DR length / SR length.  The drain of
+      ``M`` W bodies per stage sets the tail, so eliminating the remat
+      shortens the makespan deterministically.
+    * **tuner policy trail** — the acceptance shape: a limit curve tight
+      on stage 0 and generous elsewhere; the enumeration emits the DR
+      baseline plus the mixed vector and the tuner must select
+      saved_residual exactly on the admitting stages (``sr_tuner_mixed_
+      selected`` gates the deterministic pick).
+    """
+    S, M = 4, 16
+    costs = StageCosts(
+        fwd_time=[1.0] * S, bwd_time=[3.0] * S,
+        fwd_bytes=[1.0] * S, bwd_bytes=[1.0] * S,
+        bwd_input_time=[1.0] * S, bwd_weight_time=[2.0] * S,
+        bwd_weight_saved_time=[1.0] * S,
+    )
+
+    def trace():
+        return PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+
+    dr = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
+    sr = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", zb_policy="saved_residual"))
+    len_dr = simulate_plan(dr, costs, uniform_network(S, trace)).pipeline_length
+    len_sr = simulate_plan(sr, costs, uniform_network(S, trace)).pipeline_length
+
+    # the tuner's per-stage policy trail (mirrors the acceptance test)
+    B = 32
+    mm = MemoryModel.uniform(
+        num_stages=S, seq_len=64, param_bytes=1e6, optimizer_bytes=2e6,
+        grad_bytes=1e6, stage_input_bytes_per_token=512.0,
+        layer_act_bytes_per_token=64.0, num_layers_per_stage=2,
+    )
+    base = mm.peak_bytes_per_stage(make_plan(S, B, spec=ScheduleSpec(kind="zb_h1")))
+    limits = [p + (1.0 if s == 0 else 1e9) for s, p in enumerate(base)]
+    cands = enumerate_candidates(
+        S, B, mm, limits,
+        space=SearchSpace(
+            kinds=("zb_h1",), max_k=1,
+            zb_policies=("double_remat", "saved_residual"),
+        ),
+    )
+    w_heavy = StageCosts(
+        fwd_time=[1.0] * S, bwd_time=[4.0] * S,
+        fwd_bytes=[0.01] * S, bwd_bytes=[0.01] * S,
+        bwd_input_time=[1.0] * S, bwd_weight_time=[3.0] * S,
+        bwd_weight_saved_time=[1.2] * S,
+    )
+    rec = AutoTuner(
+        cands, lambda _c: w_heavy, NetworkProfiler(uniform_network(S, trace))
+    ).tune(0.0)
+    trail = list(rec.chosen_zb_policy)
+    mixed = (
+        trail
+        and trail[0] == "double_remat"
+        and trail[1:] == ["saved_residual"] * (S - 1)
+    )
+    return {
+        "saved_residual_len_dr": len_dr,
+        "saved_residual_len_sr": len_sr,
+        "saved_residual_gain_vs_double_remat": len_dr / len_sr,
+        "sr_tuner_policy_trail": trail,
+        "sr_tuner_mixed_selected": int(bool(mixed)),
+        "sr_tuner_chosen": rec.chosen,
+    }
+
+
+def saved_residual_kernel_metrics() -> dict:
+    """The real-engine proof that SR's W body is genuinely cheaper: compile
+    both W kernels of every stage of a tiny real model and compare their
+    optimized-HLO FLOP counts.  The ratio is exactly the rematerialized
+    forward double-remat pays per W task; FLOPs (not roofline seconds) are
+    the honest gate — at bench-tiny shapes the residual-row read can make
+    SR memory-bound even though the compiled work strictly shrinks.
+    Deterministic given the model config.  Imports are local: this is part
+    of the runtime suite (compiles jax programs) and ``--skip-runtime``
+    must stay light."""
+    import jax.numpy as jnp
+
+    from repro.core.calibrate import calibrate_stage_costs
+    from repro.models.common import ModelConfig
+    from repro.pipeline.stage import StagedModel
+
+    cfg = ModelConfig(
+        name="bench-sr", family="dense", num_layers=2, d_model=32,
+        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=256,
+        dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+    staged = StagedModel.build(cfg, 2)
+    cal = calibrate_stage_costs(staged, micro_batch_size=2, seq_len=8)
+    ratios = [
+        p["bwd_weight"].flops / p["bwd_weight_saved"].flops for p in cal.profiles
+    ]
+    return {
+        "sr_w_flops_ratio_min": min(ratios),
+        "sr_w_flops_ratios": ratios,
+        "sr_w_seconds": [p["bwd_weight_saved"].seconds for p in cal.profiles],
+        "dr_w_seconds": [p["bwd_weight"].seconds for p in cal.profiles],
     }
 
 
@@ -390,11 +509,13 @@ def collect(skip_runtime: bool = False) -> dict:
     metrics.update(fig2_ratios())
     metrics.update(vector_w_gain())
     metrics.update(zbv_ratios())
+    metrics.update(saved_residual_metrics())
     metrics.update(tuner_switch_trace())
     metrics.update(simulator_throughput())
     if not skip_runtime:
         metrics.update(runtime_metrics())
         metrics.update(fabric_metrics())
+        metrics.update(saved_residual_kernel_metrics())
     return metrics
 
 

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.memory_model import MemoryModel, StageMemorySpec
 from repro.core.taskgraph import StageCosts
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, analyze_hlo
+from repro.pipeline.residuals import probe_residual_layout, rebuild_vjp
 from repro.pipeline.stage import StagedModel
 
 __all__ = ["StageTaskProfile", "Calibration", "calibrate_stage_costs"]
@@ -58,7 +59,8 @@ class Calibration:
 
     costs: StageCosts
     memory: MemoryModel
-    profiles: list[dict[str, StageTaskProfile]]  # per stage: fwd/bwd_input/bwd_weight
+    # per stage: fwd / bwd_input / bwd_weight / bwd_weight_saved
+    profiles: list[dict[str, StageTaskProfile]]
 
     def summary_rows(self) -> list[list[str]]:
         """Per-stage table rows: times in ms (3 sig figs), wire bytes in MB."""
@@ -70,6 +72,7 @@ class Calibration:
                     f"{prof['fwd'].seconds * 1e3:.3g}",
                     f"{prof['bwd_input'].seconds * 1e3:.3g}",
                     f"{prof['bwd_weight'].seconds * 1e3:.3g}",
+                    f"{prof['bwd_weight_saved'].seconds * 1e3:.3g}",
                     f"{self.costs.fwd_bytes[s] / 1e6:.3g}",
                 ]
             )
@@ -132,14 +135,18 @@ def calibrate_stage_costs(
 ) -> Calibration:
     """Profile every stage's real task bodies into a heterogeneous profile.
 
-    Per stage ``s`` of ``staged`` three programs are lowered, compiled and
+    Per stage ``s`` of ``staged`` four programs are lowered, compiled and
     analyzed (mirroring exactly what the engines execute per task):
 
     * **fwd** — ``stage_hidden`` (stage 0 prepends ``embed_tokens``),
     * **bwd_input** — the ``jax.vjp`` pullback w.r.t. the stage input (the
       last stage differentiates through its loss head, which is where the
       vocab-projection backward — the single biggest skew source — lands),
-    * **bwd_weight** — the pullback w.r.t. the stage parameters.
+    * **bwd_weight** — the pullback w.r.t. the stage parameters, fed by a
+      second rematerialization (``zb_policy="double_remat"``),
+    * **bwd_weight_saved** — the same pullback replayed from a saved
+      residual row (``zb_policy="saved_residual"``): genuinely cheaper
+      because the rematerialized forward is dead code.
 
     ``method="hlo"`` (default) converts the HLO FLOP/byte counts to seconds
     with the roofline constants; ``method="wallclock"`` times the compiled
@@ -163,7 +170,7 @@ def calibrate_stage_costs(
 
     profiles: list[dict[str, StageTaskProfile]] = []
     specs: list[StageMemorySpec] = []
-    fwd_t, bwd_i_t, bwd_w_t = [], [], []
+    fwd_t, bwd_i_t, bwd_w_t, bwd_ws_t = [], [], [], []
     for s in range(S):
         p_spec = _stage_param_spec(staged, params_spec, s)
         first, last = s == 0, s == S - 1
@@ -211,10 +218,56 @@ def calibrate_stage_costs(
         bwd_i = _profile_compiled(bwd_input_fn, bi_args, peak_flops, hbm_bw, method)
         bwd_w = _profile_compiled(bwd_weight_fn, bw_args, peak_flops, hbm_bw, method)
 
-        profiles.append({"fwd": fwd, "bwd_input": bwd_i, "bwd_weight": bwd_w})
+        # the saved_residual W body the engines actually run: replay B's
+        # pullback from the slot's residual row — the dummy re-trace's
+        # forward is dead code in the optimized HLO, so the profile counts
+        # only the weight-gradient pullback (no rematerialization)
+        if last:
+            layout_s = probe_residual_layout(
+                lambda p, x, lbl: staged.head_loss(p, staged.stage_hidden(p, x), lbl),
+                p_spec, x_spec, lbl_spec,
+            )
+            res_spec = jax.ShapeDtypeStruct((layout_s.width,), jnp.float32)
+
+            def bwd_weight_saved_fn(p, x, lbl, row):
+                def through(pp, xx):
+                    return staged.head_loss(pp, staged.stage_hidden(pp, xx), lbl)
+
+                loss_dead, vjp_dummy = jax.vjp(through, p, x)
+                vjp_saved = rebuild_vjp(vjp_dummy, layout_s, row, params=p)
+                return vjp_saved(jnp.ones_like(loss_dead))[0]
+
+            bws_args = (p_spec, x_spec, lbl_spec, res_spec)
+        else:
+            layout_s = probe_residual_layout(
+                lambda p, x: staged.stage_hidden(p, x), p_spec, x_spec
+            )
+            res_spec = jax.ShapeDtypeStruct((layout_s.width,), jnp.float32)
+
+            def bwd_weight_saved_fn(p, x, dy, row):
+                _, vjp_dummy = jax.vjp(
+                    lambda pp, xx: staged.stage_hidden(pp, xx), p, x
+                )
+                vjp_saved = rebuild_vjp(vjp_dummy, layout_s, row, params=p)
+                return vjp_saved(dy)[0]
+
+            bws_args = (p_spec, x_spec, x_spec, res_spec)
+        bwd_ws = _profile_compiled(
+            bwd_weight_saved_fn, bws_args, peak_flops, hbm_bw, method
+        )
+
+        profiles.append(
+            {
+                "fwd": fwd,
+                "bwd_input": bwd_i,
+                "bwd_weight": bwd_w,
+                "bwd_weight_saved": bwd_ws,
+            }
+        )
         fwd_t.append(fwd.seconds)
         bwd_i_t.append(bwd_i.seconds)
         bwd_w_t.append(bwd_w.seconds)
+        bwd_ws_t.append(bwd_ws.seconds)
 
         param_bytes = _tree_bytes(p_spec)
         layer_act = float(
@@ -238,6 +291,7 @@ def calibrate_stage_costs(
         bwd_bytes=[act_bytes] * S,
         bwd_input_time=bwd_i_t,
         bwd_weight_time=bwd_w_t,
+        bwd_weight_saved_time=bwd_ws_t,
     )
     memory = MemoryModel(stages=specs, seq_len=seq_len)
     return Calibration(costs=costs, memory=memory, profiles=profiles)

@@ -131,6 +131,7 @@ def largest_admissible_warmup(
     memory_model: MemoryModel,
     limits: Sequence[float],
     max_extra_warmup: int,
+    zb_policy: Sequence[str] | None = None,
 ) -> tuple[int, ...]:
     """Greedy per-stage warmup vector on the memory-limit curve.
 
@@ -140,11 +141,14 @@ def largest_admissible_warmup(
     ``interleaved_zb`` for virtual-stage ones), and each stage
     independently takes the largest ``w[s]`` its own limit admits via the
     closed-form stage byte curve — no plan is built per probe.
+    ``zb_policy`` (a per-stage vector) prices saved-residual stages under
+    the residual-fattened slot curve, so they admit shallower warmup.
     """
     kind = "interleaved_zb" if num_virtual > 1 else "zb_h2"
     return admissible_warmup(
         get_kind(kind), num_stages, M, k, b, num_virtual,
         memory_model, limits, max_extra_warmup, zb_pricing=zb,
+        zb_policy=zb_policy,
     )
 
 
@@ -245,6 +249,7 @@ def enumerate_candidates(
                         memory_model=memory_model,
                         limits=limits,
                         max_extra_warmup=max_w,
+                        zb_policies=space.zb_policies,
                     )
                     for i, spec in enumerate(specs):
                         if i in found:

@@ -45,7 +45,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import schedule as _sched
-from repro.core.schedule import Op, Task, normalize_warmup
+from repro.core.schedule import Op, Task, normalize_warmup, normalize_zb_policy
 
 __all__ = [
     "ScheduleSpec",
@@ -58,6 +58,8 @@ __all__ = [
     "known_kinds",
     "resolve_alias",
     "admissible_warmup",
+    "saved_residual_kinds",
+    "saved_residual_policy",
     "zbv_orders",
 ]
 
@@ -83,6 +85,9 @@ class ScheduleSpec:
     num_virtual: int = 1
     extra_warmup: int | tuple[int, ...] = 0
     micro_batch_size: int = 1
+    # split-backward kinds only: per-stage BWD_WEIGHT policy
+    # ("double_remat" | "saved_residual"); a scalar broadcasts on resolve.
+    zb_policy: str | tuple[str, ...] = "double_remat"
 
     def resolve(self, num_stages: int, num_microbatches: int) -> "ScheduleSpec":
         kind, k = resolve_alias(self.kind, self.k, num_microbatches)
@@ -108,7 +113,14 @@ class ScheduleSpec:
                 f"kind={kind!r} needs extra_warmup >= 1 at some stage "
                 f"(got {self.extra_warmup}); extra_warmup == 0 is exactly zb_h1"
             )
-        return ScheduleSpec(kind, k, v, w, self.micro_batch_size)
+        pol = normalize_zb_policy(self.zb_policy, num_stages)
+        if any(p == "saved_residual" for p in pol) and not spec.supports_saved_residual:
+            raise ValueError(
+                f"zb_policy='saved_residual' requires a split-backward kind "
+                f"with the saved-residual BWD_WEIGHT path "
+                f"(one of {saved_residual_kinds()}), got {kind!r}"
+            )
+        return ScheduleSpec(kind, k, v, w, self.micro_batch_size, zb_policy=pol)
 
     @classmethod
     def from_plan(cls, plan) -> "ScheduleSpec":
@@ -119,6 +131,7 @@ class ScheduleSpec:
             num_virtual=plan.num_virtual,
             extra_warmup=tuple(plan.extra_warmup),
             micro_batch_size=plan.micro_batch_size,
+            zb_policy=tuple(plan.zb_policy),
         )
 
 
@@ -138,10 +151,17 @@ class SearchSpace:
     max_k: int | None = None
     min_microbatches: int | None = None
     max_extra_warmup: int | None = None
+    # BWD_WEIGHT policies to explore on saved-residual-capable kinds.  With
+    # "saved_residual" present, each such kind additionally emits (per
+    # (k, b)) a per-stage greedy DR/SR vector: saved_residual wherever the
+    # stage's memory-limit admits the residual surcharge, double_remat
+    # elsewhere (see :func:`saved_residual_policy`).
+    zb_policies: tuple[str, ...] = ("double_remat",)
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "kinds", tuple(self.kinds))
         object.__setattr__(self, "virtual_degrees", tuple(self.virtual_degrees))
+        object.__setattr__(self, "zb_policies", tuple(self.zb_policies))
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +189,10 @@ class KindSpec:
     supports_extra_warmup: bool = False
     requires_warmup: bool = False
     has_split_backward: bool = False
+    # the kind's BWD_WEIGHT accepts zb_policy="saved_residual" (both engines
+    # thread B's vjp residuals through the live slot instead of
+    # rematerializing).  Only meaningful with has_split_backward.
+    supports_saved_residual: bool = False
     weight_placement_refinable: bool = False
     peak_is_exact: bool = False
     needs_group_multiple_of_stages: bool = False
@@ -211,13 +235,18 @@ class KindSpec:
         memory_model,
         limits: Sequence[float],
         max_extra_warmup: int,
+        zb_policies: Sequence[str] = ("double_remat",),
     ) -> list[ScheduleSpec]:
         """The kind's search points at one ``(k, b)`` — the axis enumerator
         ``enumerate_candidates`` consumes.  Flags drive the default: the
         virtual axis comes from ``virtual_degrees`` (or is pinned), and
         warmup-capable kinds take the greedily-priced ``w[s]`` (a
         warmup-REQUIRING kind yields nothing when no stage admits
-        ``w = 1`` — that is the tuner's H1 fallback)."""
+        ``w = 1`` — that is the tuner's H1 fallback).  When the caller's
+        ``zb_policies`` include ``"saved_residual"`` and the kind supports
+        it, each virtual degree also emits the per-stage greedy DR/SR
+        variant (when at least one stage admits the residual surcharge) —
+        its warmup is re-priced under the fattened slot curve."""
         if self.search_specs_fn is not None:
             return self.search_specs_fn(
                 self,
@@ -230,6 +259,9 @@ class KindSpec:
                 limits=limits,
                 max_extra_warmup=max_extra_warmup,
             )
+        want_sr = (
+            "saved_residual" in tuple(zb_policies) and self.supports_saved_residual
+        )
         out: list[ScheduleSpec] = []
         for v in self.virtual_axis(virtual_degrees):
             w: tuple[int, ...] = (0,) * num_stages
@@ -242,6 +274,25 @@ class KindSpec:
                     continue
             out.append(
                 ScheduleSpec(self.name, k, v, w, micro_batch_size)
+            )
+            if not want_sr:
+                continue
+            pol = saved_residual_policy(
+                self, num_stages, num_microbatches, k, micro_batch_size, v,
+                memory_model, limits,
+            )
+            if "saved_residual" not in pol:
+                continue  # no stage affords the residuals at this (k, b)
+            w_sr = w
+            if self.supports_extra_warmup:
+                w_sr = admissible_warmup(
+                    self, num_stages, num_microbatches, k, micro_batch_size, v,
+                    memory_model, limits, max_extra_warmup, zb_policy=pol,
+                )
+                if self.requires_warmup and max(w_sr) < 1:
+                    continue
+            out.append(
+                ScheduleSpec(self.name, k, v, w_sr, micro_batch_size, zb_policy=pol)
             )
         return out
 
@@ -297,6 +348,48 @@ def warmup_kinds() -> tuple[str, ...]:
     return tuple(n for n, s in _REGISTRY.items() if s.supports_extra_warmup)
 
 
+def saved_residual_kinds() -> tuple[str, ...]:
+    """Kinds whose BWD_WEIGHT accepts ``zb_policy="saved_residual"``."""
+    return tuple(n for n, s in _REGISTRY.items() if s.supports_saved_residual)
+
+
+def saved_residual_policy(
+    spec: KindSpec,
+    num_stages: int,
+    num_microbatches: int,
+    k: int,
+    micro_batch_size: int,
+    num_virtual: int,
+    memory_model,
+    limits: Sequence[float],
+) -> tuple[str, ...]:
+    """Greedy per-stage DR/SR vector on the memory-limit curve.
+
+    A stage takes ``"saved_residual"`` iff its zero-extra-warmup peak live
+    count still fits ``limits[s]`` under the residual-fattened slot price
+    (:meth:`MemoryModel.bytes_at_live` with ``policy="saved_residual"``),
+    ``"double_remat"`` otherwise — memory the limit curve already affords
+    is spent on skipping W's rematerialization, mirroring how
+    :func:`admissible_warmup` spends it on warmup depth."""
+    S, M, b = num_stages, num_microbatches, micro_batch_size
+    G = (M + k - 1) // k
+    base = spec.peak_live_groups(S, G, num_virtual, (0,) * S)
+    out = []
+    for s in range(S):
+        live = min(base[s] * k, M * num_virtual)
+        try:
+            fits = (
+                memory_model.bytes_at_live(s, b, live, True, policy="saved_residual")
+                <= limits[s]
+            )
+        except ValueError:
+            # checkpoint_policy="full": residuals are already resident, the
+            # model rejects the redundant policy -> never choose it
+            fits = False
+        out.append("saved_residual" if fits else "double_remat")
+    return tuple(out)
+
+
 def admissible_warmup(
     spec: KindSpec,
     num_stages: int,
@@ -308,6 +401,7 @@ def admissible_warmup(
     limits: Sequence[float],
     max_extra_warmup: int,
     zb_pricing: bool | None = None,
+    zb_policy: Sequence[str] | None = None,
 ) -> tuple[int, ...]:
     """Greedy per-stage warmup vector on the memory-limit curve.
 
@@ -317,9 +411,12 @@ def admissible_warmup(
     whose predicted peak live count still fits ``limits[s]``, closed-form
     via the kind's ``peak_live_groups`` — no plan is built per probe.
     ``zb_pricing`` overrides which slot byte curve is walked (default:
-    the kind's own ``has_split_backward``)."""
+    the kind's own ``has_split_backward``); ``zb_policy`` prices each
+    stage's slots under its per-stage BWD_WEIGHT policy (saved_residual
+    stages pay the residual surcharge, so they admit shallower warmup)."""
     S, M, b = num_stages, num_microbatches, micro_batch_size
     zb = spec.has_split_backward if zb_pricing is None else zb_pricing
+    pol = None if zb_policy is None else normalize_zb_policy(tuple(zb_policy), S)
     G = (M + k - 1) // k
     prev = spec.peak_live_groups(S, G, num_virtual, (0,) * S)
     out = []
@@ -331,7 +428,10 @@ def admissible_warmup(
             if groups == prev_groups:
                 break  # clamped at the group budget: deeper w buys nothing
             live = min(groups * k, M * num_virtual)
-            if memory_model.bytes_at_live(s, b, live, zb) > limits[s]:
+            bytes_s = memory_model.bytes_at_live(
+                s, b, live, zb, policy=None if pol is None else pol[s]
+            )
+            if bytes_s > limits[s]:
                 break
             w_s = w
             prev_groups = groups
@@ -401,6 +501,7 @@ register_kind(
         build_orders=_zb_build,
         peak_live_groups=_peak_1f1b,
         has_split_backward=True,
+        supports_saved_residual=True,
         weight_placement_refinable=True,
         peak_is_exact=True,
         label=lambda base, v, wtag, max_w: f"ZB-H1[{base}]",
@@ -414,6 +515,7 @@ register_kind(
         supports_extra_warmup=True,
         requires_warmup=True,
         has_split_backward=True,
+        supports_saved_residual=True,
         weight_placement_refinable=True,
         peak_is_exact=True,
         label=lambda base, v, wtag, max_w: f"ZB-H2+{wtag}[{base}]",
@@ -439,6 +541,7 @@ register_kind(
         supports_extra_warmup=True,
         needs_group_multiple_of_stages=True,
         has_split_backward=True,
+        supports_saved_residual=True,
         weight_placement_refinable=True,
         label=lambda base, v, wtag, max_w: (
             f"I{v}ZB+{wtag}[{base}]" if max_w else f"I{v}ZB[{base}]"
@@ -609,6 +712,7 @@ register_kind(
         fixed_virtual=2,
         supports_extra_warmup=True,
         has_split_backward=True,
+        supports_saved_residual=True,
         weight_placement_refinable=True,
         virtual_stage=_zbv_vstage,
         label=lambda base, v, wtag, max_w: (

@@ -56,18 +56,41 @@ __all__ = [
     "ZB_SLOT_POLICIES",
 ]
 
-#: how a zero-bubble slot bridges ``BWD_INPUT`` -> ``BWD_WEIGHT``:
+#: how a zero-bubble slot bridges ``BWD_INPUT`` -> ``BWD_WEIGHT``.  Both
+#: policies are EXECUTABLE: each runs in the reference engine and the
+#: shard_map SPMD engine (``repro.pipeline.engine``), is simulated with its
+#: own ``BWD_WEIGHT`` cost (``StageCosts.bwd_weight_saved_time`` vs
+#: ``bwd_weight_time``), and is chosen per stage by the tuner against the
+#: memory-limit curve (``SearchSpace.zb_policies``):
 #:
-#: * ``"double_remat"`` — what the engine implements today: keep only the
-#:   stage input + the stashed ``dy``; ``W`` rematerializes the stage body a
-#:   second time.  Cheapest memory, one extra recompute per micro-batch.
-#: * ``"saved_residual"`` — the ROADMAP variant: ``B``'s ``jax.vjp`` closure
-#:   residuals (the per-layer activations the pullback reads, which subsume
-#:   the stage input) are kept live alongside ``dy`` until ``W`` consumes
-#:   them, trading the second rematerialization for ``num_layers`` layer
-#:   activations per live slot.  Priced here so ``enumerate_candidates``
-#:   can reject it under the limit curve BEFORE the engine change exists.
+#: * ``"double_remat"`` — the default: keep only the stage input + the
+#:   stashed ``dy``; ``W`` rematerializes the stage body a second time.
+#:   Cheapest memory, one extra recompute per micro-batch.
+#: * ``"saved_residual"`` — ``B`` runs one combined ``jax.vjp`` over
+#:   ``(params, x)`` and its closure residuals (the per-layer activations
+#:   the pullback reads) stay in the live slot alongside ``dy`` until ``W``
+#:   consumes them — ``W`` is a pure pullback with no rematerialization,
+#:   at ``num_layers`` layer activations per live slot.  Redundant (and
+#:   rejected, see :class:`MemoryModel`) under ``checkpoint_policy="full"``,
+#:   whose slots already hold every layer activation.
 ZB_SLOT_POLICIES = ("double_remat", "saved_residual")
+
+
+def _reject_redundant_saved_residual(zb_policy: str, checkpoint_policy: str) -> None:
+    """``saved_residual`` under ``checkpoint_policy="full"`` is a
+    contradiction, not a discount: "full" slots already hold every per-layer
+    activation, so there is nothing for the residual surcharge to buy (the
+    model used to silently price it at zero).  Fail closed instead of
+    letting a search believe it found a free lunch."""
+    if zb_policy == "saved_residual" and checkpoint_policy == "full":
+        raise ValueError(
+            "zb_policy='saved_residual' is redundant under "
+            "checkpoint_policy='full': the slot already stores every "
+            "per-layer activation, so BWD_WEIGHT has no rematerialization "
+            "to skip and the residual surcharge prices to zero.  Use "
+            "checkpoint_policy='stage_input' (the engines' policy) or "
+            "zb_policy='double_remat'."
+        )
 
 
 def limit_curve(limit_bytes: float | Sequence[float], num_stages: int) -> list[float]:
@@ -129,6 +152,7 @@ class MemoryModel:
             raise ValueError(
                 f"unknown zb_policy {self.zb_policy!r}; expected one of {ZB_SLOT_POLICIES}"
             )
+        _reject_redundant_saved_residual(self.zb_policy, self.checkpoint_policy)
 
     def activation_bytes_per_mb(self, stage: int, micro_batch_size: int) -> float:
         """Resident activation bytes held for ONE live micro-batch at a stage."""
@@ -159,13 +183,38 @@ class MemoryModel:
         spec = self.stages[stage]
         return spec.param_bytes + spec.optimizer_bytes + spec.grad_bytes
 
-    def slot_bytes(self, stage: int, micro_batch_size: int, zb: bool) -> float:
+    def _effective_policy(self, policy: str | None) -> str:
+        """Resolve a per-call (per-stage) policy against the model default.
+
+        ``None`` and the default ``"double_remat"`` defer to the model's
+        ``zb_policy`` (so a model constructed with
+        ``zb_policy="saved_residual"`` keeps pricing plain plans that way —
+        the PR 4 pricing-only behaviour); an explicit ``"saved_residual"``
+        wins, which is how a plan's per-stage vector prices mixed stages.
+        """
+        if policy is None or policy == "double_remat":
+            eff = self.zb_policy
+        else:
+            if policy not in ZB_SLOT_POLICIES:
+                raise ValueError(
+                    f"unknown zb_policy {policy!r}; expected one of {ZB_SLOT_POLICIES}"
+                )
+            eff = policy
+        # re-checked here (not just in __post_init__): checkpoint_policy is
+        # a mutable field, and the redundant combination must fail at use
+        _reject_redundant_saved_residual(eff, self.checkpoint_policy)
+        return eff
+
+    def slot_bytes(
+        self, stage: int, micro_batch_size: int, zb: bool, policy: str | None = None
+    ) -> float:
         """Bytes ONE live activation slot costs at a stage.
 
         Zero-bubble slots carry the engine's wctx surcharge: a hidden-sized
         ``dy`` is stashed alongside the saved stage input between
-        ``BWD_INPUT`` and ``BWD_WEIGHT``.  Under ``zb_policy ==
-        "saved_residual"`` the slot additionally keeps ``B``'s vjp
+        ``BWD_INPUT`` and ``BWD_WEIGHT``.  Under the ``"saved_residual"``
+        policy (the model default or the per-call ``policy`` override —
+        a plan's per-stage vector) the slot additionally keeps ``B``'s vjp
         residuals — one layer-activation footprint per layer of the stage —
         which is what buys away the second rematerialization (the residuals
         only pay off where the limit curve still admits them; pricing them
@@ -176,20 +225,23 @@ class MemoryModel:
             spec = self.stages[stage]
             tokens = micro_batch_size * self.seq_len
             per_slot += spec.stage_input_bytes_per_token * tokens
-            if self.zb_policy == "saved_residual" and self.checkpoint_policy != "full":
-                # under "full" checkpointing the per-layer activations are
-                # already resident in the slot; nothing extra to keep
+            if self._effective_policy(policy) == "saved_residual":
                 per_slot += spec.layer_act_bytes_per_token * spec.num_layers * tokens
         return per_slot
 
     def bytes_at_live(
-        self, stage: int, micro_batch_size: int, live: int, zb: bool
+        self,
+        stage: int,
+        micro_batch_size: int,
+        live: int,
+        zb: bool,
+        policy: str | None = None,
     ) -> float:
         """Predicted peak bytes at one stage holding ``live`` activation
         slots — the closed-form stage curve the warmup greedy walks."""
         return (
             self.static_bytes(stage)
-            + self.slot_bytes(stage, micro_batch_size, zb) * live
+            + self.slot_bytes(stage, micro_batch_size, zb, policy) * live
             + self.transient_bytes(stage, micro_batch_size)
         )
 
@@ -197,8 +249,9 @@ class MemoryModel:
         b = plan.micro_batch_size
         peaks_live = peak_live_activations(plan)
         zb = get_kind(plan.kind).has_split_backward
+        pol = plan.zb_policy
         return [
-            self.bytes_at_live(s, b, peaks_live[s], zb)
+            self.bytes_at_live(s, b, peaks_live[s], zb, pol[s] if zb else None)
             for s in range(len(self.stages))
         ]
 

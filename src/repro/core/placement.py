@@ -260,6 +260,7 @@ def _rebuild(plan: SchedulePlan, orders) -> SchedulePlan:
         kind=plan.kind,
         num_virtual=plan.num_virtual,
         extra_warmup=plan.extra_warmup,
+        zb_policy=plan.zb_policy,
     )
     new.validate()
     assign_slots(new)

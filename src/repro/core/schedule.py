@@ -49,91 +49,98 @@ Schedule-family matrix (``make_plan(..., kind=...)`` or
 ``make_plan(..., spec=ScheduleSpec(...))``).  ``w[s]`` is the per-stage
 extra-warmup vector (``extra_warmup``: a scalar broadcasts, a sequence
 gives each stage its own depth — sized to ITS memory headroom on the
-per-stage limit curve):
+per-stage limit curve).  ``zb_policy[s]`` is the per-stage BWD_WEIGHT
+policy for split-backward kinds (``zb_policy``: a scalar broadcasts):
+``DR`` = ``"double_remat"`` (default — W re-runs the forward, minimum
+memory), ``SR`` = ``"saved_residual"`` (B's ``jax.vjp`` residuals stay in
+the live slot and W skips the second rematerialization — W costs
+``bwd_weight_saved_time``, the slot costs the residual surcharge priced by
+:mod:`repro.core.memory_model`).  Non-ZB kinds have no W task and reject
+``"saved_residual"`` at ``ScheduleSpec.resolve`` time:
 
-====================  =========  ==========  ========  =========================
-kind                  k          v (chunks)  w[s]      trade-off
-====================  =========  ==========  ========  =========================
-``kfkb`` (k=1)        1          1           0         1F1B: min activation
-                                                       memory (min(S-s,M) live
-                                                       per stage), bubble
-                                                       2(S-1) ticks.
-``kfkb``              1 < k < M  1           0         paper's grouping: k-deep
-                                                       transfer overlap under
-                                                       preemption, k x 1F1B
-                                                       activation memory.
-``kfkb`` (k=M)        M          1           0         GPipe: max overlap
-                                                       depth, M live
-                                                       activations everywhere.
-``zb_h1``             >= 1       1           0         zero-bubble H1 (Qi et
-                                                       al. 2024): BWD is split
-                                                       into BWD_INPUT (critical
-                                                       path) + BWD_WEIGHT
-                                                       (bubble filler); same
-                                                       peak activation memory
-                                                       as the kFkB plan of
-                                                       equal k, strictly
-                                                       shorter pipeline on
-                                                       uniform stages.
-                                                       Composes with k.
-``zb_h2``             >= 1       1           some > 0  zero-bubble H2: same B/W
-                                                       split, per-stage warmup
-                                                       cap raised to
-                                                       min(min(S-s,G)+w[s], G)
-                                                       — the warmup bubble is
-                                                       filled with real F work
-                                                       at exactly w[s] extra
-                                                       live slots at stage s.
-                                                       A memory-skewed limit
-                                                       curve admits different
-                                                       depths per stage, which
-                                                       is where the vector
-                                                       beats the best scalar.
-                                                       Composes with k.
-``interleaved``       >= 1       v > 1       0         Megatron-style virtual
-                                                       stages: device s hosts
-                                                       chunks {c*S+s};
-                                                       fill/drain bubble
-                                                       shrinks ~1/v, at v x
-                                                       more full-size
-                                                       cross-stage messages and
-                                                       v chunk contexts per
-                                                       device.  Composes
-                                                       with k.
-``interleaved_zb``    >= 1       v > 1       >= 0      joint interleaved x
-                                                       zero-bubble: the chunk
-                                                       walk of ``interleaved``
-                                                       with the backward
-                                                       narrowed to BWD_INPUT
-                                                       and BWD_WEIGHT greedily
-                                                       filling bubbles; peak
-                                                       live activations never
-                                                       exceed the plain
-                                                       interleaved plan's plus
-                                                       w[s] (w > 0 is the
-                                                       "interleaved H2" — one
-                                                       more forward ahead per
-                                                       unit while the critical
-                                                       walk blocks).  Composes
-                                                       with k.
-``zbv``               >= 1       2 (fixed)   >= 0      ZB-V (controllable
-                                                       memory, Qi et al.
-                                                       2024): V-shaped
-                                                       placement — device s
-                                                       hosts virtual stages s
-                                                       and 2S-1-s, the turn is
-                                                       intra-device — with the
-                                                       B/W split; peak live
-                                                       hard-capped at
-                                                       min(2S + w[s], 2G)
-                                                       chunk-slots (~half the
-                                                       plain interleaved
-                                                       worst-device peak of
-                                                       3S - 1).
-                                                       Registered entirely in
-                                                       ``repro/core/kinds.py``.
-                                                       Composes with k.
-====================  =========  ==========  ========  =========================
+====================  =========  ==========  ========  ============  =========================
+kind                  k          v (chunks)  w[s]      zb_policy[s]  trade-off
+====================  =========  ==========  ========  ============  =========================
+``kfkb`` (k=1)        1          1           0         --            1F1B: min activation
+                                                                     memory (min(S-s,M) live
+                                                                     per stage), bubble
+                                                                     2(S-1) ticks.
+``kfkb``              1 < k < M  1           0         --            paper's grouping: k-deep
+                                                                     transfer overlap under
+                                                                     preemption, k x 1F1B
+                                                                     activation memory.
+``kfkb`` (k=M)        M          1           0         --            GPipe: max overlap
+                                                                     depth, M live
+                                                                     activations everywhere.
+``zb_h1``             >= 1       1           0         DR or SR      zero-bubble H1 (Qi et
+                                                                     al. 2024): BWD is split
+                                                                     into BWD_INPUT (critical
+                                                                     path) + BWD_WEIGHT
+                                                                     (bubble filler); same
+                                                                     peak activation memory
+                                                                     as the kFkB plan of
+                                                                     equal k, strictly
+                                                                     shorter pipeline on
+                                                                     uniform stages.
+                                                                     Composes with k.
+``zb_h2``             >= 1       1           some > 0  DR or SR      zero-bubble H2: same B/W
+                                                                     split, per-stage warmup
+                                                                     cap raised to
+                                                                     min(min(S-s,G)+w[s], G)
+                                                                     — the warmup bubble is
+                                                                     filled with real F work
+                                                                     at exactly w[s] extra
+                                                                     live slots at stage s.
+                                                                     A memory-skewed limit
+                                                                     curve admits different
+                                                                     depths per stage, which
+                                                                     is where the vector
+                                                                     beats the best scalar.
+                                                                     Composes with k.
+``interleaved``       >= 1       v > 1       0         --            Megatron-style virtual
+                                                                     stages: device s hosts
+                                                                     chunks {c*S+s};
+                                                                     fill/drain bubble
+                                                                     shrinks ~1/v, at v x
+                                                                     more full-size
+                                                                     cross-stage messages and
+                                                                     v chunk contexts per
+                                                                     device.  Composes
+                                                                     with k.
+``interleaved_zb``    >= 1       v > 1       >= 0      DR or SR      joint interleaved x
+                                                                     zero-bubble: the chunk
+                                                                     walk of ``interleaved``
+                                                                     with the backward
+                                                                     narrowed to BWD_INPUT
+                                                                     and BWD_WEIGHT greedily
+                                                                     filling bubbles; peak
+                                                                     live activations never
+                                                                     exceed the plain
+                                                                     interleaved plan's plus
+                                                                     w[s] (w > 0 is the
+                                                                     "interleaved H2" — one
+                                                                     more forward ahead per
+                                                                     unit while the critical
+                                                                     walk blocks).  Composes
+                                                                     with k.
+``zbv``               >= 1       2 (fixed)   >= 0      DR or SR      ZB-V (controllable
+                                                                     memory, Qi et al.
+                                                                     2024): V-shaped
+                                                                     placement — device s
+                                                                     hosts virtual stages s
+                                                                     and 2S-1-s, the turn is
+                                                                     intra-device — with the
+                                                                     B/W split; peak live
+                                                                     hard-capped at
+                                                                     min(2S + w[s], 2G)
+                                                                     chunk-slots (~half the
+                                                                     plain interleaved
+                                                                     worst-device peak of
+                                                                     3S - 1).
+                                                                     Registered entirely in
+                                                                     ``repro/core/kinds.py``.
+                                                                     Composes with k.
+====================  =========  ==========  ========  ============  =========================
 
 kFkB construction follows the paper's §5.4: "generate k copies of the 1F1B
 plan [and] cross-merge [them]" — build the base order over ``G = M/k``
@@ -161,6 +168,7 @@ import numpy as np
 
 __all__ = [
     "normalize_warmup",
+    "normalize_zb_policy",
     "Op",
     "Task",
     "SchedulePlan",
@@ -249,6 +257,40 @@ def normalize_warmup(extra_warmup: int | Sequence[int], num_stages: int) -> tupl
     return w
 
 
+def normalize_zb_policy(
+    zb_policy: str | Sequence[str], num_stages: int
+) -> tuple[str, ...]:
+    """Normalize ``zb_policy`` to the per-stage vector ``zb_policy[s]``.
+
+    A scalar broadcasts to every stage; a sequence must have exactly
+    ``num_stages`` entries.  Every entry must be a member of
+    :data:`repro.core.memory_model.ZB_SLOT_POLICIES` (``"double_remat"`` —
+    the default, BWD_WEIGHT re-runs the forward — or ``"saved_residual"``
+    — BWD_INPUT's ``jax.vjp`` residuals stay in the live slot and
+    BWD_WEIGHT reuses them).  Whether a *kind* may carry a non-default
+    policy is ``ScheduleSpec.resolve``'s job (``supports_saved_residual``),
+    not this function's.
+    """
+    # lazy import: memory_model imports this module at its top level
+    from repro.core.memory_model import ZB_SLOT_POLICIES
+
+    if isinstance(zb_policy, str):
+        pol = (zb_policy,) * num_stages
+    else:
+        pol = tuple(str(x) for x in zb_policy)
+        if len(pol) != num_stages:
+            raise ValueError(
+                f"zb_policy vector needs one entry per stage "
+                f"(got {len(pol)}, num_stages={num_stages})"
+            )
+    for p in pol:
+        if p not in ZB_SLOT_POLICIES:
+            raise ValueError(
+                f"unknown zb_policy {p!r}; expected one of {ZB_SLOT_POLICIES}"
+            )
+    return pol
+
+
 @dataclasses.dataclass(frozen=True)
 class Task:
     """One unit of work on one pipeline device.
@@ -328,6 +370,12 @@ class SchedulePlan:
     # warmup kinds: forwards beyond the 1F1B cap, per stage.  Normalized in
     # __post_init__ to the per-stage vector w[s] (a scalar broadcasts).
     extra_warmup: int | tuple[int, ...] = 0
+    # split-backward kinds: per-stage BWD_WEIGHT policy ("double_remat" or
+    # "saved_residual").  Normalized in __post_init__ to the per-stage
+    # vector zb_policy[s] (a scalar broadcasts).  Stages priced (and run)
+    # as saved_residual keep B's vjp residuals in the live slot so W skips
+    # the second rematerialization.
+    zb_policy: str | tuple[str, ...] = "double_remat"
     # lazily-populated lowering cache: plans are static once built, so the
     # TabularPlan is computed at most once (the tuner re-evaluates candidates
     # every interval and must not re-lower them)
@@ -340,6 +388,7 @@ class SchedulePlan:
 
     def __post_init__(self) -> None:
         self.extra_warmup = normalize_warmup(self.extra_warmup, self.num_stages)
+        self.zb_policy = normalize_zb_policy(self.zb_policy, self.num_stages)
         if not self.name:
             from repro.core.kinds import get_kind
 
@@ -347,6 +396,18 @@ class SchedulePlan:
             self.name = get_kind(self.kind).plan_label(
                 base, self.num_virtual, self._warmup_tag(), self.max_extra_warmup
             )
+            self.name += self._zb_policy_tag()
+
+    def _zb_policy_tag(self) -> str:
+        """``"+SR"`` (all stages saved_residual) / ``"+SR(i,j)"`` (mixed) /
+        ``""`` (all double_remat) — part of the plan name so estimate keys
+        and the compile-cache key distinguish policies."""
+        sr = [s for s, p in enumerate(self.zb_policy) if p == "saved_residual"]
+        if not sr:
+            return ""
+        if len(sr) == self.num_stages:
+            return "+SR"
+        return "+SR(" + ",".join(str(s) for s in sr) + ")"
 
     def _warmup_tag(self) -> str:
         w = self.extra_warmup
@@ -411,6 +472,11 @@ class SchedulePlan:
 
         S, M, V = self.num_stages, self.num_microbatches, self.num_virtual
         zb = get_kind(self.kind).has_split_backward
+        if not zb:
+            assert all(p == "double_remat" for p in self.zb_policy), (
+                f"zb_policy {self.zb_policy} on non-split-backward kind "
+                f"{self.kind!r} (no BWD_WEIGHT task to apply it to)"
+            )
         for s, order in enumerate(self.orders):
             fwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
             bwd_seen: dict[int, set[int]] = {c: set() for c in range(V)}
@@ -857,6 +923,7 @@ def make_plan(
         kind=spec.kind,
         num_virtual=spec.num_virtual,
         extra_warmup=spec.extra_warmup,
+        zb_policy=spec.zb_policy,
     )
     plan.validate()
     assign_slots(plan)

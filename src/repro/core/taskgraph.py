@@ -45,6 +45,12 @@ class StageCosts:
       stages skew toward W — so production profiles should come from
       :func:`repro.core.calibrate.calibrate_stage_costs`, which fills the
       split from the compiled stage bodies instead of this default.
+    * ``bwd_weight_saved_time[s]`` — the W body under
+      ``zb_policy="saved_residual"``: a pure pullback reusing B's saved vjp
+      residuals, no rematerialization.  Defaults to
+      ``max(bwd_weight - fwd, 0.1 * bwd_weight)`` (double-remat W ≈ one
+      forward rematerialization + the pullback); calibration measures the
+      real no-remat body.
     """
 
     fwd_time: list[float]
@@ -54,6 +60,7 @@ class StageCosts:
     optimizer_time: list[float] | None = None
     bwd_input_time: list[float] | None = None
     bwd_weight_time: list[float] | None = None
+    bwd_weight_saved_time: list[float] | None = None
 
     @property
     def num_stages(self) -> int:
@@ -71,6 +78,11 @@ class StageCosts:
         if self.bwd_weight_time is None:
             self.bwd_weight_time = [
                 t - bi for t, bi in zip(self.bwd_time, self.bwd_input_time)
+            ]
+        if self.bwd_weight_saved_time is None:
+            self.bwd_weight_saved_time = [
+                max(w - f, 0.1 * w)
+                for w, f in zip(self.bwd_weight_time, self.fwd_time)
             ]
 
     @classmethod
@@ -112,6 +124,7 @@ class StageCosts:
             optimizer_time=list(self.optimizer_time),
             bwd_input_time=[t * scale_t for t in self.bwd_input_time],
             bwd_weight_time=[t * scale_t for t in self.bwd_weight_time],
+            bwd_weight_saved_time=[t * scale_t for t in self.bwd_weight_saved_time],
         )
 
 
@@ -155,6 +168,8 @@ class TaskGraph:
         if task.op == Op.BWD_INPUT:
             return self.costs.bwd_input_time[task.stage] / v
         if task.op == Op.BWD_WEIGHT:
+            if self.plan.zb_policy[task.stage] == "saved_residual":
+                return self.costs.bwd_weight_saved_time[task.stage] / v
             return self.costs.bwd_weight_time[task.stage] / v
         return 0.0
 

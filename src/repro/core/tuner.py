@@ -67,6 +67,10 @@ class TuningRecord:
     # the winner's per-stage warmup vector w[s]; all-zero unless a warmup
     # kind (zb_h2 / warmed interleaved_zb) won
     chosen_extra_warmup: tuple[int, ...] = ()
+    # the winner's per-stage BWD_WEIGHT policy vector (split-backward kinds:
+    # "saved_residual" on stages whose limit admitted the residuals,
+    # "double_remat" elsewhere) — the tuner's policy trail
+    chosen_zb_policy: tuple[str, ...] = ()
     # the winner's full schedule coordinates — the same ScheduleSpec the
     # candidate, the compile-cache key and the runtime consume (the legacy
     # chosen_* fields above are its projections, kept for callers)
@@ -189,6 +193,7 @@ class AutoTuner:
             chosen_kind=best.plan.kind,
             chosen_num_virtual=best.plan.num_virtual,
             chosen_extra_warmup=best.plan.extra_warmup,
+            chosen_zb_policy=tuple(best.plan.zb_policy),
             chosen_spec=best.spec,
             probes_run=self._probes_run,
             probes_skipped=self._probes_skipped,

@@ -75,7 +75,7 @@ def calibrate(config: str, S: int, b_mb: int, seq: int, out_dir: str) -> dict:
     cal = calibrate_stage_costs(staged, micro_batch_size=b_mb, seq_len=seq)
     costs, mm = cal.costs, cal.memory
     print(f"{config}: calibrated {S} stages at b={b_mb}, seq={seq}")
-    print("stage |  fwd ms |  B ms |  W ms | wire MB")
+    print("stage |  fwd ms |  B ms |  W ms | W(SR) ms | wire MB")
     for row in cal.summary_rows():
         print("  ".join(f"{c:>7s}" for c in row))
     # a per-stage limit curve: each stage's H1 peak plus 25% of its own
@@ -96,6 +96,7 @@ def calibrate(config: str, S: int, b_mb: int, seq: int, out_dir: str) -> dict:
         "fwd_time": costs.fwd_time,
         "bwd_input_time": costs.bwd_input_time,
         "bwd_weight_time": costs.bwd_weight_time,
+        "bwd_weight_saved_time": costs.bwd_weight_saved_time,
         "fwd_bytes": costs.fwd_bytes,
         "param_bytes_per_stage": [sp.param_bytes for sp in mm.stages],
         "peak_bytes_h1": base,

@@ -40,12 +40,24 @@ Backward uses the stage-input checkpoint policy: a stage saves only its
 input per in-flight micro-batch and rematerializes the stage body inside
 ``jax.vjp`` during the backward task — matching the memory model
 (``checkpoint_policy="stage_input"``).  Zero-bubble plans split that
-backward: ``BWD_INPUT`` rematerializes and emits only the input gradient
-(keeping the upstream critical path short) while stashing the incoming
-output gradient in a per-slot context; ``BWD_WEIGHT`` later rematerializes
-again to produce the weight gradients and frees the slot.  The split costs
-one extra rematerialization — the price of filling bubbles with W work
-without storing per-layer activations.
+backward, and the plan's per-stage ``zb_policy[s]`` picks how the split is
+paid for:
+
+* ``"double_remat"`` (default): ``BWD_INPUT`` rematerializes and emits only
+  the input gradient (keeping the upstream critical path short) while
+  stashing the incoming output gradient in a per-slot context;
+  ``BWD_WEIGHT`` later rematerializes *again* to produce the weight
+  gradients and frees the slot.  The split costs one extra
+  rematerialization — the price of filling bubbles with W work without
+  storing per-layer activations.
+* ``"saved_residual"``: ``BWD_INPUT`` runs ONE combined ``jax.vjp`` over
+  ``(params, x)`` — XLA dead-code-eliminates the unused weight-gradient
+  half — and its closure residuals stay in the live slot (the reference
+  engine keeps the pullback itself; the SPMD engine packs the residual
+  leaves into a per-slot f32 row, see :mod:`repro.pipeline.residuals`).
+  ``BWD_WEIGHT`` is then a pure pullback with NO second rematerialization,
+  spending the residual bytes the memory model priced for exactly this
+  stage.  Chosen per stage by the tuner against the memory-limit curve.
 
 Interleaved plans expect a :class:`~repro.pipeline.stage.StagedModel` built
 with ``S * v`` stages; parameter stacks are in *global virtual-stage
@@ -64,6 +76,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 import numpy as np
 
 from repro.core.schedule import Op, SchedulePlan
+from repro.pipeline.residuals import (
+    pack_residuals,
+    probe_residual_layout,
+    rebuild_vjp,
+)
 from repro.pipeline.stage import StagedModel
 
 __all__ = [
@@ -315,13 +332,22 @@ def reference_pipeline_grads(
                 # last virtual stage: fwd output feeds its own bwd; recomputed
             elif op in (int(Op.BWD), int(Op.BWD_INPUT)):
                 zb = op == int(Op.BWD_INPUT)
+                sr = zb and plan.zb_policy[s] == "saved_residual"
                 x = slots[s][key] if zb else slots[s].pop(key)
                 if vs == V - 1:
                     def loss_fn(p, xx):
                         h = staged.stage_hidden(p, xx)
                         return staged.head_loss(p, h, labels[mb])
 
-                    if zb:
+                    if sr:
+                        # combined vjp over (params, x): keep the pullback —
+                        # its residuals ARE the priced saved_residual bytes;
+                        # W replays it with no rematerialization
+                        loss, vjp = jax.vjp(loss_fn, params_v, x)
+                        seed = jnp.ones((), loss.dtype) / M
+                        _, dx = vjp(seed)
+                        wctx[s][key] = (vjp, seed)
+                    elif zb:
                         loss, vjp = jax.vjp(lambda xx: loss_fn(params_v, xx), x)
                         (dx,) = vjp(jnp.ones((), loss.dtype) / M)
                         wctx[s][key] = None  # W recomputes the loss path
@@ -331,7 +357,11 @@ def reference_pipeline_grads(
                     loss_sum = loss_sum + loss / M
                 else:
                     dy = bwd_wire[s].pop(key)
-                    if zb:
+                    if sr:
+                        _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), params_v, x)
+                        _, dx = vjp(dy)
+                        wctx[s][key] = (vjp, dy)
+                    elif zb:
                         _, vjp = jax.vjp(lambda xx: staged.stage_hidden(params_v, xx), x)
                         (dx,) = vjp(dy)
                         wctx[s][key] = dy
@@ -358,8 +388,12 @@ def reference_pipeline_grads(
                     grads = add_grad(grads, vs, dparams)
             else:  # BWD_WEIGHT
                 x = slots[s].pop(key)
-                dy = wctx[s].pop(key)
-                if vs == V - 1:
+                ctx = wctx[s].pop(key)
+                if plan.zb_policy[s] == "saved_residual":
+                    # replay B's saved pullback — no second rematerialization
+                    vjp, cot = ctx
+                    dparams = vjp(cot)[0]
+                elif vs == V - 1:
                     def loss_p(p):
                         h = staged.stage_hidden(p, x)
                         return staged.head_loss(p, h, labels[mb])
@@ -367,6 +401,7 @@ def reference_pipeline_grads(
                     loss, vjp = jax.vjp(loss_p, params_v)
                     (dparams,) = vjp(jnp.ones((), loss.dtype) / M)
                 else:
+                    dy = ctx
                     _, vjp = jax.vjp(lambda p: staged.stage_hidden(p, x), params_v)
                     (dparams,) = vjp(dy)
                 grads = add_grad(grads, vs, dparams)
@@ -407,6 +442,12 @@ def make_pipeline_step(
     grid_np = tabular.grid  # [S, T, 4]
     T_ticks = tabular.num_ticks
     n_slots = int(grid_np[:, :, 3].max()) + 1
+    # per-stage BWD_WEIGHT policy: stages with "saved_residual" keep B's
+    # combined-vjp residuals in a per-slot f32 row and skip W's remat; with
+    # no SR stage the row is zero-width and the traced program is the
+    # double-remat one, bit for bit
+    sr_stage_np = np.array([p == "saved_residual" for p in plan.zb_policy])
+    any_sr = bool(sr_stage_np.any())
     pl = plan.placement
     send_f_np, send_b_np, arr_f_np, arr_b_np, in_f_np, in_b_np, caps_f, caps_b = (
         _channel_tables(plan, grid_np)
@@ -443,6 +484,31 @@ def make_pipeline_step(
         d = cfg.d_model
         act = jnp.zeros((n_slots, b, T, d), cfg.dtype)
         wctx = jnp.zeros((n_slots, b, T, d), cfg.dtype)  # zb: stashed dy per slot
+        if any_sr:
+            # abstract probe (no compute) of the combined-vjp residual
+            # layouts; the slot row is padded to the wider of the two bodies
+            p_probe = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape[1:], p.dtype), params
+            )
+            x_probe = jax.ShapeDtypeStruct((b, T, d), cfg.dtype)
+            lbl_probe = jax.ShapeDtypeStruct(labels.shape[1:], labels.dtype)
+            mid_layout = probe_residual_layout(
+                lambda p, xx: staged.stage_hidden(p, xx), p_probe, x_probe
+            )
+            last_layout = probe_residual_layout(
+                lambda p, xx, lbl: staged.head_loss(
+                    p, staged.stage_hidden(p, xx), lbl
+                ),
+                p_probe,
+                x_probe,
+                lbl_probe,
+            )
+            r_width = max(mid_layout.width, last_layout.width)
+        else:
+            r_width = 0
+        res = jnp.zeros((n_slots, r_width), jnp.float32)
+        zeros_row = jnp.zeros((r_width,), jnp.float32)
+        sr_here = jnp.asarray(sr_stage_np)[s]
         fqs = tuple(
             jnp.zeros((caps_f[ch], b, T, d), cfg.dtype) for ch in range(_NUM_CH)
         )
@@ -494,7 +560,7 @@ def make_pipeline_step(
             return x, new_pops
 
         def fwd_task(state, mb, chunk, slot):
-            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             is_first, _ = vstage_flags(chunk)
             code = f_in_tbl[chunk]
@@ -506,14 +572,14 @@ def make_pipeline_step(
             )
             y = staged.stage_hidden(p_c, x)
             return (
-                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum),
+                (act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum),
                 y.astype(cfg.dtype),
                 zeros_bTd,
             )
 
         def bwd_task(state, mb, chunk, slot):
             """Combined backward (kFkB / interleaved plans)."""
-            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             is_first, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
@@ -543,35 +609,68 @@ def make_pipeline_step(
             dparams = jax.lax.cond(is_first, first_branch, lambda dp: dp, dparams)
             grads = add_grads(grads, chunk, dparams)
             return (
-                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum + dloss),
+                (act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum + dloss),
                 zeros_bTd,
                 dx.astype(cfg.dtype),
             )
 
         def bwd_input_task(state, mb, chunk, slot):
-            """Zero-bubble B: input gradient only; stash dy for the later W."""
-            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            """Zero-bubble B: input gradient only; stash W's context per slot
+            (double-remat: the dy cotangent; saved_residual: the packed
+            combined-vjp residual row)."""
+            act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             is_first, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
             dy, bpops = pop_queue(bqs, bpops, caps_b, b_in_tbl[chunk])
 
-            def last_branch(_):
+            def dr_last(_):
                 def loss_fn(xx):
                     h = staged.stage_hidden(p_c, xx)
                     return staged.head_loss(p_c, h, labels[mb])
 
                 loss, vjp = jax.vjp(loss_fn, x)
                 (dx,) = vjp(jnp.ones((), loss.dtype) / M)
-                return loss / M, dx, zeros_bTd  # W recomputes the loss path
+                return loss / M, dx, zeros_bTd, zeros_row  # W recomputes
 
-            def mid_branch(_):
+            def dr_mid(_):
                 _, vjp = jax.vjp(lambda xx: staged.stage_hidden(p_c, xx), x)
                 (dx,) = vjp(dy.astype(cfg.dtype))
-                return jnp.zeros((), jnp.float32), dx, dy.astype(cfg.dtype)
+                return jnp.zeros((), jnp.float32), dx, dy.astype(cfg.dtype), zeros_row
 
-            dloss, dx, dy_keep = jax.lax.cond(is_last, last_branch, mid_branch, None)
+            if any_sr:
+                # combined vjp over (params, x): the weight-gradient half is
+                # dead here (it is W's job) and XLA removes it; the
+                # pullback's residual leaves ride the slot row instead
+                def sr_last(_):
+                    def loss_fn(p, xx):
+                        h = staged.stage_hidden(p, xx)
+                        return staged.head_loss(p, h, labels[mb])
+
+                    loss, vjp = jax.vjp(loss_fn, p_c, x)
+                    _, dx = vjp(jnp.ones((), loss.dtype) / M)
+                    row = pack_residuals(vjp, last_layout, r_width, params=p_c)
+                    return loss / M, dx, zeros_bTd, row
+
+                def sr_mid(_):
+                    _, vjp = jax.vjp(lambda p, xx: staged.stage_hidden(p, xx), p_c, x)
+                    _, dx = vjp(dy.astype(cfg.dtype))
+                    row = pack_residuals(vjp, mid_layout, r_width, params=p_c)
+                    return jnp.zeros((), jnp.float32), dx, dy.astype(cfg.dtype), row
+
+                def last_branch(_):
+                    return jax.lax.cond(sr_here, sr_last, dr_last, None)
+
+                def mid_branch(_):
+                    return jax.lax.cond(sr_here, sr_mid, dr_mid, None)
+            else:
+                last_branch, mid_branch = dr_last, dr_mid
+
+            dloss, dx, dy_keep, res_row = jax.lax.cond(
+                is_last, last_branch, mid_branch, None
+            )
             wctx = jax.lax.dynamic_update_index_in_dim(wctx, dy_keep, slot, axis=0)
+            res = jax.lax.dynamic_update_index_in_dim(res, res_row, slot, axis=0)
 
             def first_branch(g):
                 _, evjp = jax.vjp(lambda p: staged.embed_tokens(p, tokens[mb]), p_c)
@@ -580,20 +679,22 @@ def make_pipeline_step(
 
             grads = jax.lax.cond(is_first, first_branch, lambda g: g, grads)
             return (
-                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum + dloss),
+                (act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum + dloss),
                 zeros_bTd,
                 dx.astype(cfg.dtype),
             )
 
         def bwd_weight_task(state, mb, chunk, slot):
-            """Zero-bubble W: weight gradients via a second rematerialization."""
-            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            """Zero-bubble W: weight gradients — via a second
+            rematerialization (double-remat) or by replaying B's saved
+            pullback from the slot's residual row (saved_residual)."""
+            act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum = state
             p_c = params_of(chunk)
             _, is_last = vstage_flags(chunk)
             x = jax.lax.dynamic_index_in_dim(act, slot, axis=0, keepdims=False)
             dy = jax.lax.dynamic_index_in_dim(wctx, slot, axis=0, keepdims=False)
 
-            def last_branch(_):
+            def dr_last(_):
                 def loss_fn(p):
                     h = staged.stage_hidden(p, x)
                     return staged.head_loss(p, h, labels[mb])
@@ -602,15 +703,47 @@ def make_pipeline_step(
                 (dparams,) = vjp(jnp.ones((), loss.dtype) / M)
                 return dparams
 
-            def mid_branch(_):
+            def dr_mid(_):
                 _, vjp = jax.vjp(lambda p: staged.stage_hidden(p, x), p_c)
                 (dparams,) = vjp(dy.astype(cfg.dtype))
                 return dparams
 
+            if any_sr:
+                row = jax.lax.dynamic_index_in_dim(res, slot, axis=0, keepdims=False)
+
+                # the dummy vjp traces give the pullback's STRUCTURE only —
+                # their forward compute is dead once the saved leaves are
+                # substituted, so XLA eliminates it (no rematerialization)
+                def sr_last(_):
+                    def loss_fn(p, xx):
+                        h = staged.stage_hidden(p, xx)
+                        return staged.head_loss(p, h, labels[mb])
+
+                    loss_dead, vjp_dummy = jax.vjp(loss_fn, p_c, x)
+                    vjp_saved = rebuild_vjp(vjp_dummy, last_layout, row, params=p_c)
+                    dparams, _ = vjp_saved(jnp.ones((), loss_dead.dtype) / M)
+                    return dparams
+
+                def sr_mid(_):
+                    _, vjp_dummy = jax.vjp(
+                        lambda p, xx: staged.stage_hidden(p, xx), p_c, x
+                    )
+                    vjp_saved = rebuild_vjp(vjp_dummy, mid_layout, row, params=p_c)
+                    dparams, _ = vjp_saved(dy.astype(cfg.dtype))
+                    return dparams
+
+                def last_branch(_):
+                    return jax.lax.cond(sr_here, sr_last, dr_last, None)
+
+                def mid_branch(_):
+                    return jax.lax.cond(sr_here, sr_mid, dr_mid, None)
+            else:
+                last_branch, mid_branch = dr_last, dr_mid
+
             dparams = jax.lax.cond(is_last, last_branch, mid_branch, None)
             grads = add_grads(grads, chunk, dparams)
             return (
-                (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum),
+                (act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum),
                 zeros_bTd,
                 zeros_bTd,
             )
@@ -647,11 +780,11 @@ def make_pipeline_step(
 
         for t in range(T_ticks):
             op, mb, chunk, slot = grid[t, 0], grid[t, 1], grid[t, 2], grid[t, 3]
-            state = (act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum)
+            state = (act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum)
             state, send_f, send_b = jax.lax.switch(
                 branch_lut[op], branches, state, mb, chunk, slot
             )
-            act, wctx, fqs, fpops, bqs, bpops, grads, loss_sum = state
+            act, wctx, res, fqs, fpops, bqs, bpops, grads, loss_sum = state
             # lock-step transfers on whichever channels the plan uses:
             # activations and gradients each ride ring shifts of +-1 (flat
             # chains and Megatron rings use one direction each; ZB-V uses

@@ -1,0 +1,201 @@
+"""Saved-residual plumbing for the zero-bubble ``BWD_INPUT -> BWD_WEIGHT`` split.
+
+Under ``zb_policy="saved_residual"`` the engines run ONE combined
+``jax.vjp(f, params, x)`` at ``BWD_INPUT`` and keep its closure residuals
+(the per-layer activations the pullback reads) in the live slot, so the
+matching ``BWD_WEIGHT`` is a pure pullback with no second rematerialization.
+Inside the SPMD engine's ``lax.switch`` tick machinery a pytree-of-arrays
+cannot ride along per slot, so the residuals travel as one flat padded
+``float32`` row per slot.  This module owns that encoding:
+
+* :func:`probe_residual_layout` — abstractly traces the combined vjp once
+  (``jax.eval_shape``; no compute, no device buffers) and records the
+  deterministic order/shape/dtype of its residual leaves, plus which leaves
+  ARE the primal param leaves.  JAX guarantees leaf order is stable across
+  retraces of the same function (the treedef itself embeds jaxpr ids and is
+  NOT comparable across traces — only the flattened leaves are).
+* :func:`pack_residuals` — flattens a live ``vjp_fn``'s leaves to the flat
+  f32 row, SKIPPING param-identity leaves: params are constant within an
+  iteration, the memory model prices activation-sized residuals only, and
+  ``BWD_WEIGHT`` re-injects them from its own dummy trace.
+* :func:`rebuild_vjp` — at ``BWD_WEIGHT``: re-trace the same combined vjp
+  on ``(params, x)`` purely to obtain a structurally-correct pullback (its
+  forward is dead code — XLA removes it because only the substituted
+  pullback's outputs are used), then substitute the saved row's leaves.
+
+Both helpers assert the traced layout (leaf count/shapes/param-identity
+marks) against the probed one at trace time — a drift between B's and W's
+traces is a loud Python error, never silent corruption.
+
+Dtype round-trip rules for the f32 row: floating dtypes go through
+``astype(float32)`` (exact for the engines' float32/bfloat16/float16
+activations), bools through 0/1, 32-bit ints through a bitcast; anything
+else fails closed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import tree_util as jtu
+
+__all__ = [
+    "ResidualLayout",
+    "probe_residual_layout",
+    "pack_residuals",
+    "rebuild_vjp",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualLayout:
+    """Deterministic flattened-leaf layout of one combined-vjp residual tree.
+
+    ``marks[i]`` is True when leaf ``i`` aliases a primal param leaf (those
+    are skipped in the packed row); ``width`` is the f32 payload of the
+    non-param leaves — the slot row is padded to the engine-wide maximum.
+    """
+
+    marks: tuple[bool, ...]
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    width: int
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.marks)
+
+
+def _leaf_size(shape: tuple[int, ...]) -> int:
+    return int(np.prod(shape)) if shape else 1
+
+
+def _encode_f32(leaf):
+    """One residual leaf -> flat float32 (see module docstring for rules)."""
+    dt = jnp.dtype(leaf.dtype)
+    if jnp.issubdtype(dt, jnp.floating) or dt == jnp.dtype(bool):
+        return leaf.astype(jnp.float32).reshape(-1)
+    if jnp.issubdtype(dt, jnp.integer) and dt.itemsize == 4:
+        return jax.lax.bitcast_convert_type(leaf, jnp.float32).reshape(-1)
+    raise ValueError(
+        f"saved_residual cannot round-trip residual dtype {dt} through the "
+        f"float32 slot row (supported: floating, bool, 32-bit integer)"
+    )
+
+
+def _decode_f32(flat, shape: tuple[int, ...], dtype: str):
+    dt = jnp.dtype(dtype)
+    arr = flat.reshape(shape)
+    if jnp.issubdtype(dt, jnp.floating) or dt == jnp.dtype(bool):
+        return arr.astype(dt)
+    if jnp.issubdtype(dt, jnp.integer) and dt.itemsize == 4:
+        return jax.lax.bitcast_convert_type(arr, dt)
+    raise ValueError(f"saved_residual cannot decode residual dtype {dt}")
+
+
+def probe_residual_layout(fn, params_spec, x_spec, *extra_specs) -> ResidualLayout:
+    """Layout of ``jax.vjp(lambda p, x: fn(p, x, *extras), params, x)``.
+
+    Runs under ``jax.eval_shape`` — abstract values only, no FLOPs and no
+    device allocation — capturing the residual leaves' order, shapes,
+    dtypes and param-identity marks via a closure side channel.  ``fn`` is
+    differentiated in its first two arguments; ``extra_specs`` (e.g.
+    labels) are closed over as constants.
+    """
+    cap: dict = {}
+
+    def probing(p, x, *extras):
+        pids = {id(l) for l in jtu.tree_leaves(p)}
+        primal, vjp_fn = jax.vjp(lambda pp, xx: fn(pp, xx, *extras), p, x)
+        leaves = jtu.tree_leaves(vjp_fn)
+        cap["marks"] = tuple(id(l) in pids for l in leaves)
+        cap["shapes"] = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+        cap["dtypes"] = tuple(jnp.dtype(l.dtype).name for l in leaves)
+        return primal
+
+    jax.eval_shape(probing, params_spec, x_spec, *extra_specs)
+    width = sum(
+        _leaf_size(sh)
+        for sh, m in zip(cap["shapes"], cap["marks"])
+        if not m
+    )
+    return ResidualLayout(cap["marks"], cap["shapes"], cap["dtypes"], width)
+
+
+def _check_layout(leaves, layout: ResidualLayout, params, where: str) -> None:
+    """Trace-time invariants: W's fresh trace must flatten exactly like B's
+    probed one, and param-identity marks must not have drifted."""
+    if len(leaves) != layout.num_leaves:
+        raise RuntimeError(
+            f"saved_residual layout drift at {where}: traced "
+            f"{len(leaves)} residual leaves, probed {layout.num_leaves}"
+        )
+    for i, (leaf, sh) in enumerate(zip(leaves, layout.shapes)):
+        if tuple(leaf.shape) != sh:
+            raise RuntimeError(
+                f"saved_residual layout drift at {where}: leaf {i} has "
+                f"shape {tuple(leaf.shape)}, probed {sh}"
+            )
+    if params is not None:
+        pids = {id(l) for l in jtu.tree_leaves(params)}
+        marks = tuple(id(l) in pids for l in leaves)
+        if marks != layout.marks:
+            raise RuntimeError(
+                f"saved_residual layout drift at {where}: param-identity "
+                f"marks {marks} != probed {layout.marks}"
+            )
+
+
+def pack_residuals(vjp_fn, layout: ResidualLayout, width: int, params=None):
+    """Flatten a live pullback's residual leaves to one padded f32 row.
+
+    Param-identity leaves (``layout.marks``) are skipped — ``rebuild_vjp``
+    re-injects them from its own trace.  ``params`` (when given) re-derives
+    the marks from this trace's leaf identities and asserts they match the
+    probe, failing loud at trace time on any drift.
+    """
+    leaves = jtu.tree_leaves(vjp_fn)
+    _check_layout(leaves, layout, params, "pack_residuals")
+    segs = [
+        _encode_f32(leaf)
+        for leaf, m in zip(leaves, layout.marks)
+        if not m
+    ]
+    row = (
+        jnp.concatenate(segs) if segs else jnp.zeros((0,), jnp.float32)
+    )
+    if row.shape[0] > width:
+        raise RuntimeError(
+            f"saved_residual row overflow: packed {row.shape[0]} floats into "
+            f"a width-{width} slot row"
+        )
+    if row.shape[0] < width:
+        row = jnp.pad(row, (0, width - row.shape[0]))
+    return row
+
+
+def rebuild_vjp(dummy_vjp_fn, layout: ResidualLayout, row, params=None):
+    """Reconstruct B's pullback from a dummy trace plus the saved row.
+
+    ``dummy_vjp_fn`` comes from re-running ``jax.vjp`` on the same function
+    at ``BWD_WEIGHT`` — its forward compute is dead (nothing reads its
+    residual values once they are substituted) and XLA eliminates it; only
+    its tree STRUCTURE is used.  Param-identity leaves keep the dummy
+    trace's own leaves (params are constant within the iteration);
+    everything else is sliced from ``row``.
+    """
+    leaves, treedef = jtu.tree_flatten(dummy_vjp_fn)
+    _check_layout(leaves, layout, params, "rebuild_vjp")
+    out = []
+    off = 0
+    for leaf, m, sh, dt in zip(leaves, layout.marks, layout.shapes, layout.dtypes):
+        if m:
+            out.append(leaf)
+            continue
+        n = _leaf_size(sh)
+        out.append(_decode_f32(row[off:off + n], sh, dt))
+        off += n
+    return jtu.tree_unflatten(treedef, out)

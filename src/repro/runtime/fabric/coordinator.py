@@ -60,6 +60,11 @@ class FabricConfig:
     vote_timeout: float = 30.0  # PREPARE -> deadline span
     boundary_lead: int = 2  # switch lands this many iterations ahead
     merge_policy: str = "pessimistic"
+    # bounded telemetry ring: at most this many MERGED rounds stay resident
+    # per host (the profiler has already consumed dropped rounds; the
+    # unmerged tail of a straggling round is always kept).  Long-running
+    # fleets hold O(hosts * retention) windows instead of O(hosts * steps).
+    telemetry_retention: int = 64
 
 
 class CoordinatorServer:
@@ -85,10 +90,18 @@ class CoordinatorServer:
         self.config = config or FabricConfig()
         self.clock = clock or time.monotonic
         self.decision_fn = decision_fn
+        if self.config.telemetry_retention < 1:
+            raise ValueError(
+                f"telemetry_retention must be >= 1, got {self.config.telemetry_retention}"
+            )
         self.barrier = SwitchBarrier(self.hosts)
         self._lock = threading.Lock()
-        # host -> all windows received (the partitioned telemetry trace)
+        # host -> resident windows (the RETAINED tail of the partitioned
+        # telemetry trace — `_window_base` oldest merged rounds were dropped)
         self.windows: dict[str, list[TelemetryWindow]] = {h: [] for h in self.hosts}
+        # rounds compacted away so far: windows[h][i] is global round
+        # `_window_base + i`
+        self._window_base = 0
         # host -> PrepareSwitch not yet delivered (piggybacks on next reply)
         self._pending_prepare: dict[str, PrepareSwitch] = {}
         self._prepared_epoch_spec: ScheduleSpec | None = None
@@ -125,15 +138,36 @@ class CoordinatorServer:
     def _merge_complete_rounds(self) -> None:
         """Feed the central profiler every telemetry round all hosts have
         completed (partition merge happens per-round so the pessimum is
-        taken across hosts at the SAME iteration, not across time)."""
-        if self.tuner is None:
-            return
-        while all(len(w) > self._rounds_merged for w in self.windows.values()):
-            r = self._rounds_merged
-            per_host = {h: self.windows[h][r].samples for h in self.hosts}
-            merged = merge_link_samples(per_host, self.config.merge_policy)
-            self.tuner.net_profiler.record_samples(merged)
+        taken across hosts at the SAME iteration, not across time), then
+        compact the resident ring down to ``telemetry_retention`` merged
+        rounds.  Scripted (tuner-less) fleets count and compact rounds the
+        same way — only the profiler feed is tuner-gated — so their
+        resident footprint is bounded too."""
+        while all(
+            len(w) + self._window_base > self._rounds_merged
+            for w in self.windows.values()
+        ):
+            r = self._rounds_merged - self._window_base
+            if self.tuner is not None:
+                per_host = {h: self.windows[h][r].samples for h in self.hosts}
+                merged = merge_link_samples(per_host, self.config.merge_policy)
+                self.tuner.net_profiler.record_samples(merged)
             self._rounds_merged += 1
+        self._compact_windows()
+
+    def _compact_windows(self) -> None:
+        """Uniformly drop the oldest MERGED rounds beyond the retention
+        horizon.  Only the fully-merged prefix is eligible, so per-host
+        indices stay aligned and a straggler's unmerged tail is never
+        touched; ``max/min_reported_iteration`` read ``w[-1]`` and are
+        unaffected."""
+        merged_resident = self._rounds_merged - self._window_base
+        drop = merged_resident - self.config.telemetry_retention
+        if drop <= 0:
+            return
+        for h in self.hosts:
+            del self.windows[h][:drop]
+        self._window_base += drop
 
     def _maybe_decide(self, now: float) -> None:
         if self.barrier.phase is BarrierPhase.PREPARING:
@@ -221,6 +255,8 @@ class CoordinatorServer:
         return {
             "hosts": len(self.hosts),
             "telemetry_windows": sum(len(w) for w in self.windows.values()),
+            "telemetry_rounds_dropped": self._window_base,
+            "telemetry_retention": self.config.telemetry_retention,
             "barrier_epochs": len(hist),
             "committed_switches": self.barrier.committed_count,
             "aborted_switches": self.barrier.aborted_count,
@@ -229,10 +265,14 @@ class CoordinatorServer:
         }
 
     def telemetry_trace(self) -> dict:
-        """The partitioned telemetry trace (the CI artifact): every window
-        per host plus the barrier trail, JSON-serializable."""
+        """The partitioned telemetry trace (the CI artifact): every RETAINED
+        window per host plus the barrier trail, JSON-serializable.  Rounds
+        older than the retention horizon were compacted away after the
+        profiler consumed them; ``window_base`` records how many, so global
+        round ``window_base + i`` is ``windows[h][i]``."""
         return {
             "hosts": list(self.hosts),
+            "window_base": self._window_base,
             "windows": {
                 h: [
                     {

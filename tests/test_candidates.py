@@ -109,8 +109,7 @@ def _model_policy(zb_policy, S=4):
 def test_saved_residual_surcharge_is_exactly_the_residual_bytes():
     """Per live zb slot, saved_residual keeps B's vjp residuals (one layer
     activation per stage layer) on top of the double-remat slot; non-zb
-    slots and "full" checkpointing are unaffected (residuals are already
-    resident there)."""
+    slots are unaffected."""
     dr, sr = _model_policy("double_remat"), _model_policy("saved_residual")
     b = 4
     tokens = b * dr.seq_len
@@ -118,9 +117,41 @@ def test_saved_residual_surcharge_is_exactly_the_residual_bytes():
     expected = spec.layer_act_bytes_per_token * spec.num_layers * tokens
     assert sr.slot_bytes(0, b, zb=True) - dr.slot_bytes(0, b, zb=True) == expected
     assert sr.slot_bytes(0, b, zb=False) == dr.slot_bytes(0, b, zb=False)
-    dr_full, sr_full = _model_policy("double_remat"), _model_policy("saved_residual")
-    dr_full.checkpoint_policy = sr_full.checkpoint_policy = "full"
-    assert sr_full.slot_bytes(0, b, zb=True) == dr_full.slot_bytes(0, b, zb=True)
+
+
+def test_saved_residual_under_full_checkpointing_fails_closed():
+    """"full" checkpointing already keeps every layer activation resident,
+    so saved_residual has nothing to buy there — the combination used to
+    price a silent zero surcharge; now it is rejected both at construction
+    and at use (checkpoint_policy is a mutable field)."""
+    with pytest.raises(ValueError, match="redundant"):
+        MemoryModel.uniform(
+            num_stages=4, seq_len=128, param_bytes=1e6, optimizer_bytes=2e6,
+            grad_bytes=1e6, stage_input_bytes_per_token=256.0,
+            layer_act_bytes_per_token=128.0, num_layers_per_stage=2,
+            checkpoint_policy="full", zb_policy="saved_residual",
+        )
+    sr_full = _model_policy("saved_residual")
+    sr_full.checkpoint_policy = "full"  # post-construction mutation
+    with pytest.raises(ValueError, match="redundant"):
+        sr_full.slot_bytes(0, 4, zb=True)
+    dr = _model_policy("double_remat")
+    with pytest.raises(ValueError, match="redundant"):
+        # per-call per-stage override hits the same guard
+        dr.checkpoint_policy = "full"
+        dr.slot_bytes(0, 4, zb=True, policy="saved_residual")
+
+
+def test_full_checkpointing_with_double_remat_still_prices():
+    """The non-redundant branch stays legal: full + double_remat prices the
+    zb slot as the (full) activation store plus the stashed dy."""
+    dr = _model_policy("double_remat")
+    dr.checkpoint_policy = "full"
+    b = 4
+    tokens = b * dr.seq_len
+    spec = dr.stages[0]
+    dy = spec.stage_input_bytes_per_token * tokens
+    assert dr.slot_bytes(0, b, zb=True) - dr.slot_bytes(0, b, zb=False) == dy
 
 
 def test_saved_residual_rejected_under_limit_that_admits_double_remat():
@@ -156,3 +187,86 @@ def test_saved_residual_rejected_under_limit_that_admits_double_remat():
 def test_unknown_zb_policy_fails_closed():
     with pytest.raises(ValueError, match="zb_policy"):
         _model_policy("store_everything")
+
+
+def test_saved_residual_requires_a_split_backward_kind():
+    """Non-ZB kinds have no BWD_WEIGHT to skip a remat in: the spec fails
+    closed at resolve time and the error names the kinds that qualify."""
+    from repro.core.kinds import saved_residual_kinds
+
+    kinds = saved_residual_kinds()
+    assert set(kinds) == {"zb_h1", "zb_h2", "interleaved_zb", "zbv"}
+    for bad in ("kfkb", "interleaved"):
+        with pytest.raises(ValueError) as ei:
+            make_plan(4, 8, spec=ScheduleSpec(
+                kind=bad, num_virtual=2 if bad == "interleaved" else 1,
+                zb_policy="saved_residual",
+            ))
+        for good in kinds:
+            assert good in str(ei.value)
+
+
+def test_sr_plan_peak_matches_exact_liveness_under_surcharge():
+    """An SR plan's priced peak is EXACTLY the closed-form stage curve at
+    the plan's exact live-slot count — the policy fattens the slot, never
+    the liveness — and sits strictly above the same plan priced DR."""
+    from repro.core.memory_model import predicted_peak_live
+    from repro.core.schedule import peak_live_activations
+
+    S, M = 4, 8
+    mm = _model_policy("double_remat", S)
+    sr = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", zb_policy="saved_residual"))
+    dr = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
+    live = peak_live_activations(sr)
+    assert live == peak_live_activations(dr)  # identical schedule shape
+    assert live == predicted_peak_live(sr)  # zb_h1's contract is exact
+    peaks = mm.peak_bytes_per_stage(sr)
+    for s in range(S):
+        assert peaks[s] == mm.bytes_at_live(s, 1, live[s], True, policy="saved_residual")
+    assert all(a > b for a, b in zip(peaks, mm.peak_bytes_per_stage(dr)))
+
+
+def test_enumeration_chooses_policy_per_stage_against_the_curve():
+    """The acceptance shape: a limit curve that is tight on stage 0 and
+    generous elsewhere makes the enumeration emit the DR baseline plus a
+    MIXED vector — saved_residual exactly on the admitting stages."""
+    S, B = 4, 32
+    mm = _model_policy("double_remat", S)
+    h1 = make_plan(S, B, spec=ScheduleSpec(kind="zb_h1"))
+    base = mm.peak_bytes_per_stage(h1)
+    limits = [p + (1.0 if s == 0 else 1e9) for s, p in enumerate(base)]
+    cands = enumerate_candidates(
+        S, B, mm, limits,
+        space=SearchSpace(
+            kinds=("zb_h1",), max_k=1,
+            zb_policies=("double_remat", "saved_residual"),
+        ),
+    )
+    pols = {tuple(c.plan.zb_policy) for c in cands}
+    assert ("double_remat",) * S in pols  # the baseline survives
+    mixed = [p for p in pols if set(p) == {"double_remat", "saved_residual"}]
+    assert mixed, f"no mixed per-stage vector enumerated: {pols}"
+    for p in mixed:
+        assert p[0] == "double_remat"  # the tight stage keeps DR
+        assert p[1:] == ("saved_residual",) * (S - 1)
+
+
+def test_sr_candidates_carry_their_policy_in_the_name():
+    """Estimate keys and compile-cache keys go through the plan name: SR
+    variants must be distinguishable from their DR siblings."""
+    S, B = 4, 32
+    mm = _model_policy("double_remat", S)
+    cands = enumerate_candidates(
+        S, B, mm, 1e12,
+        space=SearchSpace(
+            kinds=("zb_h1",), max_k=1,
+            zb_policies=("double_remat", "saved_residual"),
+        ),
+    )
+    names = [c.name for c in cands]
+    assert len(set(names)) == len(names)
+    assert any("+SR" in n for n in names)
+    for c in cands:
+        if "+SR" in c.name:
+            assert "saved_residual" in c.plan.zb_policy
+            assert c.spec.zb_policy == tuple(c.plan.zb_policy)

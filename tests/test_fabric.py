@@ -246,6 +246,67 @@ def test_server_rejects_unknown_hosts_and_messages():
         server.handle(object())
 
 
+def test_telemetry_ring_bounds_long_run_memory():
+    """A long-running fleet holds O(retention) resident windows, not
+    O(steps): the profiler still consumes every round, iteration reporting
+    (which reads the newest window) is unaffected, and the trace artifact
+    stays serializable over the retained horizon."""
+    import json
+
+    tuner, cands, costs = _fig10_tuner()
+    links = fabric_probe_links(cands, lambda c: costs)
+    keep = 8
+    server = CoordinatorServer(
+        ("a", "b"), initial_spec=cands[0].spec, tuner=tuner,
+        config=FabricConfig(tuning_interval=1e9, vote_timeout=60.0,
+                            telemetry_retention=keep),
+    )
+    rounds = 100
+    for it in range(rounds):
+        t = 1.0 + it
+        server.handle(_window("a", it, t, cands[0].spec, links, bw=8.0))
+        server.handle(_window("b", it, t + 0.05, cands[0].spec, links, bw=4.0))
+        # bounded at every step, not just at the end (the straggler's
+        # unmerged tail is the only excess a host can carry)
+        assert len(server.windows["a"]) <= keep + 1
+    assert server._rounds_merged == rounds  # the profiler saw every round
+    assert len(server.windows["a"]) == keep == len(server.windows["b"])
+    assert server._window_base == rounds - keep
+    assert server.max_reported_iteration() == rounds - 1
+    assert server.min_reported_iteration() == rounds - 1
+    trace = server.telemetry_trace()
+    assert trace["window_base"] == rounds - keep
+    assert all(len(ws) == keep for ws in trace["windows"].values())
+    assert trace["windows"]["a"][0]["iteration"] == rounds - keep
+    m = server.fabric_metrics()
+    assert m["telemetry_rounds_dropped"] == rounds - keep
+    assert m["telemetry_retention"] == keep
+    assert m["telemetry_windows"] == 2 * keep
+    json.dumps(trace)  # the CI artifact must survive compaction
+
+
+def test_telemetry_ring_bounds_scripted_fleets_too():
+    """tuner=None (scripted) fleets used to skip round accounting entirely
+    and retain every window forever; compaction is tuner-independent."""
+    server = CoordinatorServer(
+        ("a",), initial_spec=S1, tuner=None,
+        config=FabricConfig(telemetry_retention=4),
+    )
+    for it in range(40):
+        server.handle(_window("a", it, 1.0 + it, S1, (), bw=1.0))
+    assert len(server.windows["a"]) == 4
+    assert server._window_base == 36
+    assert server.max_reported_iteration() == 39
+
+
+def test_telemetry_retention_validated():
+    with pytest.raises(ValueError, match="telemetry_retention"):
+        CoordinatorServer(
+            ("a",), initial_spec=S1,
+            config=FabricConfig(telemetry_retention=0),
+        )
+
+
 # ---------------------------------------------------------------------------
 # real-runtime fleets over LocalTransport
 # ---------------------------------------------------------------------------

@@ -215,6 +215,61 @@ def test_reference_engine_family_matches_oracle(kind, k, v, w):
         np.testing.assert_allclose(np.asarray(a), np.asarray(g), atol=5e-6)
 
 
+#: saved-residual executor proofs, separate from FAMILY_PARITY_CASES (those
+#: rows are 4-tuples consumed by the registry gate above): every kind whose
+#: registry record claims ``supports_saved_residual`` must prove gradient
+#: parity for an SR plan, and the matrix must include a MIXED per-stage
+#: vector (the tuner's per-stage DR/SR selection path) and a vector-w cell.
+SAVED_RESIDUAL_PARITY_CASES = [
+    ("zb_h1", 1, 1, 0, "saved_residual"),
+    ("zb_h1", 2, 1, 0, ("saved_residual", "double_remat")),  # mixed per-stage
+    ("zb_h2", 1, 1, (2, 1), "saved_residual"),  # vector-w + SR
+    ("interleaved_zb", 1, 2, 0, "saved_residual"),
+    ("zbv", 1, 2, 0, "saved_residual"),
+]
+
+
+def test_every_saved_residual_kind_has_an_executor_proof():
+    """Gate (tier 1), auto-derived from the registry: flagging a kind
+    ``supports_saved_residual`` without an SR engine proof fails here."""
+    from repro.core.kinds import saved_residual_kinds
+
+    assert {kind for kind, *_ in SAVED_RESIDUAL_PARITY_CASES} == set(
+        saved_residual_kinds()
+    )
+    mixed = [
+        pol for *_, pol in SAVED_RESIDUAL_PARITY_CASES
+        if isinstance(pol, tuple) and len(set(pol)) > 1
+    ]
+    assert mixed, "the per-stage DR/SR selection path needs a mixed-vector proof"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,k,v,w,pol", SAVED_RESIDUAL_PARITY_CASES)
+def test_reference_engine_saved_residual_matches_oracle(kind, k, v, w, pol):
+    """saved_residual keeps B's combined-vjp pullback and replays it at W
+    with no second rematerialization — the gradients must still be the
+    unpipelined jax.grad, for every SR-capable kind and for mixed
+    per-stage policy vectors."""
+    cfg = _cfg(num_layers=4, d_model=32, d_ff=64, vocab_size=64)
+    S, M, b, T = 2, 4, 2, 8
+    staged = StagedModel.build(cfg, S * v)
+    params = staged.init_all_stages(jax.random.PRNGKey(0))
+    tokens, labels = _data(M, b, T, cfg.vocab_size)
+
+    def oracle(p):
+        return sum(staged.full_loss(p, tokens[m], labels[m]) for m in range(M)) / M
+
+    oloss, ograds = jax.value_and_grad(oracle)(params)
+    plan = make_plan(S, M, spec=ScheduleSpec(
+        kind=kind, k=k, num_virtual=v, extra_warmup=w, zb_policy=pol,
+    ))
+    rloss, rgrads = reference_pipeline_grads(staged, params, tokens, labels, plan)
+    assert float(rloss) == pytest.approx(float(oloss), rel=1e-5)
+    for a, g in zip(jax.tree_util.tree_leaves(ograds), jax.tree_util.tree_leaves(rgrads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(g), atol=5e-6)
+
+
 @pytest.mark.slow
 def test_reference_engine_matches_oracle_after_weight_placement():
     """A W-placement-optimized plan (the non-uniform-cost refinement of
@@ -322,6 +377,16 @@ _SPMD_SCRIPT = textwrap.dedent(
           staged_v, params_v, oloss_v, ograds_v)
     check(make_plan(S, M, spec=ScheduleSpec(kind="zbv", extra_warmup=(1, 0, 2, 1))),
           staged_v, params_v, oloss_v, ograds_v)
+    # saved_residual through the REAL engine: B's combined-vjp residuals
+    # ride the per-slot f32 row and W replays the pullback with no second
+    # rematerialization — uniform SR and the tuner's MIXED per-stage vector
+    check(make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", zb_policy="saved_residual")),
+          staged, params, oloss, ograds)
+    check(make_plan(S, M, spec=ScheduleSpec(
+              kind="zb_h1", k=2,
+              zb_policy=("saved_residual", "double_remat",
+                         "saved_residual", "double_remat"))),
+          staged, params, oloss, ograds)
     print("SPMD_ENGINE_ALL_OK")
     """
 )
@@ -336,7 +401,7 @@ def test_spmd_engine_subprocess():
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run(
         [sys.executable, "-c", _SPMD_SCRIPT],
-        capture_output=True, text=True, env=env, timeout=900,
+        capture_output=True, text=True, env=env, timeout=1500,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "SPMD_ENGINE_ALL_OK" in proc.stdout

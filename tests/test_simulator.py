@@ -222,3 +222,42 @@ def test_interleaved_zb_golden_beats_plain_interleaved():
         res_j = simulate_plan(joint, costs, net)
         assert res_j.pipeline_length < res_p.pipeline_length
         assert sum(res_j.busy_time) == pytest.approx(sum(res_p.busy_time))
+
+
+def test_saved_residual_golden_beats_double_remat_on_w_heavy_pipeline():
+    """Golden gate for the executable saved_residual policy: on a W-heavy
+    pipeline (weight-gradient-dominated backward) under a preempted
+    network, pricing BWD_WEIGHT at the no-remat body strictly shortens the
+    simulated makespan vs the double-remat default of the SAME schedule; a
+    mixed per-stage vector lands in between, and per-device busy time
+    drops by exactly the W savings at the stages that switched."""
+    S, M = 4, 16
+    w_dr, w_sr = 2.0, 1.0  # the eliminated remat forward is the difference
+    costs = StageCosts(
+        fwd_time=[1.0] * S, bwd_time=[3.0] * S,
+        fwd_bytes=[1.0] * S, bwd_bytes=[1.0] * S,
+        bwd_input_time=[1.0] * S, bwd_weight_time=[w_dr] * S,
+        bwd_weight_saved_time=[w_sr] * S,
+    )
+    net = lambda: uniform_network(
+        S, lambda: PeriodicPreemptionTrace(high=50.0, low=0.5, period=20.0, duty=0.3)
+    )
+    dr = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
+    sr = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1", zb_policy="saved_residual"))
+    mixed = make_plan(S, M, spec=ScheduleSpec(
+        kind="zb_h1",
+        zb_policy=("saved_residual", "double_remat") * (S // 2),
+    ))
+    res_dr = simulate_plan(dr, costs, net())
+    res_sr = simulate_plan(sr, costs, net())
+    res_mx = simulate_plan(mixed, costs, net())
+    assert res_sr.pipeline_length < res_dr.pipeline_length
+    assert res_sr.pipeline_length <= res_mx.pipeline_length <= (
+        res_dr.pipeline_length + 1e-9
+    )
+    for s in range(S):
+        assert res_dr.busy_time[s] - res_sr.busy_time[s] == pytest.approx(
+            M * (w_dr - w_sr)
+        )
+        expect_mx = M * (w_dr - w_sr) if mixed.zb_policy[s] == "saved_residual" else 0.0
+        assert res_dr.busy_time[s] - res_mx.busy_time[s] == pytest.approx(expect_mx)

@@ -121,10 +121,12 @@ def test_make_plan_rejects_mixing_spec_and_kwargs():
 
 
 def test_plan_spec_roundtrip():
-    """plan.spec is normalized (aliases folded, w a vector) and rebuilding
-    from it reproduces the plan."""
+    """plan.spec is normalized (aliases folded, w and zb_policy vectors)
+    and rebuilding from it reproduces the plan."""
     plan = make_plan(4, 8, 1, kind="gpipe")
-    assert plan.spec == ScheduleSpec(kind="kfkb", k=8, extra_warmup=(0,) * 4)
+    assert plan.spec == ScheduleSpec(
+        kind="kfkb", k=8, extra_warmup=(0,) * 4, zb_policy=("double_remat",) * 4
+    )
     again = make_plan(4, 8, spec=plan.spec)
     assert _digest(plan) == _digest(again)
 

@@ -312,3 +312,49 @@ def test_tuner_lowers_each_candidate_at_most_once():
         schedule_mod.lower_to_table = real
     assert len(calls) == len(set(calls)), f"re-lowered candidates: {sorted(calls)}"
     assert len(calls) <= len(cands)
+
+
+def test_tuner_selects_saved_residual_on_admitting_stages():
+    """The saved-residual acceptance: a limit curve tight on stage 0 and
+    generous elsewhere yields the DR baseline plus the MIXED per-stage
+    vector (saved_residual exactly where memory admits it); on a W-heavy
+    pipeline under preemption the tuner picks the mixed candidate — its
+    no-remat W bodies drain the bubble-filling weight passes faster — and
+    the record carries the per-stage policy trail."""
+    from repro.core import make_plan
+
+    S, B = 4, 32
+    mm = _mm(S)
+    h1 = make_plan(S, B, spec=ScheduleSpec(kind="zb_h1"))
+    base = mm.peak_bytes_per_stage(h1)
+    limits = [p + (1.0 if s == 0 else 1e9) for s, p in enumerate(base)]
+    cands = enumerate_candidates(
+        S, B, mm, limits,
+        space=SearchSpace(
+            kinds=("zb_h1",), max_k=1,
+            zb_policies=("double_remat", "saved_residual"),
+        ),
+    )
+    by_policy = {tuple(c.plan.zb_policy): c for c in cands}
+    mixed = [p for p in by_policy if set(p) == {"double_remat", "saved_residual"}]
+    assert mixed, f"no mixed vector enumerated: {set(by_policy)}"
+
+    # W-heavy profile: double-remat W = 3 (remat forward + pullback),
+    # saved-residual W = 1.2 (pure pullback).  Tiny wire bytes keep the
+    # estimate compute-bound so the W drain sets the pipeline length.
+    costs = StageCosts(
+        fwd_time=[1.0] * S, bwd_time=[4.0] * S,
+        fwd_bytes=[0.01] * S, bwd_bytes=[0.01] * S,
+        bwd_input_time=[1.0] * S, bwd_weight_time=[3.0] * S,
+        bwd_weight_saved_time=[1.2] * S,
+    )
+    tuner = AutoTuner(cands, lambda _c: costs, NetworkProfiler(_preempted_network(S)))
+    rec = tuner.tune(0.0)
+    assert rec.estimates[rec.chosen] == min(rec.estimates.values())
+    assert "+SR" in rec.chosen
+    assert rec.chosen_zb_policy in mixed
+    assert rec.chosen_zb_policy[0] == "double_remat"  # the tight stage
+    assert rec.chosen_zb_policy[1:] == ("saved_residual",) * (S - 1)
+    # and the SR pick genuinely beats the DR baseline's estimate
+    dr_name = by_policy[("double_remat",) * S].name
+    assert rec.estimates[rec.chosen] < rec.estimates[dr_name]
