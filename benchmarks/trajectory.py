@@ -13,8 +13,17 @@ a PINNED, fully seeded subset of the paper benchmarks —
   best-scalar / vector length ratio (this PR's tentpole, now a tracked
   number),
 * **simulator events/sec** — wall-clock throughput of the discrete-event
-  core on a fixed workload (wall-clock, so it gates with a wider band than
-  the deterministic 10%),
+  core on a fixed workload (reported for trend-watching but NOT gated
+  since PR 8 — the cost-dependent simulation behaviour it used to proxy is
+  now gated deterministically by the device-spec metrics below),
+* **device-spec matrix** (PR 8) — the offline hardware-matrix slice
+  (``benchmarks/hardware_matrix.py``) on three parts: the pinned
+  workload's spec-derived seconds drive candidate enumeration + tuner +
+  makespan simulation for ``h100-sxm`` and the two synthetic stress specs,
+  gating that the extreme-skew regime deterministically flips the chosen
+  ``ScheduleSpec`` away from the H100's pick, plus the H100 makespan and
+  the slow-interconnect/H100 makespan ratio — all spec-derived seconds,
+  zero wall-clock,
 * **live plan-switch runtime** — the seeded Fig-10 regime run through
   ``PlanRuntime`` (real compiled steps, reference backend): kind-switch
   count, precompile hit rate on the tuner's candidate stream, warm-cache
@@ -22,8 +31,10 @@ a PINNED, fully seeded subset of the paper benchmarks —
   probe overhead passive telemetry saves vs suspend-and-probe,
 * **coordinator fabric** — a two-host ``LocalTransport`` fleet driven
   through a scripted refusal (fleet-wide abort) and a committed warm
-  switch: barrier verdict counts, commit latency (wall-clock), and the
-  worst per-host precompile hit rate,
+  switch: barrier verdict counts, the committed epoch's ready-vote count
+  (deterministic, gated — replaces the old wall-clock commit-latency gate;
+  the latency itself is still reported), and the worst per-host
+  precompile hit rate,
 * **saved-residual zero-bubble** — the no-remat ``BWD_WEIGHT`` body:
   simulated makespan gain of ``zb_policy="saved_residual"`` over
   double-remat on a W-heavy pipeline under preemption, the tuner's
@@ -80,9 +91,15 @@ SCHEMA_VERSION = 1
 REL_TOL = 0.10  # >10% regression on a gated deterministic metric fails the job
 
 #: metric -> (direction, rel_tol); "higher" means bigger is better and the
-#: gate requires ``new >= old * (1 - tol)`` (resp. <= for "lower").  The
-#: deterministic simulation metrics gate at the tight default; the one
-#: wall-clock metric (events/sec) gets a wider band for shared-runner noise.
+#: gate requires ``new >= old * (1 - tol)`` (resp. <= for "lower").  Every
+#: gate is deterministic at the tight default band except
+#: ``runtime_warm_switch_frac`` — the ONE remaining wall-clock gate (a
+#: real compiled-step latency fraction with no spec-derived equivalent:
+#: it measures host re-stacking work, not schedule cost), which keeps the
+#: wide band + fingerprint guard.  ``sim_events_per_sec`` and
+#: ``fabric_barrier_latency_commit`` were demoted in PR 8 from wall-clock
+#: gates to reported-only metrics; their cost-dependent content is gated
+#: deterministically by the spec_* and fabric_commit_ready_votes gates.
 GATES = {
     "fig2_gain_k2": ("higher", REL_TOL),
     "fig2_gain_k4": ("higher", REL_TOL),
@@ -93,7 +110,10 @@ GATES = {
     # interleaved peak-live count (both deterministic simulation)
     "zbv_preempted_gain_vs_1f1b": ("higher", REL_TOL),
     "zbv_peak_live_ratio_vs_interleaved": ("higher", REL_TOL),
-    "sim_events_per_sec": ("higher", 0.5),
+    # device-spec matrix (PR 8): offline spec-derived seconds, deterministic
+    "spec_divergent_choice": ("higher", 0.0),
+    "spec_h100_makespan_s": ("lower", REL_TOL),
+    "spec_slow_link_makespan_ratio": ("higher", REL_TOL),
     # live plan-switch runtime (PR 4): the adaptive loop on the real engine
     "runtime_kind_switches": ("higher", 0.0),
     "runtime_precompile_hit_rate": ("higher", REL_TOL),
@@ -107,7 +127,7 @@ GATES = {
     "fabric_committed_switches": ("higher", 0.0),
     "fabric_aborted_switches": ("higher", 0.0),
     "fabric_precompile_hit_rate_min": ("higher", REL_TOL),
-    "fabric_barrier_latency_commit": ("lower", 0.5),
+    "fabric_commit_ready_votes": ("higher", 0.0),
     # saved-residual zero-bubble (PR 7): the no-remat W body must keep
     # beating double-remat on the W-heavy preemption cell, the tuner must
     # keep choosing saved_residual exactly on the admitting stages, and the
@@ -121,11 +141,11 @@ GATES = {
 #: wall-clock metrics only gate against a baseline recorded on a comparable
 #: machine — a BENCH committed from a dev laptop must not fail the CI
 #: runner (or vice versa) on hardware difference alone; on a fingerprint
-#: mismatch they are reported but not gated
+#: mismatch they are reported but not gated.  Since PR 8 this guard covers
+#: exactly one gate (see the GATES note); ``sim_events_per_sec`` and
+#: ``fabric_barrier_latency_commit`` remain in the report but not in GATES
 WALL_CLOCK_METRICS = {
-    "sim_events_per_sec",
     "runtime_warm_switch_frac",
-    "fabric_barrier_latency_commit",
 }
 
 
@@ -386,6 +406,48 @@ def tuner_switch_trace() -> dict:
     }
 
 
+def device_spec_metrics() -> dict:
+    """The offline hardware-matrix slice on three committed device specs.
+
+    Everything here is spec-derived arithmetic over the pinned workload's
+    committed HLO counts — no accelerator, no wall clock — so the gates
+    run at the tight deterministic band:
+
+    * ``spec_divergent_choice`` — the synthetic extreme-skew part (memory-
+      starved: every program goes memory-bound, so saved-residual's
+      residual-row reads cost more than double-remat's recompute FLOPs,
+      and the 6 GB capacity rejects deep warmup) must keep choosing a
+      DIFFERENT ``ScheduleSpec`` than the compute-bound H100 on the same
+      scenario — the acceptance proof that device data steers the tuner,
+    * ``spec_h100_makespan_s`` — the chosen schedule's simulated makespan
+      on H100-derived seconds (the deterministic cost-regression gate that
+      replaces the old wall-clock events/sec band),
+    * ``spec_slow_link_makespan_ratio`` — how much the 1 GB/s synthetic
+      interconnect inflates the (re-tuned) makespan vs H100: the preempted-
+      network operating point as a steady-state cost ratio.
+    """
+    from benchmarks.hardware_matrix import conformance_slice
+
+    spec_dir = os.path.join(_ROOT, "specs")
+    slices = {
+        name: conformance_slice(os.path.join(spec_dir, f"{name}.json"))
+        for name in ("h100-sxm", "synthetic-extreme-skew",
+                     "synthetic-slow-interconnect")
+    }
+    h100 = slices["h100-sxm"]
+    skew = slices["synthetic-extreme-skew"]
+    slow = slices["synthetic-slow-interconnect"]
+    return {
+        "spec_chosen": {name: s["chosen"]["name"] for name, s in slices.items()},
+        "spec_divergent_choice": int(h100["chosen"] != skew["chosen"]),
+        "spec_h100_makespan_s": h100["makespan_s"]["chosen"],
+        "spec_slow_link_makespan_ratio": (
+            slow["makespan_s"]["chosen"] / h100["makespan_s"]["chosen"]
+        ),
+        "spec_h100_ratio_vs_1f1b": h100["makespan_ratio_vs_1f1b"],
+    }
+
+
 def simulator_throughput(repeats: int = 5) -> dict:
     """Discrete-event core speed on a fixed workload (events = executed
     tasks + completed transfers).  Wall-clock, hence gated loosely."""
@@ -495,8 +557,16 @@ def fabric_metrics(iterations: int = 8) -> dict:
         "fabric_telemetry_windows": fab["telemetry_windows"],
         "fabric_committed_switches": fab["committed_switches"],
         "fabric_aborted_switches": fab["aborted_switches"],
+        # reported only (wall-clock, not gated — see WALL_CLOCK_METRICS note)
         "fabric_barrier_latency_commit": max(
             (r.latency for r in commits), default=0.0
+        ),
+        # deterministic replacement gate: every committed epoch must have
+        # collected a ready vote from the FULL fleet (a commit on partial
+        # votes would be a barrier-protocol regression)
+        "fabric_commit_ready_votes": min(
+            (sum(1 for v in r.votes.values() if v.ready) for r in commits),
+            default=0,
         ),
         "fabric_precompile_hit_rate_min": min(
             h["precompile_hit_rate"] for h in out["hosts"].values()
@@ -511,6 +581,7 @@ def collect(skip_runtime: bool = False) -> dict:
     metrics.update(zbv_ratios())
     metrics.update(saved_residual_metrics())
     metrics.update(tuner_switch_trace())
+    metrics.update(device_spec_metrics())
     metrics.update(simulator_throughput())
     if not skip_runtime:
         metrics.update(runtime_metrics())

@@ -11,6 +11,7 @@ several times larger relative to compute than GPT's.
 
 from __future__ import annotations
 
+from repro.core.devicespec import PEAK_FLOPS
 from repro.core.taskgraph import StageCosts
 from repro.models.common import ModelConfig
 
@@ -49,7 +50,7 @@ def gpt_stage_costs(
     num_stages: int,
     micro_batch_size: int,
     seq_len: int = 1024,
-    chip_flops: float = 197e12 * 0.4,  # bf16 peak × a realistic MFU
+    chip_flops: float = PEAK_FLOPS * 0.4,  # bf16 peak × a realistic MFU
 ) -> StageCosts:
     """Analytic per-stage costs: 6·N·D flops split over stages; cross-stage
     bytes = hidden-stream activation (b · seq · d_model · 2 bytes)."""

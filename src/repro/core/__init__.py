@@ -15,6 +15,15 @@ from repro.core.candidates import (
 )
 from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
 from repro.core.costmodel import CostModel, closed_form_1f1b_length, link_probe_specs
+from repro.core.devicespec import (
+    DeviceSpec,
+    DeviceSpecError,
+    WorkloadProfile,
+    derive_memory_model,
+    derive_stage_costs,
+    load_device_spec,
+    load_workload_profile,
+)
 from repro.core.interfaces import IterationHook, TelemetrySink
 from repro.core.kinds import (
     KindSpec,
@@ -89,6 +98,13 @@ __all__ = [
     "CostModel",
     "closed_form_1f1b_length",
     "link_probe_specs",
+    "DeviceSpec",
+    "DeviceSpecError",
+    "WorkloadProfile",
+    "derive_memory_model",
+    "derive_stage_costs",
+    "load_device_spec",
+    "load_workload_profile",
     "MemoryModel",
     "StageMemorySpec",
     "ZB_SLOT_POLICIES",

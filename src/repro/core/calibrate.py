@@ -23,8 +23,28 @@ roofline estimate for actually timing the compiled stage functions on the
 host (useful on CPU where the TPU roofline constants are meaningless but
 *relative* stage skew still matters).
 
+``method="spec"`` prices the SAME HLO counts against a committed
+:class:`~repro.core.devicespec.DeviceSpec` file instead of the legacy
+constants (pass ``device_spec=`` a path or loaded spec; files live under
+``specs/`` — format reference in ``core/devicespec.py`` + authoring guide
+in ``specs/README.md``).  Contract:
+
+* per-dtype peak FLOP/s — the model config's compute dtype selects the
+  roofline numerator, failing closed if the spec lacks that dtype;
+* latency-padded, derating-curve-adjusted HBM time —
+  ``hbm_latency + bytes / (hbm_bw * derate(bytes))`` — which reduces
+  bit-for-bit to ``method="hlo"`` when the spec encodes zero latency and
+  a flat 1.0 derating (``specs/tpu-v5e.json`` is that reference spec, and
+  ``tests/test_calibrate.py`` holds the equivalence);
+* the returned :class:`Calibration` additionally carries the spec's
+  per-stage memory ``limits`` curve (device capacity per stage) plus the
+  ``device``/``dtype`` identity, so candidate enumeration and the tuner
+  can run entirely offline for hardware the current host doesn't have.
+
 Entry point: ``python -m repro.launch.dryrun_pipeline --calibrate`` runs
-this against the configs/ model ladder at production shapes.
+this against the configs/ model ladder at production shapes
+(``--device-spec specs/<part>.json`` selects the offline spec method and
+runs the full enumerate+tune loop on the derived costs).
 """
 
 from __future__ import annotations
@@ -35,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.devicespec import DeviceSpec, dtype_key, load_device_spec
 from repro.core.memory_model import MemoryModel, StageMemorySpec
 from repro.core.taskgraph import StageCosts
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, analyze_hlo
@@ -61,6 +82,12 @@ class Calibration:
     memory: MemoryModel
     # per stage: fwd / bwd_input / bwd_weight / bwd_weight_saved
     profiles: list[dict[str, StageTaskProfile]]
+    # capture identity + spec extras (populated by every method since PR 8;
+    # ``limits``/``device`` only by method="spec")
+    micro_batch_size: int | None = None
+    dtype: str | None = None  # spec dtype key of the compute dtype
+    device: str | None = None  # DeviceSpec.name when method="spec"
+    limits: list[float] | None = None  # per-stage memory-limit curve (bytes)
 
     def summary_rows(self) -> list[list[str]]:
         """Per-stage table rows: times in ms (3 sig figs), wire bytes in MB."""
@@ -102,9 +129,8 @@ def _roofline_seconds(
     return max(flops / peak_flops, hbm_bytes / hbm_bw)
 
 
-def _profile_compiled(
-    fn, arg_specs, peak_flops: float, hbm_bw: float, method: str
-) -> StageTaskProfile:
+def _profile_compiled(fn, arg_specs, price, method: str) -> StageTaskProfile:
+    """Compile + analyze one task body; ``price(flops, hbm_bytes) -> s``."""
     compiled = jax.jit(fn).lower(*arg_specs).compile()
     ana = analyze_hlo(compiled.as_text())
     if method == "wallclock":
@@ -120,7 +146,7 @@ def _profile_compiled(
             lambda: jax.block_until_ready(compiled(*args)), repeats=3, warmup=1
         )
     else:
-        seconds = _roofline_seconds(ana.flops, ana.hbm_bytes, peak_flops, hbm_bw)
+        seconds = price(ana.flops, ana.hbm_bytes)
     return StageTaskProfile(flops=ana.flops, hbm_bytes=ana.hbm_bytes, seconds=seconds)
 
 
@@ -132,6 +158,7 @@ def calibrate_stage_costs(
     hbm_bw: float = HBM_BW,
     method: str = "hlo",
     optimizer_bytes_per_param_byte: float = 2.0,
+    device_spec: DeviceSpec | str | None = None,
 ) -> Calibration:
     """Profile every stage's real task bodies into a heterogeneous profile.
 
@@ -150,13 +177,44 @@ def calibrate_stage_costs(
 
     ``method="hlo"`` (default) converts the HLO FLOP/byte counts to seconds
     with the roofline constants; ``method="wallclock"`` times the compiled
-    functions on the host instead.  Returns the calibrated
-    :class:`StageCosts`, a per-stage :class:`MemoryModel`, and the raw
-    per-task profiles.
+    functions on the host instead; ``method="spec"`` prices the counts on
+    the :class:`~repro.core.devicespec.DeviceSpec` given via
+    ``device_spec`` (path or instance — see the module docstring for the
+    full contract).  Returns the calibrated :class:`StageCosts`, a
+    per-stage :class:`MemoryModel`, and the raw per-task profiles.
     """
-    if method not in ("hlo", "wallclock"):
+    if method not in ("hlo", "wallclock", "spec"):
         raise ValueError(f"unknown calibration method {method!r}")
     cfg = staged.cfg
+    try:
+        compute_dtype = dtype_key(cfg.dtype)
+    except ValueError:
+        if method == "spec":
+            raise
+        compute_dtype = None  # exotic dtype: fine unless spec pricing needs it
+    spec: DeviceSpec | None = None
+    if method == "spec":
+        if device_spec is None:
+            raise ValueError(
+                'method="spec" requires device_spec= (a DeviceSpec or a '
+                "path to a specs/*.json file)"
+            )
+        spec = (
+            device_spec
+            if isinstance(device_spec, DeviceSpec)
+            else load_device_spec(device_spec)
+        )
+        # fail closed up front, not per-program: every priced body runs in
+        # the model's compute dtype
+        spec.peak_flops_for(compute_dtype)
+
+        def price(flops: float, hbm_bytes: float) -> float:
+            return spec.task_seconds(flops, hbm_bytes, compute_dtype)
+    else:
+
+        def price(flops: float, hbm_bytes: float) -> float:
+            return _roofline_seconds(flops, hbm_bytes, peak_flops, hbm_bw)
+
     S = staged.num_stages
     b, T, d = micro_batch_size, seq_len, cfg.d_model
     act_bytes = float(b * T * d * _dtype_bytes(cfg.dtype))
@@ -179,12 +237,10 @@ def calibrate_stage_costs(
             def fwd_fn(p, tok):
                 return staged.stage_hidden(p, staged.embed_tokens(p, tok))
 
-            fwd = _profile_compiled(
-                fwd_fn, (p_spec, tok_spec), peak_flops, hbm_bw, method
-            )
+            fwd = _profile_compiled(fwd_fn, (p_spec, tok_spec), price, method)
         else:
             fwd = _profile_compiled(
-                staged.stage_hidden, (p_spec, x_spec), peak_flops, hbm_bw, method
+                staged.stage_hidden, (p_spec, x_spec), price, method
             )
 
         if last:
@@ -215,8 +271,8 @@ def calibrate_stage_costs(
 
             bi_args = (p_spec, x_spec, x_spec)
             bw_args = (p_spec, x_spec, x_spec)
-        bwd_i = _profile_compiled(bwd_input_fn, bi_args, peak_flops, hbm_bw, method)
-        bwd_w = _profile_compiled(bwd_weight_fn, bw_args, peak_flops, hbm_bw, method)
+        bwd_i = _profile_compiled(bwd_input_fn, bi_args, price, method)
+        bwd_w = _profile_compiled(bwd_weight_fn, bw_args, price, method)
 
         # the saved_residual W body the engines actually run: replay B's
         # pullback from the slot's residual row — the dummy re-trace's
@@ -252,9 +308,7 @@ def calibrate_stage_costs(
                 return vjp_saved(dy)[0]
 
             bws_args = (p_spec, x_spec, x_spec, res_spec)
-        bwd_ws = _profile_compiled(
-            bwd_weight_saved_fn, bws_args, peak_flops, hbm_bw, method
-        )
+        bwd_ws = _profile_compiled(bwd_weight_saved_fn, bws_args, price, method)
 
         profiles.append(
             {
@@ -294,4 +348,12 @@ def calibrate_stage_costs(
         bwd_weight_saved_time=bwd_ws_t,
     )
     memory = MemoryModel(stages=specs, seq_len=seq_len)
-    return Calibration(costs=costs, memory=memory, profiles=profiles)
+    return Calibration(
+        costs=costs,
+        memory=memory,
+        profiles=profiles,
+        micro_batch_size=micro_batch_size,
+        dtype=compute_dtype,
+        device=spec.name if spec is not None else None,
+        limits=spec.limit_curve(S) if spec is not None else None,
+    )

@@ -25,9 +25,14 @@ stack consumes instead of ``StageCosts.uniform``), the matching per-stage
 enumeration admits under a per-stage memory-limit curve derived from the
 calibrated profile.
 
+``--calibrate --device-spec specs/<part>.json`` prices the same profile
+OFFLINE for a committed device spec (``method="spec"``) and runs the full
+enumerate+tune search on the derived costs — schedule selection for
+hardware this host doesn't have.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun_pipeline --config qwen2.5-14b \
-      --k 2 --microbatches 32 [--calibrate]
+      --k 2 --microbatches 32 [--calibrate [--device-spec specs/h100-sxm.json]]
 """
 
 import argparse
@@ -59,40 +64,115 @@ def _config(name: str):
     return get_arch(name).model
 
 
-def calibrate(config: str, S: int, b_mb: int, seq: int, out_dir: str) -> dict:
+def _tune_on_spec(cal, spec, S: int, b_mb: int) -> dict:
+    """The offline adaptive search on a spec-derived calibration: enumerate
+    candidates under the part's capacity curve and tune over a stable
+    network at its link bandwidth.  Deterministic — the laptop answer to
+    "what schedule would this config want on that hardware"."""
+    from repro.core import (
+        AutoTuner,
+        NetworkProfiler,
+        SearchSpace,
+        StableTrace,
+        enumerate_candidates,
+        uniform_network,
+    )
+
+    M = max(4 * S, 8)
+    B = M * b_mb
+    cands = enumerate_candidates(
+        S, B, cal.memory, cal.limits,
+        space=SearchSpace(
+            kinds=("kfkb", "zb_h1", "zb_h2", "zbv", "interleaved"),
+            virtual_degrees=(2,), max_k=2,
+            zb_policies=("double_remat", "saved_residual"),
+        ),
+    )
+
+    def costs_for(cand):
+        return cal.costs.scaled_to_microbatch(b_mb, cand.micro_batch_size)
+
+    net = uniform_network(
+        S, lambda: StableTrace(spec.link_bandwidth_bytes_per_s)
+    )
+    rec = AutoTuner(cands, costs_for, NetworkProfiler(net)).tune(0.0)
+    chosen = next(c for c in cands if c.name == rec.chosen)
+    return {
+        "global_batch": B,
+        "candidates": [c.name for c in cands],
+        "estimates": rec.estimates,
+        "chosen": {
+            "name": rec.chosen,
+            "kind": rec.chosen_kind,
+            "k": rec.chosen_k,
+            "b": chosen.micro_batch_size,
+            "extra_warmup": list(rec.chosen_extra_warmup),
+            "zb_policy": list(rec.chosen_zb_policy),
+        },
+    }
+
+
+def calibrate(
+    config: str, S: int, b_mb: int, seq: int, out_dir: str,
+    device_spec: str | None = None,
+) -> dict:
     """Calibrated per-stage profile of the config's REAL stage bodies.
 
     Reports the heterogeneous StageCosts (per-stage fwd/B/W roofline times,
     activation wire bytes), the per-stage memory footprint, and the warmup
     vector ``w[s]`` a per-stage limit curve with 25% activation headroom
     admits — the end-to-end input of the vector-w scheduling stack.
+
+    With ``device_spec`` (a ``specs/*.json`` path) the profile is priced
+    OFFLINE for that part (``method="spec"``): the limit curve becomes the
+    part's capacity, and the full adaptive search runs on the derived
+    costs — candidate enumeration + tuner over a stable network at the
+    spec's link bandwidth — answering "what schedule would this config
+    want on that hardware" without running on it.
     """
     from repro.core.calibrate import calibrate_stage_costs
     from repro.core.candidates import largest_admissible_warmup
 
     cfg = _config(config)
     staged = StagedModel.build(cfg, S)
-    cal = calibrate_stage_costs(staged, micro_batch_size=b_mb, seq_len=seq)
+    spec = None
+    if device_spec is not None:
+        from repro.core.devicespec import load_device_spec
+
+        spec = load_device_spec(device_spec)
+        cal = calibrate_stage_costs(
+            staged, micro_batch_size=b_mb, seq_len=seq,
+            method="spec", device_spec=spec,
+        )
+    else:
+        cal = calibrate_stage_costs(staged, micro_batch_size=b_mb, seq_len=seq)
     costs, mm = cal.costs, cal.memory
-    print(f"{config}: calibrated {S} stages at b={b_mb}, seq={seq}")
+    device_tag = f" on {spec.name}" if spec else ""
+    print(f"{config}: calibrated {S} stages at b={b_mb}, seq={seq}{device_tag}")
     print("stage |  fwd ms |  B ms |  W ms | W(SR) ms | wire MB")
     for row in cal.summary_rows():
         print("  ".join(f"{c:>7s}" for c in row))
-    # a per-stage limit curve: each stage's H1 peak plus 25% of its own
-    # activation working set — heterogeneity makes the admitted w[s] differ
     M = max(4 * S, 8)
     h1 = make_plan(S, M, spec=ScheduleSpec(kind="zb_h1"))
     base = mm.peak_bytes_per_stage(h1)
-    limits = [
-        p + 0.25 * mm.slot_bytes(s, b_mb, True) * S for s, p in enumerate(base)
-    ]
+    if spec is not None:
+        # the part's own capacity is the limit curve for offline pricing
+        limits = list(cal.limits)
+    else:
+        # a per-stage limit curve: each stage's H1 peak plus 25% of its own
+        # activation working set — heterogeneity makes the admitted w[s] differ
+        limits = [
+            p + 0.25 * mm.slot_bytes(s, b_mb, True) * S for s, p in enumerate(base)
+        ]
     w_vec = largest_admissible_warmup(S, M, 1, b_mb, 1, True, mm, limits, S - 1)
-    print(f"admitted warmup vector w[s] under the +25%-headroom curve: {w_vec}")
+    print(f"admitted warmup vector w[s] under the limit curve: {w_vec}")
     record = {
         "config": config,
         "stages": S,
         "micro_batch_size": b_mb,
         "seq": seq,
+        "device": cal.device,
+        "dtype": cal.dtype,
         "fwd_time": costs.fwd_time,
         "bwd_input_time": costs.bwd_input_time,
         "bwd_weight_time": costs.bwd_weight_time,
@@ -103,6 +183,13 @@ def calibrate(config: str, S: int, b_mb: int, seq: int, out_dir: str) -> dict:
         "limit_curve": limits,
         "admitted_warmup_vector": list(w_vec),
     }
+    if spec is not None:
+        record["tuned"] = _tune_on_spec(cal, spec, S, b_mb)
+        chosen = record["tuned"]["chosen"]
+        print(
+            f"on {spec.name}, the tuner picks {chosen['name']} "
+            f"(kind={chosen['kind']} k={chosen['k']} b={chosen['b']})"
+        )
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"{config}__S{S}_calibration.json")
     with open(path, "w") as f:
@@ -184,10 +271,18 @@ def main():
         help="profile the config's real stage bodies into heterogeneous "
              "StageCosts + per-stage MemoryModel instead of the engine dry-run",
     )
+    ap.add_argument(
+        "--device-spec", default=None, metavar="SPECS_JSON",
+        help="with --calibrate: price the profile offline for this "
+             "specs/*.json part (method='spec') and run the full "
+             "enumerate+tune search on the derived costs",
+    )
     args = ap.parse_args()
+    if args.device_spec and not args.calibrate:
+        ap.error("--device-spec requires --calibrate")
     if args.calibrate:
         calibrate(args.config, args.stages, args.batch // args.microbatches,
-                  args.seq, args.out)
+                  args.seq, args.out, device_spec=args.device_spec)
         return
     run(args.config, args.stages, args.microbatches, args.k, args.batch,
         args.seq, args.out)

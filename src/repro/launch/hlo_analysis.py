@@ -26,14 +26,19 @@ parse the optimized (post-SPMD) HLO text ourselves, trip-count-aware:
 Post-SPMD modules are per-device programs, so every number here is
 *per device*; roofline terms divide by per-chip peaks directly.
 
-Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
-~50 GB/s per ICI link.
+Hardware constants (TPU v5e, per brief: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s per ICI link) live in :mod:`repro.core.devicespec` — the one home
+of raw roofline numbers — and are re-exported here for back-compat.  Other
+parts are described by committed ``specs/*.json`` device-spec files, never
+by new constants (CI grep gate + ``tests/test_devicespec.py`` scan).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import re
+
+from repro.core.devicespec import HBM_BW, LINK_BW, PEAK_FLOPS
 
 __all__ = [
     "PEAK_FLOPS",
@@ -44,10 +49,6 @@ __all__ = [
     "parse_collectives",
     "roofline_terms",
 ]
-
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # bytes/s / chip
-LINK_BW = 50e9  # bytes/s / ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,

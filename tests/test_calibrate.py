@@ -92,3 +92,85 @@ def test_calibration_rejects_unknown_method():
     staged = StagedModel.build(_cfg(), 2)
     with pytest.raises(ValueError, match="unknown calibration method"):
         calibrate_stage_costs(staged, 1, 8, method="guess")
+
+
+def test_spec_method_requires_device_spec():
+    staged = StagedModel.build(_cfg(), 2)
+    with pytest.raises(ValueError, match="requires device_spec"):
+        calibrate_stage_costs(staged, 1, 8, method="spec")
+
+
+def test_spec_method_fails_closed_on_missing_dtype(calibration):
+    """The model computes in f32; a spec that only knows bf16 must refuse
+    (silently pricing with the wrong dtype's peak would corrupt every
+    derived cost)."""
+    from repro.core.devicespec import DeviceSpec, DeviceSpecError
+
+    staged, _ = calibration
+    bf16_only = DeviceSpec(
+        name="bf16-only", peak_flops={"bf16": 1e15},
+        hbm_bandwidth_bytes_per_s=1e12, memory_capacity_bytes=1e10,
+        link_bandwidth_bytes_per_s=1e11,
+    )
+    with pytest.raises(DeviceSpecError, match="no peak_flops entry for dtype 'f32'"):
+        calibrate_stage_costs(
+            staged, 2, 8, method="spec", device_spec=bf16_only
+        )
+
+
+def test_spec_method_reproduces_hlo_bit_for_bit(calibration):
+    """The acceptance contract: pricing through specs/tpu-v5e.json (the
+    reference spec encoding the legacy roofline constants — f32 peak set
+    equal to bf16's, zero latency, flat 1.0 derating) must reproduce
+    method="hlo" EXACTLY, float-for-float, and additionally carry the
+    spec extras (device identity + capacity limit curve)."""
+    import os
+
+    from repro.core.devicespec import spec_root
+
+    staged, hlo_cal = calibration
+    spec_path = os.path.join(spec_root(), "tpu-v5e.json")
+    spec_cal = calibrate_stage_costs(
+        staged, micro_batch_size=2, seq_len=8, method="spec",
+        device_spec=spec_path,
+    )
+    for field in ("fwd_time", "bwd_time", "bwd_input_time",
+                  "bwd_weight_time", "bwd_weight_saved_time",
+                  "fwd_bytes", "bwd_bytes"):
+        assert getattr(spec_cal.costs, field) == getattr(hlo_cal.costs, field)
+    assert spec_cal.memory.stages == hlo_cal.memory.stages
+    assert spec_cal.device == "tpu-v5e"
+    assert spec_cal.dtype == "f32"
+    assert spec_cal.limits == [16e9] * staged.num_stages
+    # the hlo-method calibration carries identity but no spec extras
+    assert hlo_cal.device is None and hlo_cal.limits is None
+    assert hlo_cal.dtype == "f32" and hlo_cal.micro_batch_size == 2
+
+
+def test_workload_capture_roundtrip_derives_identical_costs(calibration, tmp_path):
+    """Calibration -> WorkloadProfile -> JSON -> load -> derive must equal
+    deriving from the in-memory capture (the offline-portability loop)."""
+    import os
+
+    from repro.core.devicespec import (
+        WorkloadProfile,
+        derive_memory_model,
+        derive_stage_costs,
+        load_device_spec,
+        load_workload_profile,
+        spec_root,
+    )
+
+    _, cal = calibration
+    wl = WorkloadProfile.from_calibration(cal, name="tiny-capture")
+    path = tmp_path / "tiny-capture.json"
+    wl.save(str(path))
+    wl2 = load_workload_profile(str(path))
+    assert wl2 == wl
+    spec = load_device_spec(os.path.join(spec_root(), "tpu-v5e.json"))
+    c1, c2 = derive_stage_costs(wl, spec), derive_stage_costs(wl2, spec)
+    assert c1 == c2
+    # and the reference spec reproduces the hlo-priced seconds exactly
+    assert c1.fwd_time == cal.costs.fwd_time
+    assert c1.bwd_weight_saved_time == cal.costs.bwd_weight_saved_time
+    assert derive_memory_model(wl2).stages == cal.memory.stages
