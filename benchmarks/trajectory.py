@@ -27,8 +27,10 @@ a PINNED, fully seeded subset of the paper benchmarks —
 * **live plan-switch runtime** — the seeded Fig-10 regime run through
   ``PlanRuntime`` (real compiled steps, reference backend): kind-switch
   count, precompile hit rate on the tuner's candidate stream, warm-cache
-  switch latency as a fraction of one iteration (wall-clock), and the
-  probe overhead passive telemetry saves vs suspend-and-probe,
+  switch latency as a fraction of one iteration (wall-clock, median over
+  trace spans since PR 9), the probe overhead passive telemetry saves vs
+  suspend-and-probe, and (PR 9) the ``model_drift_ratio``
+  predicted-vs-observed gauge plus the flight-recorder decision count,
 * **coordinator fabric** — a two-host ``LocalTransport`` fleet driven
   through a scripted refusal (fleet-wide abort) and a committed warm
   switch: barrier verdict counts, the committed epoch's ready-vote count
@@ -119,6 +121,13 @@ GATES = {
     "runtime_precompile_hit_rate": ("higher", REL_TOL),
     "runtime_probe_overhead_saved_frac": ("higher", REL_TOL),
     "runtime_warm_switch_frac": ("lower", 0.5),
+    # observability (PR 9): the cost model must keep predicting iteration
+    # time — model_drift_ratio joins simulated iteration durations against
+    # the tuner's estimates (rolling median, source="sim" only, so it is
+    # deterministic: both sides are spec/cost arithmetic, no wall clock) —
+    # and the tuner decision trail must keep landing in the flight ring
+    "model_drift_ratio": ("lower", REL_TOL),
+    "tuner_decision_logged": ("higher", 0.0),
     # tuner trajectory (PR 6): the decision trail must keep crossing kinds
     "tuner_kind_diversity": ("higher", 0.0),
     # coordinator fabric (PR 6): the scripted two-host trail must keep its
@@ -143,7 +152,13 @@ GATES = {
 #: runner (or vice versa) on hardware difference alone; on a fingerprint
 #: mismatch they are reported but not gated.  Since PR 8 this guard covers
 #: exactly one gate (see the GATES note); ``sim_events_per_sec`` and
-#: ``fabric_barrier_latency_commit`` remain in the report but not in GATES
+#: ``fabric_barrier_latency_commit`` remain in the report but not in GATES.
+#: PR 9 de-flaked the surviving gate's *definition*: the fraction is now
+#: ``median(switch span) / median(iteration span)`` over the runtime's
+#: trace spans (``train_adaptive.warm_switch_frac_from_trace``) instead of
+#: a single max-switch / mean-iteration quotient — one slow outlier
+#: iteration or GC pause no longer swings the ratio.  The *spans* are
+#: still real host re-stacking time, so it stays fingerprint-guarded.
 WALL_CLOCK_METRICS = {
     "runtime_warm_switch_frac",
 }
@@ -506,6 +521,12 @@ def runtime_metrics(iterations: int = 14) -> dict:
         "runtime_probes_total": s["probe_rounds_total"],
         "runtime_probe_overhead_saved_frac": s["probe_overhead_saved_frac"],
         "runtime_grad_parity_max_err": grad_err,
+        # observability (PR 9): predicted-vs-observed model health + the
+        # flight-recorder decision trail (see the GATES note — both
+        # deterministic: the drift join is sim-sourced on both sides)
+        "model_drift_ratio": s["model_drift_ratio"],
+        "model_drift_samples": s["drift_samples"],
+        "tuner_decision_logged": s["tuner_decisions_logged"],
     }
 
 

@@ -51,6 +51,11 @@ class SimResult:
     task_finish: dict[tuple[int, int, int, int], float]
     queue_timeline: dict[int, list[tuple[float, int]]]  # stage -> (t, depth)
     link_busy: dict[tuple[int, int], float]
+    # per-transfer (start, finish, nbytes) in service order — what
+    # repro.obs.trace.render_simulated_trace turns into link tracks
+    link_events: dict[tuple[int, int], list[tuple[float, float, float]]] = (
+        dataclasses.field(default_factory=dict)
+    )
 
     @property
     def bubble_fraction(self) -> float:
@@ -67,6 +72,7 @@ class _Link:
         self.busy_until = 0.0
         self.active: TransferSpec | None = None
         self.total_busy = 0.0
+        self.events: list[tuple[float, float, float]] = []  # (start, finish, nbytes)
 
 
 class PipelineSimulator:
@@ -144,6 +150,7 @@ class PipelineSimulator:
         finish = link.trace.finish_time(start, xfer.nbytes)
         link.busy_until = finish
         link.total_busy += finish - start
+        link.events.append((start, finish, xfer.nbytes))
         self._push(finish, "xfer_done", (link_key, xfer))
 
     def run(self) -> SimResult:
@@ -188,6 +195,7 @@ class PipelineSimulator:
             task_finish=self.task_finish,
             queue_timeline=self.queue_timeline,
             link_busy={k: l.total_busy for k, l in self.links.items()},
+            link_events={k: l.events for k, l in self.links.items() if l.events},
         )
 
 

@@ -80,6 +80,10 @@ class TuningRecord:
     # coordinator scales the charged tuning_overhead accordingly
     probes_run: int = 0
     probes_skipped: int = 0
+    # every candidate that LOST this round: (name, estimated seconds, reason
+    # it was rejected) sorted by estimate — the flight recorder and tests
+    # assert *why* a spec won, not just that it did
+    rejected_candidates: tuple[tuple[str, float, str], ...] = ()
 
     @property
     def probe_fraction(self) -> float:
@@ -100,6 +104,8 @@ class AutoTuner:
         probes: int = 3,
         refine_weight_placement: bool = False,
         passive_staleness: float | None = None,
+        flight=None,
+        metrics=None,
     ) -> None:
         if not candidates:
             raise ValueError("no candidates to tune over")
@@ -115,6 +121,14 @@ class AutoTuner:
         # for it and read the window instead; None = always probe (paper
         # default).  Suspension is only paid for links that went stale.
         self.passive_staleness = passive_staleness
+        # observability (optional): every tune() appends a tuner_decision
+        # flight event carrying the full per-candidate score table, and the
+        # registry counts decisions/switches
+        self.flight = flight
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_decisions = metrics.counter("tuner_decisions_total")
+            self._m_switches = metrics.counter("tuner_switches_total")
         self._probes_run = 0
         self._probes_skipped = 0
         self.current: Candidate = candidates[0]
@@ -166,6 +180,25 @@ class AutoTuner:
             out[cand.name] = self.cost_model.estimate(cand.plan, costs, bw)
         return out
 
+    @staticmethod
+    def _rejections(
+        estimates: dict[str, float], best_name: str
+    ) -> tuple[tuple[str, float, str], ...]:
+        """The losers' score table: (name, estimate, why rejected), sorted
+        best-first so the runner-up reads first in dumps."""
+        best_est = estimates[best_name]
+        out = []
+        for name, est in sorted(estimates.items(), key=lambda kv: (kv[1], kv[0])):
+            if name == best_name:
+                continue
+            if est == best_est:
+                reason = f"tied at {est:.6g}s; {best_name!r} wins deterministic order"
+            else:
+                pct = 100.0 * (est - best_est) / best_est if best_est else float("inf")
+                reason = f"estimated {est:.6g}s, {pct:.1f}% slower than {best_name!r}"
+            out.append((name, est, reason))
+        return tuple(out)
+
     def tune(self, now: float) -> TuningRecord:
         estimates = self.evaluate(now)
         best_name = min(estimates, key=estimates.get)
@@ -197,6 +230,26 @@ class AutoTuner:
             chosen_spec=best.spec,
             probes_run=self._probes_run,
             probes_skipped=self._probes_skipped,
+            rejected_candidates=self._rejections(estimates, best_name),
         )
         self.history.append(rec)
+        if self.metrics is not None:
+            self._m_decisions.inc()
+            if switched:
+                self._m_switches.inc()
+        if self.flight is not None:
+            self.flight.record(
+                "tuner_decision",
+                time=now,
+                chosen=best.name,
+                chosen_estimate=estimates[best_name],
+                switched=switched,
+                estimates=dict(sorted(estimates.items())),
+                rejected=[
+                    {"name": n, "estimate": e, "reason": r}
+                    for n, e, r in rec.rejected_candidates
+                ],
+                probes_run=rec.probes_run,
+                probes_skipped=rec.probes_skipped,
+            )
         return rec

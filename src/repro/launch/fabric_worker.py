@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.data import SyntheticTextDataset
 from repro.launch.train_adaptive import fig10_parts
+from repro.obs import Observability
 from repro.optim import make_optimizer
 from repro.runtime.executor import PlanRuntime
 from repro.runtime.fabric import SocketTransport, WorkerAgent, fabric_probe_links
@@ -65,6 +66,7 @@ def build_worker(
     seq_len: int = 16,
     seed: int = 0,
     cache=None,
+    obs: Observability | None = None,
 ) -> WorkerAgent:
     """The host-side half of ``build_fabric_fleet``: same candidate
     universe, same init key, data shard picked by ``host_index``.
@@ -72,12 +74,15 @@ def build_worker(
     ``cache`` may be a :class:`CompiledStepCache` borrowed from another
     same-config runtime — reference-backend programs are pure functions of
     state/batch, so in-process tests share one cache across hosts to avoid
-    recompiling identical plans per host."""
+    recompiling identical plans per host.  ``obs`` (optional) receives this
+    host's iteration/switch spans (on ``{host}/*`` tracks), its barrier
+    participation instants, and the flight events the failure dump ships."""
     cfg, costs, cands, B = fig10_parts(num_stages, d_model=d_model)
     opt = make_optimizer("adamw", schedule=lambda s: jnp.float32(1e-3))
     runtime = PlanRuntime(
         cfg, num_stages, opt, global_batch=B, seq_len=seq_len,
         backend="reference", init_key=seed, cache=cache,
+        obs=obs, obs_track=host,
     )
     dataset = SyntheticTextDataset(cfg.vocab_size, seq_len, B, seed=seed + host_index)
 
@@ -89,6 +94,7 @@ def build_worker(
         host, runtime, transport, batch_fn,
         costs=costs, initial_spec=cands[0].spec,
         probe_links=fabric_probe_links(cands, lambda c: costs),
+        obs=obs,
     )
 
 
@@ -103,18 +109,34 @@ def main(argv=None) -> int:
     ap.add_argument("--seq-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write the result JSON here")
+    ap.add_argument(
+        "--trace", default=None, metavar="OUT.json",
+        help="write this host's Chrome/Perfetto trace here (its flight "
+        "ring goes to OUT.json.flight.json, and auto-dumps there on a "
+        "worker failure); merge per-host traces with "
+        "repro.obs.trace.merge_traces",
+    )
     args = ap.parse_args(argv)
 
     addr_host, _, addr_port = args.connect.rpartition(":")
     transport = SocketTransport((addr_host, int(addr_port)))
+    obs = None
+    if args.trace:
+        obs = Observability.create(flight_dump_path=args.trace + ".flight.json")
     agent = build_worker(
         args.host, args.host_index, transport,
         num_stages=args.stages, d_model=args.d_model,
-        seq_len=args.seq_len, seed=args.seed,
+        seq_len=args.seq_len, seed=args.seed, obs=obs,
     )
     try:
         results = agent.run(args.iterations)
+        # success: dump the ring anyway (a failure already auto-dumped with
+        # its own reason inside step(), which this must not overwrite)
+        if obs is not None:
+            obs.flight.dump(args.trace + ".flight.json", reason="run end")
     finally:
+        if obs is not None:
+            obs.trace.save(args.trace)
         agent.runtime.cache.shutdown()
         transport.close()
 

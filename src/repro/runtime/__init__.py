@@ -46,6 +46,15 @@ module                    role (paper anchor)
                           local ``PlanRuntime``, over in-process or TCP
                           transports (entry points: ``train_adaptive
                           --fabric N``, ``repro.launch.fabric_worker``).
+``repro.obs`` (sibling)   the observe half as a first-class layer: every
+                          module above records into its deterministic trace
+                          spans (Chrome/Perfetto export, predicted-vs-
+                          observed tracks), labeled metrics registry
+                          (``fabric_metrics()``/``CacheStats`` are now
+                          views over it), flight-recorder ring (tuner
+                          decisions, barrier transitions — auto-dumped on
+                          abort/failure), and ``model_drift_ratio`` gauge
+                          (see ``src/repro/obs/README.md``).
 ========================  ===================================================
 
 The compiled-step programs run either the single-device reference executor

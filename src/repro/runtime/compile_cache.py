@@ -34,6 +34,7 @@ import time
 from typing import Any, Callable, Iterable
 
 from repro.core.schedule import TabularPlan
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["CompiledEntry", "CacheStats", "CompiledStepCache"]
 
@@ -48,6 +49,10 @@ class CompiledEntry:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Back-compat aggregate view; the live counters are registry series
+    (``cache_*_total`` on :attr:`CompiledStepCache.metrics`) and
+    :attr:`CompiledStepCache.stats` materializes this dataclass from them."""
+
     gets: int = 0
     warm_hits: int = 0  # entry ready at get() time
     inflight_hits: int = 0  # background compile already running; get() joined it
@@ -67,6 +72,8 @@ class CompiledStepCache:
         self,
         program_factory: Callable[[TabularPlan], tuple[Callable, tuple]],
         max_workers: int = 1,
+        metrics: MetricsRegistry | None = None,
+        labels: dict[str, str] | None = None,
     ) -> None:
         self._factory = program_factory
         self._lock = threading.Lock()
@@ -75,7 +82,32 @@ class CompiledStepCache:
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="plan-precompile"
         )
-        self.stats = CacheStats()
+        self.metrics = metrics or MetricsRegistry()
+        # ``labels`` scope this cache's series on a SHARED registry (e.g. an
+        # in-process fleet labels per host track) so per-cache stats stay
+        # per-cache while every number lives in one place
+        self._labels = dict(labels or {})
+        self._gets = self.metrics.counter("cache_gets_total")
+        self._warm = self.metrics.counter("cache_warm_hits_total")
+        self._joined = self.metrics.counter("cache_inflight_hits_total")
+        self._cold = self.metrics.counter("cache_cold_misses_total")
+        self._requests = self.metrics.counter("cache_precompile_requests_total")
+        self._done = self.metrics.counter("cache_precompiled_total")
+        self._compile_s = self.metrics.histogram("cache_compile_seconds")
+
+    @property
+    def stats(self) -> CacheStats:
+        """Aggregate view assembled from the registry counters; the dataclass
+        shape (and ``dataclasses.asdict``-ability) is unchanged from when it
+        was mutable state."""
+        return CacheStats(
+            gets=int(self._gets.value(**self._labels)),
+            warm_hits=int(self._warm.value(**self._labels)),
+            inflight_hits=int(self._joined.value(**self._labels)),
+            cold_misses=int(self._cold.value(**self._labels)),
+            precompile_requests=int(self._requests.value(**self._labels)),
+            precompiled=int(self._done.value(**self._labels)),
+        )
 
     # -- identity -------------------------------------------------------------
 
@@ -114,8 +146,9 @@ class CompiledStepCache:
         with self._lock:
             self._entries[key] = entry
             self._inflight.pop(key, None)
-            if source == "precompile":
-                self.stats.precompiled += 1
+        self._compile_s.observe(entry.compile_seconds, source=source, **self._labels)
+        if source == "precompile":
+            self._done.inc(**self._labels)
         return entry
 
     def precompile(self, tables: Iterable[TabularPlan]) -> int:
@@ -127,30 +160,28 @@ class CompiledStepCache:
             with self._lock:
                 if key in self._entries or key in self._inflight:
                     continue
-                self.stats.precompile_requests += 1
                 fut = self._pool.submit(self._compile, table, "precompile")
                 self._inflight[key] = fut
                 submitted += 1
+            self._requests.inc(**self._labels)
         return submitted
 
     def get(self, table: TabularPlan) -> CompiledEntry:
         """The switch path: ready entry, else join the in-flight background
         compile, else compile synchronously (cold)."""
         key = self.plan_key(table)
+        self._gets.inc(**self._labels)
         with self._lock:
-            self.stats.gets += 1
             entry = self._entries.get(key)
-            if entry is not None:
-                self.stats.warm_hits += 1
-                return entry
-            fut = self._inflight.get(key)
-            if fut is not None:
-                self.stats.inflight_hits += 1
+            fut = None if entry is not None else self._inflight.get(key)
+        if entry is not None:
+            self._warm.inc(**self._labels)
+            return entry
         if fut is not None:
+            self._joined.inc(**self._labels)
             return fut.result()
         entry = self._compile(table, "demand")
-        with self._lock:
-            self.stats.cold_misses += 1
+        self._cold.inc(**self._labels)
         return entry
 
     def contains(self, table: TabularPlan) -> bool:

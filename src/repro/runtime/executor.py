@@ -55,6 +55,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.interfaces import TelemetrySink
 from repro.core.schedule import TabularPlan
 from repro.models.common import ModelConfig
+from repro.obs import Observability
 from repro.pipeline.engine import make_pipeline_step, reference_pipeline_grads
 from repro.pipeline.stage import StagedModel
 from repro.runtime.compile_cache import CompiledStepCache
@@ -177,6 +178,8 @@ class PlanRuntime:
         cache: CompiledStepCache | None = None,
         telemetry: TelemetrySink | None = None,
         init_key: int = 0,
+        obs: Observability | None = None,
+        obs_track: str = "runtime",
     ) -> None:
         if backend not in ("reference", "spmd"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -206,7 +209,14 @@ class PlanRuntime:
             # AOT-compiled against: stage-stacked leaves shard over the
             # stage axis, scalars replicate
             self.state = jax.device_put(self.state, self._state_sharding(1))
-        self.cache = cache or CompiledStepCache(self._program_for)
+        # a fresh cache joins the shared registry (series scoped by track so
+        # an in-process fleet's per-host stats stay per-host); a borrowed
+        # cache keeps whatever registry its owner gave it
+        self.cache = cache or CompiledStepCache(
+            self._program_for,
+            metrics=obs.metrics if obs is not None else None,
+            labels={"track": obs_track} if obs is not None else None,
+        )
         self.current_table: TabularPlan | None = None
         self._compiled = None
         # AOT-compiled re-stacking programs per (v_from, v_to): the warm
@@ -216,6 +226,15 @@ class PlanRuntime:
         self.switch_events: list[SwitchEvent] = []
         self.iterations: list[IterationResult] = []
         self.last_grads = None
+        # observability (optional): trace spans on "{obs_track}/switches" and
+        # "{obs_track}/iterations", registry series, flight plan_switch events
+        self.obs = obs
+        self.obs_track = obs_track
+        if obs is not None:
+            self._m_iters = obs.metrics.counter("runtime_iterations_total")
+            self._m_iter_s = obs.metrics.histogram("runtime_iteration_seconds")
+            self._m_switches = obs.metrics.counter("runtime_switches_total")
+            self._m_switch_s = obs.metrics.histogram("runtime_switch_seconds")
 
     # -- model/program plumbing ----------------------------------------------
 
@@ -346,6 +365,16 @@ class PlanRuntime:
         pays the synchronous compile (recorded separately so the warm
         latency the acceptance gate tracks is not polluted)."""
         warm = self.cache.contains(table)
+        sp = (
+            self.obs.trace.span(
+                f"{self.obs_track}/switches",
+                f"switch {table.plan.name}",
+                to_plan=table.plan.name,
+                warm=warm,
+            )
+            if self.obs is not None
+            else None
+        )
         t0 = time.perf_counter()
         entry = self.cache.get(table)
         t1 = time.perf_counter()
@@ -372,6 +401,23 @@ class PlanRuntime:
         self.current_table = table
         self._compiled = entry.compiled
         self.switch_events.append(event)
+        if self.obs is not None:
+            self.obs.trace.end_span(
+                sp,
+                from_plan=event.from_plan,
+                restacked=restacked,
+                iteration=event.iteration,
+            )
+            self._m_switches.inc(warm=str(warm).lower())
+            self._m_switch_s.observe(event.seconds, warm=str(warm).lower())
+            self.obs.flight.record(
+                "plan_switch",
+                iteration=event.iteration,
+                from_plan=event.from_plan,
+                to_plan=event.to_plan,
+                warm=warm,
+                restacked=restacked,
+            )
         return event
 
     # -- execution ------------------------------------------------------------
@@ -390,6 +436,16 @@ class PlanRuntime:
             sharding = self._data_sharding()
             tokens = jax.device_put(tokens, sharding)
             labels = jax.device_put(labels, sharding)
+        sp = (
+            self.obs.trace.span(
+                f"{self.obs_track}/iterations",
+                f"iter {len(self.iterations)} {plan.name}",
+                plan=plan.name,
+                index=len(self.iterations),
+            )
+            if self.obs is not None
+            else None
+        )
         t0 = time.perf_counter()
         state, loss, grads = self._compiled(self.state, tokens, labels)
         loss = jax.block_until_ready(loss)
@@ -404,6 +460,10 @@ class PlanRuntime:
             seconds=seconds,
         )
         self.iterations.append(result)
+        if self.obs is not None:
+            self.obs.trace.end_span(sp, loss=result.loss)
+            self._m_iters.inc(plan=plan.name)
+            self._m_iter_s.observe(seconds, plan=plan.name)
         if self.telemetry is not None:
             self.telemetry.publish_iteration(
                 index=result.index,

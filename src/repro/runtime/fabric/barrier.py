@@ -78,10 +78,13 @@ class SwitchBarrier:
     (one lock around the whole coordinator, see
     :class:`~repro.runtime.fabric.coordinator.CoordinatorServer`)."""
 
-    def __init__(self, hosts: tuple[str, ...]) -> None:
+    def __init__(self, hosts: tuple[str, ...], flight=None) -> None:
         if not hosts:
             raise ValueError("barrier needs at least one host")
         self.hosts = tuple(hosts)
+        # optional FlightRecorder: every PREPARE/vote/verdict transition is
+        # appended so an abort dump shows the whole epoch unfold
+        self.flight = flight
         self.phase = BarrierPhase.IDLE
         self.epoch = 0
         self.history: list[BarrierRecord] = []
@@ -109,6 +112,15 @@ class SwitchBarrier:
         self._begin_time = now
         self._votes = {}
         self._outcome = None
+        if self.flight is not None:
+            self.flight.record(
+                "barrier_begin",
+                epoch=self.epoch,
+                spec=str(spec),
+                boundary=boundary,
+                deadline=deadline,
+                now=now,
+            )
         return self.epoch
 
     def vote(self, v: ReadyVote, now: float) -> None:
@@ -122,6 +134,15 @@ class SwitchBarrier:
             # the vote is void; decide() will abort on the missing set
             return
         self._votes[v.host] = v
+        if self.flight is not None:
+            self.flight.record(
+                "barrier_vote",
+                epoch=self.epoch,
+                host=v.host,
+                ready=v.ready,
+                reason=v.reason,
+                now=now,
+            )
         self.decide(now)
 
     # -- phase 2 --------------------------------------------------------------
@@ -172,6 +193,15 @@ class SwitchBarrier:
                 votes=dict(self._votes),
             )
         )
+        if self.flight is not None:
+            self.flight.record(
+                "barrier_verdict",
+                epoch=self.epoch,
+                committed=committed,
+                reason=reason,
+                latency=now - self._begin_time,
+                votes=sorted(self._votes),
+            )
         return self._outcome
 
     def outcome_for(self, epoch: int, now: float) -> SwitchOutcome | None:

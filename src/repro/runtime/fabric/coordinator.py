@@ -40,6 +40,7 @@ from typing import Callable
 from repro.core.kinds import ScheduleSpec
 from repro.core.profiler import merge_link_samples
 from repro.core.tuner import AutoTuner
+from repro.obs import Observability
 from repro.runtime.fabric.barrier import BarrierPhase, SwitchBarrier
 from repro.runtime.fabric.messages import (
     OutcomePoll,
@@ -83,6 +84,7 @@ class CoordinatorServer:
         config: FabricConfig | None = None,
         clock: Callable[[], float] | None = None,
         decision_fn: Callable[["CoordinatorServer"], ScheduleSpec | None] | None = None,
+        obs: Observability | None = None,
     ) -> None:
         self.hosts = tuple(hosts)
         self.incumbent = initial_spec
@@ -94,7 +96,25 @@ class CoordinatorServer:
             raise ValueError(
                 f"telemetry_retention must be >= 1, got {self.config.telemetry_retention}"
             )
-        self.barrier = SwitchBarrier(self.hosts)
+        # observability: fabric_metrics()/telemetry_trace() read these
+        # registry series (the single metrics currency); barrier transitions
+        # and telemetry merges land in the flight ring, which auto-dumps on
+        # abort when a dump_path is configured.  A private bundle on the
+        # server's own clock is created when the caller doesn't supply one.
+        self.obs = obs or Observability.create(clock=self.clock)
+        m = self.obs.metrics
+        self._m_hosts = m.gauge("fabric_hosts")
+        self._m_hosts.set(len(self.hosts))
+        self._m_retention = m.gauge("fabric_telemetry_retention")
+        self._m_retention.set(self.config.telemetry_retention)
+        self._m_windows = m.gauge("fabric_telemetry_windows")
+        self._m_dropped = m.gauge("fabric_telemetry_rounds_dropped")
+        self._m_rounds = m.counter("fabric_telemetry_rounds_merged_total")
+        self._m_committed = m.counter("fabric_committed_switches_total")
+        self._m_aborted = m.counter("fabric_aborted_switches_total")
+        self._m_latency = m.histogram("fabric_barrier_latency_seconds")
+        self._epoch_spans: dict[int, object] = {}
+        self.barrier = SwitchBarrier(self.hosts, flight=self.obs.flight)
         self._lock = threading.Lock()
         # host -> resident windows (the RETAINED tail of the partitioned
         # telemetry trace — `_window_base` oldest merged rounds were dropped)
@@ -131,6 +151,7 @@ class CoordinatorServer:
             raise ValueError(f"telemetry from unknown host {win.host!r}")
         self.windows[win.host].append(win)
         self._merge_complete_rounds()
+        self._m_windows.set(sum(len(w) for w in self.windows.values()))
         self._maybe_decide(win.end_time)
         # deliver a pending PREPARE exactly once per host
         return self._pending_prepare.pop(win.host, None)
@@ -152,7 +173,15 @@ class CoordinatorServer:
                 per_host = {h: self.windows[h][r].samples for h in self.hosts}
                 merged = merge_link_samples(per_host, self.config.merge_policy)
                 self.tuner.net_profiler.record_samples(merged)
+            self.obs.flight.record(
+                "telemetry_merge",
+                round=self._rounds_merged,
+                iteration=self.windows[self.hosts[0]][r].iteration,
+                policy=self.config.merge_policy,
+                fed_tuner=self.tuner is not None,
+            )
             self._rounds_merged += 1
+            self._m_rounds.inc()
         self._compact_windows()
 
     def _compact_windows(self) -> None:
@@ -168,6 +197,7 @@ class CoordinatorServer:
         for h in self.hosts:
             del self.windows[h][:drop]
         self._window_base += drop
+        self._m_dropped.set(self._window_base)
 
     def _maybe_decide(self, now: float) -> None:
         if self.barrier.phase is BarrierPhase.PREPARING:
@@ -192,6 +222,18 @@ class CoordinatorServer:
                 self.decision_log.append(
                     {"t": now, "chosen": rec.chosen, "spec": rec.chosen_spec}
                 )
+                # the decision trail in the trace: winner + the full
+                # per-candidate score table (what Perfetto shows on click)
+                self.obs.trace.instant(
+                    "coordinator/tuner", f"decision {rec.chosen}",
+                    chosen=rec.chosen,
+                    estimates={k: rec.estimates[k] for k in sorted(rec.estimates)},
+                    rejected=[
+                        {"name": n, "estimate": e, "reason": r}
+                        for n, e, r in rec.rejected_candidates
+                    ],
+                    switched=rec.switched,
+                )
                 target = rec.chosen_spec
         if self.decision_fn is not None:
             # scripted override: the tuner (if any) still runs on its own
@@ -209,6 +251,13 @@ class CoordinatorServer:
             spec, boundary, deadline=wall + self.config.vote_timeout, now=wall
         )
         self._prepared_epoch_spec = spec
+        self._epoch_spans[epoch] = self.obs.trace.span(
+            "coordinator/barrier", f"barrier epoch {epoch}",
+            spec=str(spec), boundary=boundary,
+        )
+        self.obs.trace.instant(
+            "coordinator/barrier", f"PREPARE epoch {epoch}", spec=str(spec)
+        )
         cmd = PrepareSwitch(
             epoch=epoch, spec=spec, boundary=boundary,
             deadline=wall + self.config.vote_timeout,
@@ -228,6 +277,7 @@ class CoordinatorServer:
         """Apply a finished epoch to the server's own view of the fleet."""
         if self.barrier.phase is BarrierPhase.COMMITTED:
             self.incumbent = self._prepared_epoch_spec
+            self._record_verdict(committed=True)
             # the tuner's own current candidate already matches (it decided);
             # scripted mode has no tuner state to sync
             self.barrier.reset_for_next_epoch()
@@ -236,8 +286,30 @@ class CoordinatorServer:
         elif self.barrier.phase is BarrierPhase.ABORTED:
             # fleet-wide rollback: the incumbent simply stays; clear the
             # undelivered PREPAREs so stragglers never see a dead epoch
+            self._record_verdict(committed=False)
             self.barrier.reset_for_next_epoch()
             self._pending_prepare.clear()
+
+    def _record_verdict(self, committed: bool) -> None:
+        """Registry + trace bookkeeping for the epoch that just finished
+        (runs exactly once per epoch: the barrier is reset to IDLE right
+        after, so a second pass cannot reach here)."""
+        rec = self.barrier.history[-1]
+        verdict = "COMMIT" if committed else "ABORT"
+        (self._m_committed if committed else self._m_aborted).inc()
+        self._m_latency.observe(rec.latency)
+        sp = self._epoch_spans.pop(rec.epoch, None)
+        if sp is not None:
+            self.obs.trace.end_span(
+                sp, verdict=verdict, boundary=rec.boundary, reason=rec.reason
+            )
+        self.obs.trace.instant(
+            "coordinator/barrier", f"{verdict} epoch {rec.epoch}", reason=rec.reason
+        )
+        if not committed:
+            # post-mortem before any state unwinds: the ring holds the whole
+            # PREPARE -> vote -> ABORT trail that led here
+            self.obs.flight.auto_dump(f"barrier_abort epoch {rec.epoch}: {rec.reason}")
 
     # -- introspection ---------------------------------------------------------
 
@@ -250,17 +322,24 @@ class CoordinatorServer:
         return min(its) if its else -1
 
     def fabric_metrics(self) -> dict:
-        """The fabric's own health metrics (benchmarked + traced)."""
-        hist = self.barrier.history
+        """The fabric's own health metrics (benchmarked + traced).
+
+        The dict SHAPE is frozen for existing consumers
+        (``benchmarks/trajectory.py``, the distributed CI artifact); the
+        values are read back from the shared metrics registry, which is the
+        single currency these numbers live on now."""
+        committed = int(self._m_committed.value())
+        aborted = int(self._m_aborted.value())
+        latency = self._m_latency.value()
         return {
-            "hosts": len(self.hosts),
-            "telemetry_windows": sum(len(w) for w in self.windows.values()),
-            "telemetry_rounds_dropped": self._window_base,
-            "telemetry_retention": self.config.telemetry_retention,
-            "barrier_epochs": len(hist),
-            "committed_switches": self.barrier.committed_count,
-            "aborted_switches": self.barrier.aborted_count,
-            "barrier_latency_max": max((r.latency for r in hist), default=0.0),
+            "hosts": int(self._m_hosts.value()),
+            "telemetry_windows": int(self._m_windows.value()),
+            "telemetry_rounds_dropped": int(self._m_dropped.value()),
+            "telemetry_retention": int(self._m_retention.value()),
+            "barrier_epochs": committed + aborted,
+            "committed_switches": committed,
+            "aborted_switches": aborted,
+            "barrier_latency_max": latency.max if latency.count else 0.0,
             "incumbent": dataclasses.asdict(self.incumbent),
         }
 
@@ -303,4 +382,7 @@ class CoordinatorServer:
                 for r in self.barrier.history
             ],
             "metrics": self.fabric_metrics(),
+            # additive: the full registry snapshot (every labeled series the
+            # control plane maintains beyond the frozen metrics dict above)
+            "registry": self.obs.metrics.snapshot(),
         }

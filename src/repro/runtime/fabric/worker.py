@@ -42,6 +42,7 @@ from repro.core.kinds import ScheduleSpec
 from repro.core.profiler import LinkSample
 from repro.core.schedule import TabularPlan, make_plan
 from repro.core.taskgraph import StageCosts
+from repro.obs import Observability
 from repro.runtime.executor import IterationResult, PlanRuntime
 from repro.runtime.fabric.messages import (
     OutcomePoll,
@@ -87,8 +88,14 @@ class WorkerAgent:
         probe_links: tuple | None = None,
         poll_sleep: float = 0.01,
         max_poll_seconds: float = 300.0,
+        obs: Observability | None = None,
     ) -> None:
         self.host = host
+        # observability (optional): barrier participation instants on the
+        # "{host}/fabric" track, worker_* flight events, and an automatic
+        # flight dump if step() dies (the post-mortem the distributed CI
+        # job uploads)
+        self.obs = obs
         self.runtime = runtime
         self.transport = transport
         self.batch_fn = batch_fn
@@ -128,6 +135,11 @@ class WorkerAgent:
     # -- SwitchParticipant ------------------------------------------------------
 
     def prepare(self, cmd: PrepareSwitch) -> ReadyVote:
+        if self.obs is not None:
+            self.obs.trace.instant(
+                f"{self.host}/fabric", f"PREPARE epoch {cmd.epoch}",
+                spec=str(cmd.spec), boundary=cmd.boundary,
+            )
         t0 = time.perf_counter()
         try:
             table = self.resolve(cmd.spec)
@@ -137,20 +149,47 @@ class WorkerAgent:
         except Exception as e:  # vote no — aborting beats a broken fleet
             self._pending = cmd
             self._prepared_table = None
-            return ReadyVote(
+            vote = ReadyVote(
                 epoch=cmd.epoch, host=self.host, ready=False, reason=repr(e)
             )
+            self._record_vote(vote)
+            return vote
         self._pending = cmd
         self._prepared_table = table
-        return ReadyVote(
+        vote = ReadyVote(
             epoch=cmd.epoch,
             host=self.host,
             ready=True,
             precompile_seconds=time.perf_counter() - t0,
         )
+        self._record_vote(vote)
+        return vote
+
+    def _record_vote(self, vote: ReadyVote) -> None:
+        if self.obs is None:
+            return
+        self.obs.trace.instant(
+            f"{self.host}/fabric",
+            f"vote {'ready' if vote.ready else 'refuse'} epoch {vote.epoch}",
+            ready=vote.ready, reason=vote.reason,
+        )
+        self.obs.flight.record(
+            "worker_prepare", host=self.host, epoch=vote.epoch,
+            ready=vote.ready, reason=vote.reason,
+        )
 
     def apply_outcome(self, outcome: SwitchOutcome) -> None:
         self.applied_outcomes.append(outcome)
+        if self.obs is not None:
+            verdict = "COMMIT" if outcome.committed else "ABORT"
+            self.obs.trace.instant(
+                f"{self.host}/fabric", f"{verdict} epoch {outcome.epoch}",
+                reason=outcome.reason,
+            )
+            self.obs.flight.record(
+                "worker_outcome", host=self.host, epoch=outcome.epoch,
+                committed=outcome.committed, reason=outcome.reason,
+            )
         if outcome.committed:
             if self._prepared_table is None:  # committed epoch we refused?
                 raise RuntimeError(
@@ -209,7 +248,21 @@ class WorkerAgent:
 
     def step(self) -> IterationResult:
         """One fabric round: boundary check -> train one iteration -> ship
-        telemetry -> react to any piggybacked command."""
+        telemetry -> react to any piggybacked command.  A failure anywhere
+        in the round dumps the flight ring first (post-mortem), then
+        re-raises."""
+        try:
+            return self._step()
+        except Exception as e:
+            if self.obs is not None:
+                self.obs.flight.record(
+                    "worker_failure", host=self.host,
+                    iteration=self.iteration, error=repr(e),
+                )
+                self.obs.flight.auto_dump(f"worker_failure {self.host}: {e!r}")
+            raise
+
+    def _step(self) -> IterationResult:
         if self._pending is not None and self.iteration >= self._pending.boundary:
             self._poll_boundary()
         tokens, labels = self.batch_fn(self.iteration)

@@ -68,17 +68,29 @@ class IterationTiming:
 
 
 class TelemetryBus:
-    """Synchronous pub/sub for iteration timings (the per-iteration bus)."""
+    """Synchronous pub/sub for iteration timings (the per-iteration bus).
 
-    def __init__(self) -> None:
+    ``metrics`` (optional :class:`~repro.obs.metrics.MetricsRegistry`) makes
+    the bus self-reporting: every publish bumps
+    ``telemetry_published_total{source=...}`` and observes the iteration
+    length into ``telemetry_iteration_seconds{source=...}``."""
+
+    def __init__(self, metrics=None) -> None:
         self.history: list[IterationTiming] = []
         self._subscribers: list[Callable[[IterationTiming], None]] = []
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_published = metrics.counter("telemetry_published_total")
+            self._m_seconds = metrics.histogram("telemetry_iteration_seconds")
 
     def subscribe(self, fn: Callable[[IterationTiming], None]) -> None:
         self._subscribers.append(fn)
 
     def publish(self, timing: IterationTiming) -> None:
         self.history.append(timing)
+        if self.metrics is not None:
+            self._m_published.inc(source=timing.source)
+            self._m_seconds.observe(timing.seconds, source=timing.source)
         for fn in self._subscribers:
             fn(timing)
 

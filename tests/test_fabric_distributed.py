@@ -10,9 +10,13 @@ at the same boundary.
 
 The decision is scripted (``decision_fn``) so the switch trail is
 deterministic across machines; the telemetry -> tune path over the same
-barrier is proven in tier 1 (``tests/test_fabric.py``).  The coordinator's
-partitioned telemetry trace is written to ``$REPRO_FABRIC_TRACE`` (or a
-tmpdir) — CI's ``distributed`` job uploads it as an artifact.
+barrier is proven in tier 1 (``tests/test_fabric.py``).  Three artifacts
+come out for CI's ``distributed`` job to upload: the coordinator's
+partitioned telemetry trace (``$REPRO_FABRIC_TRACE``), the MERGED
+Chrome/Perfetto trace — coordinator barrier track + both worker processes'
+per-host tracks re-laned by :func:`repro.obs.trace.merge_traces`
+(``$REPRO_FABRIC_MERGED_TRACE``) — and the per-host flight-recorder dumps
+(``$REPRO_FABRIC_FLIGHT``).
 
 Marked slow: two cold worker processes each compile two tiny plans.
 """
@@ -26,6 +30,7 @@ import pytest
 
 from repro.launch.fabric_worker import build_worker, param_digest
 from repro.launch.train_adaptive import fig10_parts
+from repro.obs.trace import merge_traces, spans_by_track, validate_chrome_trace
 from repro.runtime.fabric import CoordinatorListener, CoordinatorServer, FabricConfig
 
 pytestmark = pytest.mark.slow
@@ -39,15 +44,21 @@ class _NullTransport:
         return None
 
 
-def _worker_cmd(port, host, index, out):
+def _worker_cmd(port, host, index, out, trace):
     return [
         sys.executable, "-m", "repro.launch.fabric_worker",
         "--connect", f"127.0.0.1:{port}",
         "--host", host, "--host-index", str(index),
         "--iterations", str(_ITERS),
         "--stages", "2", "--d-model", "8", "--seq-len", "16",
-        "--out", out,
+        "--out", out, "--trace", trace,
     ]
+
+
+def _artifact_path(env_var, default):
+    path = os.environ.get(env_var, default)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    return path
 
 
 def test_two_process_fleet_switches_once_and_matches_oracles(tmp_path):
@@ -65,9 +76,10 @@ def test_two_process_fleet_switches_once_and_matches_oracles(tmp_path):
     listener = CoordinatorListener(server).start()
     env = {**os.environ, "PYTHONPATH": os.path.join(_REPO, "src")}
     outs = {h: str(tmp_path / f"{h}.json") for h in server.hosts}
+    traces = {h: str(tmp_path / f"{h}_trace.json") for h in server.hosts}
     procs = [
         subprocess.Popen(
-            _worker_cmd(listener.port, h, i, outs[h]),
+            _worker_cmd(listener.port, h, i, outs[h], traces[h]),
             cwd=_REPO, env=env,
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
         )
@@ -120,11 +132,10 @@ def test_two_process_fleet_switches_once_and_matches_oracles(tmp_path):
         assert dg["leaves"] == dw["leaves"]
         assert dg["l2"] == pytest.approx(dw["l2"], rel=1e-6)
 
-    # the partitioned telemetry trace is the CI artifact
-    trace_path = os.environ.get(
+    # the partitioned telemetry trace is the first CI artifact
+    trace_path = _artifact_path(
         "REPRO_FABRIC_TRACE", str(tmp_path / "fabric_trace.json")
     )
-    os.makedirs(os.path.dirname(os.path.abspath(trace_path)), exist_ok=True)
     trace = server.telemetry_trace()
     with open(trace_path, "w") as f:
         json.dump(trace, f, indent=1)
@@ -133,3 +144,37 @@ def test_two_process_fleet_switches_once_and_matches_oracles(tmp_path):
     assert all(len(ws) == _ITERS for ws in trace["windows"].values())
     assert trace["barrier"][0]["committed"] is True
     assert set(trace["barrier"][0]["votes"]) == set(server.hosts)
+
+    # merged Chrome trace: the coordinator's barrier track + every worker
+    # process's own tracks, re-laned onto disjoint pid/tid ranges — the
+    # Perfetto-loadable post-mortem view of the whole fleet
+    payloads = [server.obs.trace.to_chrome_trace()]
+    for h in server.hosts:
+        with open(traces[h]) as f:
+            payloads.append(json.load(f))
+    merged = merge_traces(payloads)
+    validate_chrome_trace(merged)
+    tracks = set(spans_by_track(merged))
+    assert {"coordinator/barrier", "host0/iterations", "host1/iterations"} <= tracks
+    merged_path = _artifact_path(
+        "REPRO_FABRIC_MERGED_TRACE", str(tmp_path / "fabric_merged_trace.json")
+    )
+    with open(merged_path, "w") as f:
+        json.dump(merged, f, sort_keys=True, separators=(",", ":"))
+        f.write("\n")
+
+    # per-host flight dumps: each worker wrote its ring on clean shutdown
+    # (a failure would have auto-dumped with the failure's reason instead)
+    flights = {}
+    for h in server.hosts:
+        with open(traces[h] + ".flight.json") as f:
+            flights[h] = json.load(f)
+        assert flights[h]["schema"] == "repro.flight_recorder/1"
+        kinds = {e["kind"] for e in flights[h]["events"]}
+        assert {"plan_switch", "worker_prepare", "worker_outcome"} <= kinds
+    flight_path = _artifact_path(
+        "REPRO_FABRIC_FLIGHT", str(tmp_path / "fabric_flight.json")
+    )
+    with open(flight_path, "w") as f:
+        json.dump(flights, f, sort_keys=True, indent=1)
+        f.write("\n")
