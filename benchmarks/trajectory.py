@@ -43,6 +43,12 @@ a PINNED, fully seeded subset of the paper benchmarks —
   per-stage policy trail on a stage-0-tight limit curve, and (runtime
   suite) the compiled-HLO FLOP ratio of the two W bodies on real stage
   kernels — all deterministic,
+* **adaptive decode serving** (PR 10) — the seeded Fig-10 serving
+  scenario (``repro.launch.serve_adaptive``) head-to-head against the
+  static 1F1B decode baseline on identical seeds: p99 token-latency
+  ratio, the serve tuner's kind diversity, SLO attainment, and the
+  bursty-vs-exclusive regime-divergent ``ScheduleSpec`` choice — all on
+  the simulated clock, deterministic,
 
 — and writes them as schema-versioned ``BENCH_<tag>.json`` at the repo
 root.  The CI ``bench`` job (main only) runs ``--check``: against the most
@@ -145,6 +151,16 @@ GATES = {
     "saved_residual_gain_vs_double_remat": ("higher", REL_TOL),
     "sr_tuner_mixed_selected": ("higher", 0.0),
     "sr_w_flops_ratio_min": ("higher", REL_TOL),
+    # adaptive decode serving (PR 10): adaptive must keep beating the
+    # static 1F1B decode pipeline on p99 token latency under the seeded
+    # Fig-10 preemption regimes, the serve tuner's trail must keep
+    # crossing schedule kinds, SLO attainment must not regress, and the
+    # preempted-vs-exclusive regimes must keep choosing different specs —
+    # all simulated-clock deterministic
+    "serve_p99_ratio_vs_static_1f1b": ("higher", REL_TOL),
+    "serve_tuner_kind_diversity": ("higher", 0.0),
+    "serve_slo_attainment": ("higher", REL_TOL),
+    "serve_regime_divergent_choice": ("higher", 0.0),
 }
 
 #: wall-clock metrics only gate against a baseline recorded on a comparable
@@ -595,6 +611,44 @@ def fabric_metrics(iterations: int = 8) -> dict:
     }
 
 
+def serve_metrics() -> dict:
+    """Adaptive decode serving on the seeded Fig-10 serving scenario.
+
+    Definitions live in ``repro.launch.serve_adaptive`` (shared with the
+    entry point's JSON and the acceptance tests); everything runs on the
+    simulated clock — arrivals, network traces, and tick pricing are all
+    seeded — so every number is deterministic.  The import is local: the
+    serve package pulls in the model stack, and ``--skip-runtime`` must
+    stay light, but nothing here compiles a program (no engine attached).
+    """
+    from repro.launch.serve_adaptive import (
+        chosen_specs_by_regime,
+        compare_adaptive_static,
+    )
+
+    cmp = compare_adaptive_static(max_requests=60, regime="fig10", seed=0)
+    div = chosen_specs_by_regime(max_requests=24, seed=0)
+    a = cmp["adaptive"]
+    return {
+        "serve_p99_ratio_vs_static_1f1b": cmp["p99_ratio_vs_static"],
+        "serve_tuner_kind_diversity": cmp["kind_diversity"],
+        "serve_kinds_chosen": a["kinds_chosen"],
+        "serve_slo_attainment": cmp["slo_attainment"],
+        "serve_regime_divergent_choice": int(
+            div["bursty"]["majority"] != div["exclusive"]["majority"]
+        ),
+        "serve_regime_majorities": {
+            r: info["majority"] for r, info in div.items()
+        },
+        "serve_token_latency_p99_s": a["token_latency_p99"],
+        "serve_static_token_latency_p99_s": cmp["static"]["token_latency_p99"],
+        "serve_ttft_p99_s": a["ttft_p99"],
+        "serve_requests_completed": a["requests_completed"],
+        "serve_tokens_per_second": a["tokens_per_second"],
+        "serve_validated_tracks": cmp["no_overlap_tracks"],
+    }
+
+
 def collect(skip_runtime: bool = False) -> dict:
     metrics = {}
     metrics.update(fig2_ratios())
@@ -604,6 +658,7 @@ def collect(skip_runtime: bool = False) -> dict:
     metrics.update(tuner_switch_trace())
     metrics.update(device_spec_metrics())
     metrics.update(simulator_throughput())
+    metrics.update(serve_metrics())
     if not skip_runtime:
         metrics.update(runtime_metrics())
         metrics.update(fabric_metrics())

@@ -1,14 +1,25 @@
-"""Batched serving demo: prefill + KV-cache decode with greedy sampling.
+"""Adaptive serving demo: fused prefill, KV-cache decode, live retuning.
 
-Loads a reduced architecture from the assigned pool (default qwen2.5's
-smoke variant; any --arch works), "prefills" a batch of prompts, then
-decodes N tokens per request through ``serve_step`` — the same code path
-the decode_32k / long_500k dry-run shapes lower at production scale.
+Two layers, same models:
 
-Run:  PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
+1. **Model level** — a batch of prompts goes through the fused
+   full-sequence prefill (``api.prefill_with_cache``: one pass fills the
+   whole KV cache and emits the first token) and then per-token decode.
+   The old token-stepping prefill loop is kept only as the *oracle*: the
+   demo asserts the fused path matches it bitwise.
+2. **Serving level** — the same smoke model rides
+   :class:`repro.serve.ServeRuntime` with a :class:`repro.serve.ServeEngine`
+   backend: seeded bursty arrivals, continuous batching over fixed decode
+   slots, and the AutoTuner re-deciding the schedule (kind, k) live against
+   a preempted-network trace while compiled decode programs follow each
+   switch through the warm ``CompiledStepCache`` path.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch qwen2.5-14b
+CI:   REPRO_SMOKE=1 shrinks request/token counts.
 """
 
 import argparse
+import os
 import time
 
 import jax
@@ -17,7 +28,75 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import api
-from repro.training import make_serve_step
+
+
+def fused_prefill_demo(cfg, arch: str, B: int, P: int, N: int) -> None:
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+    # fused full-sequence prefill: one pass, cache filled, first token out
+    cache = api.init_cache(cfg, B, max_len=P + N)
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, c, tok: api.prefill_with_cache(p, cfg, c, {"tokens": tok})
+    )(params, cache, prompts)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    # oracle: token-stepping the same prompt must land in the same state
+    step = jax.jit(
+        lambda p, c, i, tok: api.decode_fn(p, cfg, c, i, {"tokens": tok})
+    )
+    ref_cache = api.init_cache(cfg, B, max_len=P + N)
+    for i in range(P):
+        ref_logits, ref_cache = step(params, ref_cache, i, prompts[:, i : i + 1])
+    np.testing.assert_array_equal(
+        np.asarray(logits), np.asarray(ref_logits), "fused prefill logits drifted"
+    )
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        cache,
+        ref_cache,
+    )
+
+    # greedy decode from the fused cache
+    generated = [tok]
+    t0 = time.time()
+    for i in range(P, P + N - 1):
+        logits, cache = step(params, cache, i, generated[-1][:, None])
+        generated.append(jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32))
+    t_decode = time.time() - t0
+    out = jnp.stack(generated, axis=1)
+
+    print(f"arch {arch} (smoke variant, family={cfg.family})")
+    print(f"fused prefill {P} tokens x {B} reqs: {t_prefill:.2f}s (matches token-stepping bitwise)")
+    print(f"decode  {N} tokens x {B} reqs: {t_decode:.2f}s "
+          f"({B * N / max(t_decode, 1e-9):.1f} tok/s)")
+    for b in range(min(B, 4)):
+        print(f"  req{b}: {np.asarray(out[b])[:12]} ...")
+    assert out.shape == (B, N)
+    assert not bool(jnp.isnan(out).any())
+
+
+def adaptive_serving_demo(cfg, requests: int) -> None:
+    from repro.launch.serve_adaptive import build_serve_scenario
+    from repro.serve import ServeEngine
+
+    engine = ServeEngine(cfg, num_stages=4, max_slots=8, max_len=80)
+    sc = build_serve_scenario(seed=0, adaptive=True, engine=engine)
+    summary = sc.runtime.run(requests)
+    print(f"served {summary['requests_completed']} requests, "
+          f"{summary['tokens']} real tokens, "
+          f"{summary['ticks']} ticks (sim {summary['sim_time']:.2f}s)")
+    print(f"ttft p99 {summary['ttft_p99'] * 1e3:.1f} ms, "
+          f"token latency p99 {summary['token_latency_p99'] * 1e3:.1f} ms, "
+          f"slo attainment {summary['slo_attainment']:.2f}")
+    print(f"kinds chosen live: {summary['kinds_chosen']}")
+    rid, toks = next(iter(sorted(engine.outputs.items())))
+    print(f"  req{rid} generated token ids: {toks[:12]} ...")
+    assert summary["requests_completed"] >= requests
+    assert all(len(t) >= 1 for t in engine.outputs.values())
 
 
 def main():
@@ -26,57 +105,18 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=12)
     args = ap.parse_args()
+    if os.environ.get("REPRO_SMOKE"):
+        args.new_tokens = min(args.new_tokens, 8)
+        args.requests = min(args.requests, 6)
 
     spec = get_arch(args.arch)
     cfg = spec.smoke
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("this demo drives text decode; pick a text arch")
-    B, P, N = args.batch, args.prompt_len, args.new_tokens
-    params = api.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
-
-    # prefill: feed prompt tokens through decode steps to fill the cache
-    # (production prefill uses the fused full-sequence path; token-stepping
-    # keeps this demo dependency-free and exercises the cache exactly)
-    cache = api.init_cache(cfg, B, max_len=P + N)
-    serve = make_serve_step(
-        lambda p, c, i, tokens: api.decode_fn(p, cfg, c, i, {"tokens": tokens}),
-        temperature=args.temperature,
-    )
-    jit_serve = jax.jit(serve)
-
-    t0 = time.time()
-    tok = None
-    for i in range(P):
-        tok, cache = jit_serve(params, cache, i, {"tokens": prompts[:, i : i + 1]})
-    t_prefill = time.time() - t0
-
-    generated = [tok]
-    t0 = time.time()
-    for i in range(P, P + N - 1):
-        tok, cache = jit_serve(params, cache, i, {"tokens": generated[-1][:, None]})
-        generated.append(tok)
-    t_decode = time.time() - t0
-    out = jnp.stack(generated, axis=1)
-
-    print(f"arch {args.arch} (smoke variant, family={cfg.family})")
-    print(f"prefill {P} tokens x {B} reqs: {t_prefill:.2f}s")
-    print(f"decode  {N} tokens x {B} reqs: {t_decode:.2f}s "
-          f"({B * N / max(t_decode, 1e-9):.1f} tok/s)")
-    print("sample continuations (token ids):")
-    for b in range(B):
-        print(f"  req{b}: {np.asarray(out[b])[:12]} ...")
-    assert out.shape == (B, N)
-    assert not bool(jnp.isnan(out).any())
-    # greedy decode is deterministic: same prompt -> same continuation
-    if args.temperature == 0.0 and B >= 2:
-        cache2 = api.init_cache(cfg, B, max_len=P + N)
-        for i in range(P):
-            tok2, cache2 = jit_serve(params, cache2, i, {"tokens": prompts[:, i : i + 1]})
-        np.testing.assert_array_equal(np.asarray(tok2), np.asarray(generated[0]))
+    fused_prefill_demo(cfg, args.arch, args.batch, args.prompt_len, args.new_tokens)
+    adaptive_serving_demo(cfg, args.requests)
     print("serve demo OK")
 
 

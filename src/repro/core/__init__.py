@@ -13,7 +13,12 @@ from repro.core.candidates import (
     enumerate_candidates,
     largest_admissible_warmup,
 )
-from repro.core.coordinator import Coordinator, IterationRecord, RunSummary
+from repro.core.coordinator import (
+    Coordinator,
+    IterationRecord,
+    RunSummary,
+    shifted_network,
+)
 from repro.core.costmodel import CostModel, closed_form_1f1b_length, link_probe_specs
 from repro.core.devicespec import (
     DeviceSpec,
@@ -91,6 +96,7 @@ __all__ = [
     "enumerate_candidates",
     "largest_admissible_warmup",
     "Coordinator",
+    "shifted_network",
     "IterationRecord",
     "RunSummary",
     "IterationHook",

@@ -48,7 +48,7 @@ from repro.core.network import Network
 from repro.core.simulator import simulate_plan
 from repro.core.tuner import AutoTuner, TuningRecord
 
-__all__ = ["IterationRecord", "RunSummary", "Coordinator"]
+__all__ = ["IterationRecord", "RunSummary", "Coordinator", "shifted_network"]
 
 
 @dataclasses.dataclass
@@ -94,11 +94,18 @@ class _ShiftedTrace:
         return self.base.mean_bw(self.t0 + a, self.t0 + b)
 
 
-def _shifted_network(net: Network, t0: float) -> Network:
+def shifted_network(net: Network, t0: float) -> Network:
+    """The network as seen from absolute simulated time ``t0`` — what lets a
+    driver evaluate ``simulate_plan`` (which runs at t=0) mid-regime.  Shared
+    by the training coordinator's iteration loop and the serve runtime's tick
+    loop."""
     return Network(
         default=_ShiftedTrace(net.default, t0),
         links={k: _ShiftedTrace(v, t0) for k, v in net.links.items()},
     )
+
+
+_shifted_network = shifted_network  # internal callers predate the public name
 
 
 class _CallableHook:

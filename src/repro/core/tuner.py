@@ -84,6 +84,10 @@ class TuningRecord:
     # it was rejected) sorted by estimate — the flight recorder and tests
     # assert *why* a spec won, not just that it did
     rejected_candidates: tuple[tuple[str, float, str], ...] = ()
+    # with a custom objective (serving: SLO-weighted makespan under arrival
+    # pressure) the argmin runs over these scores while `estimates` keeps the
+    # raw makespans; None when the default makespan objective decided
+    objective_scores: dict[str, float] | None = None
 
     @property
     def probe_fraction(self) -> float:
@@ -106,6 +110,7 @@ class AutoTuner:
         passive_staleness: float | None = None,
         flight=None,
         metrics=None,
+        objective: Callable[[Candidate, float, float], float] | None = None,
     ) -> None:
         if not candidates:
             raise ValueError("no candidates to tune over")
@@ -121,6 +126,13 @@ class AutoTuner:
         # for it and read the window instead; None = always probe (paper
         # default).  Suspension is only paid for links that went stale.
         self.passive_staleness = passive_staleness
+        # optional decision objective: score = objective(candidate,
+        # makespan_estimate, now); the argmin runs over scores instead of raw
+        # makespans.  The serving stack uses this for SLO-weighted selection
+        # (latency-penalize deep grouping when the queue is slack, pure
+        # throughput under arrival pressure); None keeps the paper's
+        # makespan-argmin behaviour bit-for-bit.
+        self.objective = objective
         # observability (optional): every tune() appends a tuner_decision
         # flight event carrying the full per-candidate score table, and the
         # registry counts decisions/switches
@@ -201,7 +213,14 @@ class AutoTuner:
 
     def tune(self, now: float) -> TuningRecord:
         estimates = self.evaluate(now)
-        best_name = min(estimates, key=estimates.get)
+        if self.objective is not None:
+            scores = {
+                c.name: self.objective(c, estimates[c.name], now)
+                for c in self.candidates
+            }
+        else:
+            scores = estimates
+        best_name = min(scores, key=scores.get)
         best = next(c for c in self.candidates if c.name == best_name)
         switched = best is not self.current
         self.current = best
@@ -230,7 +249,10 @@ class AutoTuner:
             chosen_spec=best.spec,
             probes_run=self._probes_run,
             probes_skipped=self._probes_skipped,
-            rejected_candidates=self._rejections(estimates, best_name),
+            # losers ranked by the deciding scores (SLO-weighted when an
+            # objective is set), so "why it lost" matches why it lost
+            rejected_candidates=self._rejections(scores, best_name),
+            objective_scores=dict(scores) if self.objective is not None else None,
         )
         self.history.append(rec)
         if self.metrics is not None:

@@ -33,6 +33,7 @@ __all__ = [
     "init_cache",
     "cache_specs",
     "decode_fn",
+    "prefill_with_cache",
 ]
 
 
@@ -88,6 +89,23 @@ def prefill_fn(params, cfg: ModelConfig, batch: Mapping[str, jax.Array]):
         return logits
     logits, _ = tf.decoder_forward(params, cfg, batch["tokens"], last_only=True)
     return logits
+
+
+def prefill_with_cache(
+    params, cfg: ModelConfig, cache, batch: Mapping[str, jax.Array]
+):
+    """Fused prefill that also fills the decode cache in one pass.
+
+    The serving entry point: ``(logits [B,1,V], cache)`` ready for
+    ``decode_fn`` at ``index = T``.  Text families (dense/moe/ssm/hybrid)
+    only — enc-dec threads encoder memory explicitly and vlm threads
+    M-RoPE positions; neither is a serving path here.
+    """
+    if cfg.family in ("encdec", "vlm"):
+        raise NotImplementedError(
+            f"prefill_with_cache does not support family {cfg.family!r}"
+        )
+    return tf.prefill_with_cache(params, cfg, cache, tokens=batch["tokens"])
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):

@@ -3,6 +3,9 @@
 Three entry points used by the assembly code:
 
 * ``attn_train``   — full-sequence causal (or bidirectional) attention.
+* ``attn_prefill`` — full-sequence attention that ALSO fills the decode KV
+  cache (one fused pass replaces T single-token steps — the serving
+  prefill path).
 * ``attn_decode``  — single-token decode against a pre-filled KV cache
   (``jax.lax.dynamic_update_slice`` in-place cache update).
 * ``cross_attn``   — encoder-decoder cross attention (seamless backbone).
@@ -33,6 +36,7 @@ __all__ = [
     "attn_init",
     "cross_attn_init",
     "attn_train",
+    "attn_prefill",
     "attn_decode",
     "chunked_attention",
     "cross_attn",
@@ -217,6 +221,35 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int | None
         "k": jnp.zeros(shape, cfg.dtype),
         "v": jnp.zeros(shape, cfg.dtype),
     }
+
+
+def attn_prefill(p, x, cache, cfg: ModelConfig, *, window: int | None = None):
+    """Full-sequence prefill that fills the decode KV cache in one pass.
+
+    x: [B, T, d].  Returns (out [B, T, d], new_cache) with the cache in
+    exactly the state T successive :func:`attn_decode` calls at indices
+    ``0..T-1`` would leave it: slots ``i % L`` hold the last ``min(T, L)``
+    tokens' projections, so the next decode call runs at ``index=T``.
+    Attention itself is the fused ``attn_train`` math (one sdpa over the
+    causal/windowed mask), not T bandwidth-bound single-token gathers.
+    """
+    B, T, _ = x.shape
+    positions = jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    mask = _causal_window_mask(T, T, window, causal=True)
+    out = sdpa(q, k, v, mask)
+    L = cache["k"].shape[1]
+    kc = k.astype(cache["k"].dtype)
+    vc = v.astype(cache["v"].dtype)
+    if T <= L:
+        new_k = cache["k"].at[:, :T].set(kc)
+        new_v = cache["v"].at[:, :T].set(vc)
+    else:
+        # ring buffer: only the last L tokens survive T sequential writes
+        idx = jnp.arange(T - L, T) % L
+        new_k = cache["k"].at[:, idx].set(kc[:, T - L :])
+        new_v = cache["v"].at[:, idx].set(vc[:, T - L :])
+    return dense(p["wo"], _merge_heads(out), cfg), {"k": new_k, "v": new_v}
 
 
 def attn_decode(p, x, cache, index, cfg: ModelConfig, *, window: int | None = None):

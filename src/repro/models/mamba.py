@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.models.common import ModelConfig
 from repro.models.layers import rmsnorm
 
-__all__ = ["mamba_init", "mamba_train", "mamba_decode", "init_ssm_cache"]
+__all__ = ["mamba_init", "mamba_train", "mamba_prefill", "mamba_decode", "init_ssm_cache"]
 
 
 def _dims(cfg: ModelConfig):
@@ -113,6 +113,25 @@ def init_ssm_cache(cfg: ModelConfig, batch: int):
         "state": jnp.zeros((batch, H, P, N), jnp.float32),
         "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in + 2 * G * N), cfg.dtype),
     }
+
+
+def mamba_prefill(p, x, cache, cfg: ModelConfig):
+    """Full-sequence prefill of the recurrent state in ONE compiled program.
+
+    x: [B, T, d] -> (y [B, T, d], new cache).  A ``lax.scan`` of the
+    one-token recurrence over time — bitwise-equal to stepping
+    :func:`mamba_decode` token by token, but fused so serving prefill
+    compiles and dispatches once instead of T times.  (The chunked-SSD
+    train path cannot substitute here: it does not expose the final
+    recurrent state the decode loop needs.)
+    """
+
+    def step(c, xt):
+        y, nc = mamba_decode(p, xt[:, None], c, cfg)
+        return nc, y[:, 0]
+
+    new_cache, ys = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), new_cache
 
 
 def mamba_decode(p, x, cache, cfg: ModelConfig):

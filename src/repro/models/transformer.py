@@ -46,6 +46,8 @@ __all__ = [
     "decoder_loss",
     "init_decode_cache",
     "decode_step",
+    "apply_layer_prefill",
+    "prefill_with_cache",
     "init_encdec",
     "encdec_forward",
     "encdec_loss",
@@ -295,6 +297,57 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
 
         cache["blocks"] = jax.vmap(one_block)(jnp.arange(st.n_blocks))
     return cache
+
+
+def apply_layer_prefill(p, x, cache, cfg: ModelConfig, spec: LayerSpec):
+    """Full-sequence layer forward that also fills the layer's decode cache
+    (self-attention/SSM families only — no cross attention)."""
+    h = norm_apply(p["ln1"], x, cfg)
+    new_cache = dict(cache)
+    if spec.kind == "attn":
+        h, new_kv = attn.attn_prefill(p["attn"], h, cache["kv"], cfg, window=spec.window)
+        new_cache["kv"] = new_kv
+    else:
+        h, new_ssm = mamba_mod.mamba_prefill(p["mamba"], h, cache["ssm"], cfg)
+        new_cache["ssm"] = new_ssm
+    x = x + h
+    delta, _ = _ffn(p, x, cfg, spec)
+    return x + delta, new_cache
+
+
+def prefill_with_cache(params, cfg: ModelConfig, cache, tokens=None, embeds=None):
+    """Fused serving prefill: one forward pass over the whole prompt fills
+    every layer's decode cache AND returns the last position's logits.
+
+    tokens [B, T] (or embeds [B, T, d]).  Returns (logits [B, 1, V],
+    new_cache); the next :func:`decode_step` runs at ``index = T``.  This
+    replaces the T-step token-by-token cache warmup the serving example used
+    to do — same cache contents (see ``attn_prefill`` / ``mamba_prefill``),
+    one compile and one dispatch instead of T.
+    """
+    st = structure(cfg)
+    x = constrain_hidden(_hidden_from_inputs(params, cfg, tokens, embeds), cfg)
+    new_prefix = []
+    for p, spec, c in zip(params["prefix"], st.prefix, cache["prefix"]):
+        x, nc = apply_layer_prefill(p, x, c, cfg, spec)
+        x = constrain_hidden(x, cfg)
+        new_prefix.append(nc)
+    new_cache = {"prefix": new_prefix}
+    if st.n_blocks:
+        def block_step(x, scanned):
+            block_params, block_cache = scanned
+            new_bc = []
+            for i, spec in enumerate(st.pattern):
+                x, nc = apply_layer_prefill(block_params[i], x, block_cache[i], cfg, spec)
+                x = constrain_hidden(x, cfg)
+                new_bc.append(nc)
+            return x, new_bc
+
+        x, new_blocks = jax.lax.scan(block_step, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+    x = norm_apply(params["final_norm"], x[:, -1:, :], cfg)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, index, tokens=None, embeds=None):

@@ -15,15 +15,22 @@ Model (deliberately Prometheus-shaped, stdlib-only):
 * a **gauge** is set to the current value (``model_drift_ratio``,
   ``telemetry_windows`` — resident count, falls on compaction),
 * a **histogram** records observations and exposes
-  count/sum/min/max/mean (``barrier_latency_seconds``).
+  count/sum/min/max/mean (``barrier_latency_seconds``); registered with
+  ``buckets=`` (ascending upper bounds) it additionally keeps per-bucket
+  counts and answers :meth:`HistogramValue.quantile` — the single p50/p99
+  implementation the serve SLO tracker, the bench gates and the tests all
+  read instead of each re-deriving bucket math.
 
 Series are keyed by ``(name, frozen-labels)``; :meth:`MetricsRegistry.snapshot`
 returns a flat deterministic dict and :meth:`MetricsRegistry.delta` diffs two
 snapshots (counters/histograms subtract, gauges take the newer value).
+Bucketed histograms keep the same four-suffix snapshot shape as unbucketed
+ones — buckets exist for quantiles, not for export bloat.
 """
 
 from __future__ import annotations
 
+import bisect
 import threading
 from dataclasses import dataclass, field
 
@@ -53,12 +60,22 @@ def _series_name(name: str, key: _LabelKey) -> str:
 
 @dataclass
 class HistogramValue:
-    """Aggregate view of one histogram series."""
+    """Aggregate view of one histogram series.
+
+    With ``buckets`` (ascending upper bounds) each observation also lands in
+    a bucket count (one extra overflow bucket past the last bound), which is
+    what :meth:`quantile` interpolates over."""
 
     count: int = 0
     sum: float = 0.0
     min: float = float("inf")
     max: float = float("-inf")
+    buckets: tuple[float, ...] | None = None
+    bucket_counts: list[int] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.buckets is not None and not self.bucket_counts:
+            self.bucket_counts = [0] * (len(self.buckets) + 1)
 
     @property
     def mean(self) -> float:
@@ -71,6 +88,39 @@ class HistogramValue:
             self.min = value
         if value > self.max:
             self.max = value
+        if self.buckets is not None:
+            self.bucket_counts[bisect.bisect_left(self.buckets, value)] += 1
+
+    def quantile(self, q: float) -> float:
+        """Quantile estimate by linear interpolation inside the landing
+        bucket (Prometheus-style), clamped to the observed [min, max] so a
+        coarse top bucket cannot report a latency nobody saw.  Requires the
+        series to have been registered with ``buckets=``."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.buckets is None:
+            raise ValueError(
+                "quantile() needs a bucketed histogram — register it with "
+                "histogram(name, buckets=(...))"
+            )
+        if not self.count:
+            return 0.0
+        rank = q * self.count
+        cum = 0.0
+        for i, n in enumerate(self.bucket_counts):
+            if not n:
+                continue
+            if cum + n >= rank:
+                lo = self.buckets[i - 1] if i > 0 else self.min
+                hi = self.buckets[i] if i < len(self.buckets) else self.max
+                lo = max(lo, self.min)
+                hi = min(hi, self.max)
+                if hi <= lo:
+                    return min(max(lo, self.min), self.max)
+                frac = (rank - cum) / n
+                return min(max(lo + frac * (hi - lo), self.min), self.max)
+            cum += n
+        return self.max
 
 
 class _Instrument:
@@ -121,11 +171,15 @@ class Histogram(_Instrument):
         v = self._registry._get(self.name, _labelkey(labels), None)
         return v if isinstance(v, HistogramValue) else HistogramValue()
 
+    def quantile(self, q: float, **labels) -> float:
+        return self.value(**labels).quantile(q)
+
 
 @dataclass
 class _Series:
     kind: str
     values: dict = field(default_factory=dict)  # _LabelKey -> float | HistogramValue
+    buckets: tuple[float, ...] | None = None  # histogram series only
 
 
 class MetricsRegistry:
@@ -160,8 +214,33 @@ class MetricsRegistry:
     def gauge(self, name: str) -> Gauge:
         return self._instrument(Gauge, name)
 
-    def histogram(self, name: str) -> Histogram:
-        return self._instrument(Histogram, name)
+    def histogram(self, name: str, buckets=None) -> Histogram:
+        """``buckets``: optional strictly-ascending upper bounds enabling
+        :meth:`Histogram.quantile`.  One name, one meaning: re-registering
+        with *different* buckets raises; re-registering with ``None``
+        inherits the existing boundaries."""
+        if buckets is not None:
+            buckets = tuple(float(b) for b in buckets)
+            if list(buckets) != sorted(set(buckets)):
+                raise ValueError(
+                    f"histogram {name!r} buckets must be strictly ascending: {buckets}"
+                )
+        handle = self._instrument(Histogram, name)
+        with self._lock:
+            series = self._series[name]
+            if buckets is not None:
+                if series.buckets is not None and series.buckets != buckets:
+                    raise ValueError(
+                        f"histogram {name!r} already registered with buckets "
+                        f"{series.buckets}, requested {buckets}"
+                    )
+                if series.buckets is None and series.values:
+                    raise ValueError(
+                        f"histogram {name!r} already has bucketless observations; "
+                        "register buckets before the first observe()"
+                    )
+                series.buckets = buckets
+        return handle
 
     # -- storage (called by instrument handles) -------------------------------
 
@@ -179,7 +258,9 @@ class MetricsRegistry:
             values = self._series[name].values
             hist = values.get(key)
             if hist is None:
-                hist = values[key] = HistogramValue()
+                hist = values[key] = HistogramValue(
+                    buckets=self._series[name].buckets
+                )
             hist.observe(value)
 
     def _get(self, name: str, key: _LabelKey, default):

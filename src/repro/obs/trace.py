@@ -36,11 +36,12 @@ import dataclasses
 import json
 import threading
 import time
-from typing import Any, Callable
+from typing import Callable
 
 __all__ = [
     "Span",
     "TraceRecorder",
+    "quantize_sim_span",
     "render_simulated_trace",
     "merge_traces",
     "spans_by_track",
@@ -50,6 +51,22 @@ __all__ = [
 ]
 
 _US = 1e6  # seconds -> microseconds (Chrome's trace-event unit)
+
+
+def quantize_sim_span(start_s: float, dur_s: float) -> tuple[float, float]:
+    """Snap a simulated span onto the export grid so touching spans stay
+    touching.
+
+    The exporter rounds ``ts`` and ``dur`` to 3 decimals (of µs)
+    independently, so two spans whose float endpoints coincide exactly can
+    come out 0.001 µs overlapped — tripping :func:`validate_no_overlap`.
+    Quantizing both endpoints first and deriving the duration from the
+    quantized pair makes ``ts + dur`` land exactly on the successor's ``ts``
+    whenever the un-quantized floats did.
+    """
+    start_us = round(start_s * _US, 3)
+    end_us = round((start_s + dur_s) * _US, 3)
+    return start_us / _US, max(0.0, end_us - start_us) / _US
 
 
 class TraceValidationError(ValueError):
@@ -353,7 +370,11 @@ def validate_no_overlap(payload: dict, track_prefix: str = "") -> None:
             continue
         ordered = sorted(spans, key=lambda e: e["ts"])
         for a, b in zip(ordered, ordered[1:]):
-            if a["ts"] + a["dur"] > b["ts"] + 1e-9:
+            # exported values are 3-decimal µs, so a REAL overlap is >= 1e-3;
+            # the tolerance only needs to absorb float ulps (one ulp at
+            # hour-scale timestamps, ~1e7 µs, is already ~4e-9)
+            tol = max(1e-9, abs(b["ts"]) * 1e-12)
+            if a["ts"] + a["dur"] > b["ts"] + tol:
                 raise TraceValidationError(
                     f"track {track!r}: {a['name']!r} (ends {a['ts'] + a['dur']}) "
                     f"overlaps {b['name']!r} (starts {b['ts']})"

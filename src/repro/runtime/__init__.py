@@ -46,6 +46,16 @@ module                    role (paper anchor)
                           local ``PlanRuntime``, over in-process or TCP
                           transports (entry points: ``train_adaptive
                           --fabric N``, ``repro.launch.fabric_worker``).
+``repro.serve`` (sibling) the decision+execution stacks pointed at decode
+                          serving: continuous batching over fixed slots,
+                          the tuner re-deciding ``ScheduleSpec`` live under
+                          an SLO-weighted objective, and (optionally) real
+                          compiled prefill/decode programs through the
+                          *stateless* ``PlanRuntime`` mode
+                          (``optimizer=None`` + ``program_factory`` +
+                          ``run_program``) — same compile cache, same
+                          warm-switch path, no ``TrainState`` (entry point:
+                          ``python -m repro.launch.serve_adaptive``).
 ``repro.obs`` (sibling)   the observe half as a first-class layer: every
                           module above records into its deterministic trace
                           spans (Chrome/Perfetto export, predicted-vs-

@@ -180,6 +180,7 @@ class PlanRuntime:
         init_key: int = 0,
         obs: Observability | None = None,
         obs_track: str = "runtime",
+        program_factory=None,
     ) -> None:
         if backend not in ("reference", "spmd"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -195,25 +196,40 @@ class PlanRuntime:
         self.data_axis = data_axis
         self.telemetry = telemetry
         self._staged: dict[int, StagedModel] = {}
-        staged0 = self.staged_for(1)
-        params = staged0.init_all_stages(jax.random.PRNGKey(init_key))
-        self.state: TrainState = create_train_state(params, optimizer)
+        # program_factory overrides the training-step factory: the serving
+        # stack compiles grouped decode/prefill programs per plan through the
+        # same cache and warm-switch path.  With optimizer=None the runtime
+        # is *stateless* — it owns no TrainState (the serve engine owns its
+        # params/caches) and run_iteration is unavailable; use run_program.
+        self.program_factory = program_factory
+        if optimizer is None:
+            if program_factory is None:
+                raise ValueError(
+                    "optimizer=None (stateless serving mode) requires a "
+                    "program_factory"
+                )
+            self.state = None
+            self._flat_spec = None
+        else:
+            staged0 = self.staged_for(1)
+            params = staged0.init_all_stages(jax.random.PRNGKey(init_key))
+            self.state: TrainState = create_train_state(params, optimizer)
+            # layout specs are value-free, so the background compile thread
+            # can read them while the main thread trains
+            self._flat_spec = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state
+            )
+            if backend == "spmd":
+                # pin the owned state to the mesh layout every executable is
+                # AOT-compiled against: stage-stacked leaves shard over the
+                # stage axis, scalars replicate
+                self.state = jax.device_put(self.state, self._state_sharding(1))
         self.current_v = 1
-        # layout specs are value-free, so the background compile thread can
-        # read them while the main thread trains
-        self._flat_spec = jax.tree_util.tree_map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state
-        )
-        if backend == "spmd":
-            # pin the owned state to the mesh layout every executable is
-            # AOT-compiled against: stage-stacked leaves shard over the
-            # stage axis, scalars replicate
-            self.state = jax.device_put(self.state, self._state_sharding(1))
         # a fresh cache joins the shared registry (series scoped by track so
         # an in-process fleet's per-host stats stay per-host); a borrowed
         # cache keeps whatever registry its owner gave it
         self.cache = cache or CompiledStepCache(
-            self._program_for,
+            program_factory or self._program_for,
             metrics=obs.metrics if obs is not None else None,
             labels={"track": obs_track} if obs is not None else None,
         )
@@ -379,11 +395,13 @@ class PlanRuntime:
         entry = self.cache.get(table)
         t1 = time.perf_counter()
         v_new = table.plan.num_virtual
-        restacked = v_new != self.current_v
+        # stateless (serving) runtimes track the layout but have no owned
+        # state to re-stack — the engine's params are layout-independent
+        restacked = v_new != self.current_v and self.state is not None
         if restacked:
             prog = self._restack_program(self.current_v, v_new)
             self.state = jax.block_until_ready(prog(self.state))
-            self.current_v = v_new
+        self.current_v = v_new
         seconds = time.perf_counter() - t0
         event = SwitchEvent(
             iteration=len(self.iterations),
@@ -425,6 +443,10 @@ class PlanRuntime:
     def run_iteration(self, tokens, labels) -> IterationResult:
         """One training step of the current plan on ``[global_batch, T]``
         data (re-shaped to the plan's ``[M, b, T]`` micro-batch grid)."""
+        if self.state is None:
+            raise RuntimeError(
+                "stateless serving runtime owns no TrainState; use run_program"
+            )
         if self.current_table is None:
             raise RuntimeError("no plan dispatched; call switch_to first")
         plan = self.current_table.plan
@@ -473,6 +495,37 @@ class PlanRuntime:
                 source="engine",
             )
         return result
+
+    def run_program(self, *args, label: str = "serve"):
+        """Execute the current compiled program on explicit operands.
+
+        The serving execution path: programs built by ``program_factory``
+        (grouped decode ticks, fused prefill) carry their own state in their
+        operands, so the runtime only times them and keeps the observability
+        surface identical to training (span per execution on
+        ``{obs_track}/iterations``).  Returns ``(outputs, seconds)``."""
+        if self._compiled is None:
+            raise RuntimeError("no plan dispatched; call switch_to first")
+        plan = self.current_table.plan
+        sp = (
+            self.obs.trace.span(
+                f"{self.obs_track}/iterations",
+                f"{label} {plan.name}",
+                plan=plan.name,
+                label=label,
+            )
+            if self.obs is not None
+            else None
+        )
+        t0 = time.perf_counter()
+        out = self._compiled(*args)
+        out = jax.block_until_ready(out)
+        seconds = time.perf_counter() - t0
+        if self.obs is not None:
+            self.obs.trace.end_span(sp)
+            self._m_iters.inc(plan=plan.name)
+            self._m_iter_s.observe(seconds, plan=plan.name)
+        return out, seconds
 
     # -- inspection -----------------------------------------------------------
 

@@ -1,0 +1,50 @@
+"""repro.serve: adaptive pipeline-parallel decode serving.
+
+Serving is the extreme case of the paper's argument: per-token decode steps
+have tiny FLOP counts, so a preempted cross-stage link dominates the token
+latency, and the best (schedule kind, group depth k) changes with both the
+network regime AND the arrival pressure.  This package closes the adaptive
+loop for continuous-batching decode:
+
+=============  ==============================================================
+module         contents
+=============  ==============================================================
+``arrival``    :class:`Request`, :class:`ArrivalProcess` — seeded Poisson /
+               Markov-modulated bursty arrivals
+``batching``   :class:`RequestQueue`, :class:`ContinuousBatcher`,
+               :class:`InFlight` — admit/retire at tick boundaries over
+               fixed decode slots
+``slo``        :class:`SLOTracker` — TTFT/TPOT/token-latency histograms,
+               queue gauges, per-slot request-lifecycle trace spans
+``runtime``    :class:`ServeRuntime` — the simulated-time tick loop wiring
+               arrivals, the batcher, the tuner (with
+               :func:`make_slo_objective`), the telemetry bus and the SLO
+               tracker together
+``engine``     :class:`ServeEngine` — real compiled prefill/decode programs
+               behind the tick loop, per-plan via the stateless
+               :class:`~repro.runtime.executor.PlanRuntime` warm-switch path
+=============  ==============================================================
+
+Entry point: ``python -m repro.launch.serve_adaptive``.  See ``README.md``
+in this directory for the request lifecycle.
+"""
+
+from repro.serve.arrival import ArrivalProcess, Request
+from repro.serve.batching import ContinuousBatcher, InFlight, RequestQueue
+from repro.serve.engine import ServeEngine
+from repro.serve.runtime import ServeRuntime, ServeTick, make_slo_objective
+from repro.serve.slo import DEFAULT_LATENCY_BUCKETS, SLOTracker
+
+__all__ = [
+    "ArrivalProcess",
+    "Request",
+    "RequestQueue",
+    "ContinuousBatcher",
+    "InFlight",
+    "SLOTracker",
+    "DEFAULT_LATENCY_BUCKETS",
+    "ServeRuntime",
+    "ServeTick",
+    "make_slo_objective",
+    "ServeEngine",
+]

@@ -1,0 +1,175 @@
+"""ServeEngine: real compiled prefill/decode behind the serve tick loop.
+
+The simulated :class:`~repro.serve.runtime.ServeRuntime` prices every tick
+against the trace network; this engine makes the *tokens* real.  It owns the
+model params plus a slot-major decode state (per-slot KV/SSM cache rows,
+per-slot positions, per-slot last token) and runs two kinds of programs:
+
+* **grouped decode tick** — one compiled program per dispatched
+  :class:`~repro.core.schedule.TabularPlan`, built by the ``program_factory``
+  hook of a *stateless* :class:`~repro.runtime.executor.PlanRuntime`
+  (``optimizer=None``).  The program reshapes the ``max_slots`` slot axis
+  into the plan's ``[M, b]`` micro-batch grid and walks the groups with
+  ``lax.map`` — the executable genuinely depends on the plan, so the tuner's
+  live ``switch_to`` exercises the same ``CompiledStepCache`` warm-switch
+  path training uses.  Per-slot decode positions differ (continuous
+  batching), so the group step is a ``vmap`` of single-slot
+  :func:`repro.models.api.decode_fn` over cache rows and positions.
+* **fused prefill** — :func:`repro.models.api.prefill_with_cache` on a
+  batch-1 program per prompt length (compiled once per length), scattered
+  into the admitted slot's cache row.  Prefill is plan-independent: it runs
+  before the request joins the grouped grid.
+
+Decoding is greedy (temperature 0) so serving runs are reproducible
+token-for-token; emitted tokens accumulate in ``outputs[rid]``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.runtime.executor import PlanRuntime
+
+__all__ = ["ServeEngine"]
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        num_stages: int,
+        max_slots: int,
+        max_len: int,
+        init_key: int = 0,
+        obs=None,
+        track: str = "serve",
+    ) -> None:
+        if cfg.family in ("encdec", "vlm"):
+            raise NotImplementedError(f"serving does not support family {cfg.family!r}")
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.params = api.init_params(jax.random.PRNGKey(init_key), cfg)
+        # slot-major decode state: leaves [max_slots, <batch-1 cache row>...]
+        row = api.init_cache(cfg, 1, max_len)
+        self.kv = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((max_slots,) + x.shape, x.dtype), row
+        )
+        self.positions = jnp.zeros((max_slots,), jnp.int32)
+        self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self.outputs: dict[int, list[int]] = {}
+        self._slot_rid: list[int | None] = [None] * max_slots
+        # stateless runtime: no TrainState, programs come from our factory,
+        # but the compile cache / warm-switch machinery is the training one
+        self.runtime = PlanRuntime(
+            cfg,
+            num_stages,
+            optimizer=None,
+            global_batch=max_slots,
+            seq_len=max_len,
+            program_factory=self._program_for,
+            obs=obs,
+            obs_track=track,
+        )
+
+    # -- program factory (one executable per dispatched plan) ------------------
+
+    def _program_for(self, table):
+        plan = table.plan
+        M = plan.num_microbatches
+        if self.max_slots % M:
+            raise ValueError(
+                f"plan {plan.name} needs M={M} | max_slots={self.max_slots}"
+            )
+        b = self.max_slots // M
+        cfg = self.cfg
+
+        def single(params, cache, pos, tok):
+            logits, nc = api.decode_fn(params, cfg, cache, pos, {"tokens": tok})
+            return logits[:, -1, :], nc  # [1, V]
+
+        def step(params, kv, positions, tokens):
+            grid = lambda x: x.reshape((M, b) + x.shape[1:])  # noqa: E731
+            kv_g = jax.tree_util.tree_map(grid, kv)
+            pos_g = positions.reshape(M, b)
+            tok_g = tokens.reshape(M, b, 1, 1)  # per-slot decode_fn sees [1, 1]
+
+            def group(operand):
+                kv_i, pos_i, tok_i = operand
+                logits, nc = jax.vmap(single, in_axes=(None, 0, 0, 0))(
+                    params, kv_i, pos_i, tok_i
+                )
+                return nc, jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+
+            new_kv, new_tok = jax.lax.map(group, (kv_g, pos_g, tok_g))
+            flat = lambda x: x.reshape((self.max_slots,) + x.shape[2:])  # noqa: E731
+            return (
+                jax.tree_util.tree_map(flat, new_kv),
+                new_tok.reshape(self.max_slots, 1),
+            )
+
+        spec = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t
+        )
+        args = (spec(self.params), spec(self.kv), spec(self.positions), spec(self.tokens))
+        return jax.jit(step), args
+
+    # -- ServeRuntime hooks ----------------------------------------------------
+
+    def switch_to(self, table):
+        return self.runtime.switch_to(table)
+
+    @functools.lru_cache(maxsize=32)
+    def _prefill_program(self, prompt_len: int):
+        cfg, max_len = self.cfg, self.max_len
+
+        def prefill(params, tokens):
+            cache = api.init_cache(cfg, 1, max_len)
+            logits, cache = api.prefill_with_cache(params, cfg, cache, {"tokens": tokens})
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+
+        return jax.jit(prefill)
+
+    def prefill(self, admitted) -> None:
+        """Fused-prefill each admitted request's prompt into its slot row;
+        the prompt is a deterministic seeded token sequence per request."""
+        for inf in admitted:
+            req = inf.request
+            key = jax.random.PRNGKey(req.rid)
+            prompt = jax.random.randint(
+                key, (1, req.prompt_len), 0, self.cfg.vocab_size, jnp.int32
+            )
+            tok, row = self._prefill_program(req.prompt_len)(self.params, prompt)
+            s = inf.slot
+            self.kv = jax.tree_util.tree_map(
+                lambda full, r: full.at[s].set(r), self.kv, row
+            )
+            self.positions = self.positions.at[s].set(req.prompt_len)
+            self.tokens = self.tokens.at[s].set(tok)
+            self._slot_rid[s] = req.rid
+            self.outputs[req.rid] = [int(tok[0])]
+
+    def decode_tick(self, in_flight) -> None:
+        """One grouped decode step of the CURRENT plan over all slots (empty
+        slots compute padding, as a fixed-shape batch would)."""
+        (new_kv, new_tok), _seconds = self.runtime.run_program(
+            self.params, self.kv, self.positions, self.tokens, label="decode"
+        )
+        self.kv = new_kv
+        self.tokens = new_tok
+        occupied = jnp.zeros((self.max_slots,), bool)
+        for inf in in_flight:
+            occupied = occupied.at[inf.slot].set(True)
+            self.outputs[inf.request.rid].append(int(new_tok[inf.slot, 0]))
+        self.positions = jnp.where(occupied, self.positions + 1, self.positions)
+
+    def release(self, slots) -> None:
+        for s in slots:
+            self._slot_rid[s] = None
+            self.positions = self.positions.at[s].set(0)
+            self.tokens = self.tokens.at[s].set(0)
